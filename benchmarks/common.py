@@ -1,0 +1,99 @@
+"""Shared benchmark infrastructure: datasets, profilers, ground truth cache."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import FeatureRep, SearchSpace, build_priors
+from repro.traffic import (
+    FEATURE_NAMES, MINI_FEATURE_NAMES, TrafficProfiler, extract_features,
+    make_dataset,
+)
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+_CACHE = {}
+
+
+def iot_setup(n_flows=3000, max_pkts=128, features="mini", model="rf-fast",
+              cost_metric="exec_time", seed=0):
+    key = ("iot", n_flows, max_pkts, features, model, cost_metric, seed)
+    if key not in _CACHE:
+        ds = make_dataset("iot-class", n_flows=n_flows, max_pkts=max_pkts,
+                          seed=seed)
+        names = MINI_FEATURE_NAMES if features == "mini" else FEATURE_NAMES
+        prof = TrafficProfiler(ds, names, model=model,
+                               cost_metric=cost_metric, cost_mode="modeled",
+                               seed=seed)
+        _CACHE[key] = (ds, prof, names)
+    return _CACHE[key]
+
+
+def app_setup(n_flows=3000, max_pkts=64, model="tree",
+              cost_metric="exec_time", seed=1):
+    key = ("app", n_flows, max_pkts, model, cost_metric, seed)
+    if key not in _CACHE:
+        ds = make_dataset("app-class", n_flows=n_flows, max_pkts=max_pkts,
+                          seed=seed)
+        prof = TrafficProfiler(ds, FEATURE_NAMES, model=model,
+                               cost_metric=cost_metric, cost_mode="modeled",
+                               seed=seed)
+        _CACHE[key] = (ds, prof, FEATURE_NAMES)
+    return _CACHE[key]
+
+
+def priors_for(space: SearchSpace, ds, prof, delta=0.4):
+    X = prof.matrices_at_depth(space.max_depth)[0]
+    idx = [prof.feature_names.index(f) for f in space.feature_names]
+    return build_priors(space, X[:, idx], prof.train_ds.label, delta=delta)
+
+
+def ground_truth(space: SearchSpace, prof, depths=None, cache_name=None):
+    """Exhaustively evaluate the space; returns (reps, Y (n,2) [cost, -perf])."""
+    cache_file = RESULTS / f"gt_{cache_name}.json" if cache_name else None
+    if cache_file and cache_file.exists():
+        data = json.loads(cache_file.read_text())
+        reps = [FeatureRep(tuple(r["f"]), r["n"]) for r in data["reps"]]
+        return reps, np.array(data["Y"])
+    reps, Y = [], []
+    t0 = time.time()
+    for x in space.enumerate_all():
+        if depths is not None and x.depth not in depths:
+            continue
+        r = prof(x)
+        reps.append(x)
+        Y.append([r.cost, -r.perf])
+    Y = np.array(Y)
+    if cache_file:
+        cache_file.write_text(json.dumps({
+            "reps": [{"f": list(x.features), "n": x.depth} for x in reps],
+            "Y": Y.tolist(),
+        }))
+    print(f"# ground truth: {len(reps)} cells in {time.time()-t0:.0f}s")
+    return reps, Y
+
+
+def cached_profiler(prof, reps, Y):
+    """Search algorithms query the exhaustive cache (the paper's ground-truth
+    protocol: all 3,200 pipelines were measured once, up front)."""
+    table = {x.key(): (float(c), float(-negp)) for x, (c, negp) in zip(reps, Y)}
+
+    def profile(x):
+        return table[x.key()]
+
+    return profile
+
+
+def emit(rows, header, name):
+    """Print a small CSV block and save it under results/."""
+    path = RESULTS / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(v) for v in r) + "\n")
+    print(f"# wrote {path} ({len(rows)} rows)")
+    return path

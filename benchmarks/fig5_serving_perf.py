@@ -1,0 +1,82 @@
+"""Fig. 5 — CATO vs ALL / RFE10 / MI10 at fixed depths {10, 50, all}.
+
+iot-class: end-to-end inference latency (5a) — latency includes packet
+inter-arrival waiting, so depth dominates and CATO's shallow Pareto points
+win by orders of magnitude. app-class: latency (5b) and zero-loss
+throughput (5c).
+"""
+import numpy as np
+
+from repro.core import CatoOptimizer, FeatureRep, SearchSpace
+
+from .common import app_setup, emit, iot_setup, priors_for
+
+
+def _baselines(space, prof, depths):
+    from repro.core.baselines import select_all, select_mi_topk, select_rfe_topk
+
+    Xfull = prof.matrices_at_depth(space.max_depth)[0]
+    y = prof.train_ds.label
+    out = {}
+    for n in depths:
+        Xd = prof.matrices_at_depth(n)[0]
+        out[f"ALL@{n}"] = select_all(space, n)
+        out[f"MI10@{n}"] = select_mi_topk(space, n, Xd, y, k=10)
+        out[f"RFE10@{n}"] = select_rfe_topk(space, n, Xd, y, k=10)
+    return out
+
+
+def run(use_case="iot", cost_metric="latency", iters=40, verbose=True):
+    if use_case == "iot":
+        ds, prof, names = iot_setup(features="full", model="rf-fast",
+                                    cost_metric=cost_metric)
+    else:
+        ds, prof, names = app_setup(model="tree-fast", cost_metric=cost_metric)
+    space = SearchSpace(names, max_depth=50)
+    pri = priors_for(space, ds, prof)
+
+    rows = []
+    res = CatoOptimizer(space, prof, pri, seed=0).run(iters)
+    for o in res.pareto_observations():
+        rows.append(("CATO", o.x.depth, len(o.x.features),
+                     round(o.perf, 4), float(o.cost)))
+    depths = (10, 50, ds.max_pkts)  # max_pkts stands in for "entire connection"
+    for label, rep in _baselines(space_cap(space, ds), prof, depths).items():
+        r = prof(rep)
+        rows.append((label, rep.depth, len(rep.features),
+                     round(r.perf, 4), float(r.cost)))
+        if verbose:
+            print(f"fig5 {use_case} {label:9s} f1={r.perf:.3f} cost={r.cost:.4g}")
+    if verbose:
+        for o in res.pareto_observations():
+            print(f"fig5 {use_case} CATO d={o.x.depth:3d} |F|={len(o.x.features)} "
+                  f"f1={o.perf:.3f} cost={o.cost:.4g}")
+    emit(rows, ("method", "depth", "n_features", "f1", "cost"),
+         f"fig5_{use_case}_{cost_metric}")
+    return rows
+
+
+def space_cap(space, ds):
+    return SearchSpace(space.feature_names, max_depth=ds.max_pkts)
+
+
+def summarize(rows):
+    """Headline ratios: latency/throughput of CATO's F1-matched point."""
+    cato = [(r[4], r[3]) for r in rows if r[0] == "CATO"]
+    base = [(r[0], r[4], r[3]) for r in rows if r[0] != "CATO"]
+    out = {}
+    for label, cost, f1 in base:
+        # best CATO point with >= f1 - 0.01
+        elig = [c for c, p in cato if p >= f1 - 0.01]
+        if elig:
+            out[label] = cost / min(elig)
+    return out
+
+
+if __name__ == "__main__":
+    rows = run("iot", "latency")
+    print("iot latency speedups:", summarize(rows))
+    rows = run("app", "latency")
+    print("app latency speedups:", summarize(rows))
+    rows = run("app", "throughput", iters=40)
+    print("app throughput gains:", {k: 1 / v for k, v in summarize(rows).items()})

@@ -1,0 +1,52 @@
+"""Fig. 7 — convergence speed to the true Pareto front (iterations to HVI
+thresholds, mean over seeds; CATO vs CATO-BASE vs SA vs random)."""
+import numpy as np
+
+from repro.core import CatoOptimizer, SearchSpace, hvi_ratio
+from repro.core.baselines import run_random_search, run_simulated_annealing
+
+from .common import cached_profiler, emit, ground_truth, iot_setup, priors_for
+
+
+def _iters_to(Yt, observations, threshold):
+    Y = []
+    for i, o in enumerate(observations):
+        Y.append(o.objectives)
+        if hvi_ratio(np.array(Y), Yt) >= threshold:
+            return i + 1
+    return None
+
+
+def run(budget=300, seeds=(0, 1, 2), threshold=0.99, verbose=True):
+    ds, prof, names = iot_setup(features="mini", model="rf-fast")
+    space = SearchSpace(names, max_depth=50)
+    reps, Yt = ground_truth(space, prof, cache_name="iot_mini_50")
+    cached = cached_profiler(prof, reps, Yt)
+    pri = priors_for(space, ds, prof)
+
+    algos = {
+        "CATO": lambda s: CatoOptimizer(space, cached, pri, seed=s).run(budget),
+        "CATO-BASE": lambda s: CatoOptimizer(space, cached, None, seed=s).run(budget),
+        "SIMANNEAL": lambda s: run_simulated_annealing(space, cached, budget, seed=s),
+        "RANDSEARCH": lambda s: run_random_search(space, cached, budget, seed=s),
+    }
+    rows = []
+    for name, fn in algos.items():
+        its = []
+        for s in seeds:
+            res = fn(s)
+            it = _iters_to(Yt, res.observations, threshold)
+            its.append(it if it is not None else budget * 2)  # censored
+        mean = float(np.mean(its))
+        rows.append((name, threshold, mean, min(its), max(its)))
+        if verbose:
+            print(f"fig7 {name:11s} iters-to-{threshold} HVI: "
+                  f"mean={mean:.0f} range=[{min(its)},{max(its)}]"
+                  + (" (censored)" if max(its) >= budget * 2 else ""))
+    emit(rows, ("method", "threshold", "mean_iters", "min", "max"),
+         "fig7_convergence")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

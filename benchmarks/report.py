@@ -1,0 +1,72 @@
+"""Assemble EXPERIMENTS.md sections from results/ JSON + CSV artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for p in sorted(RESULTS.glob("dryrun/*__base.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            m = r["main"]["memory"]
+            args_gb = m.get("argument_size_in_bytes", 0) / 2 ** 30
+            temp_gb = m.get("temp_size_in_bytes", 0) / 2 ** 30
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+                f"{args_gb:.2f} | {temp_gb:.2f} | "
+                f"{r['main']['collectives']['count']} | "
+                f"{r['main']['compile_s']:.0f}s |"
+            )
+        elif r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - | "
+                f"{r['skip_reason'][:60]} |"
+            )
+        else:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | "
+                f"{r.get('error','')[:60]} |"
+            )
+    head = ("| arch | shape | mesh | mode | args GiB/dev | temps GiB/dev | "
+            "coll ops (scanned HLO) | compile |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(tag="base") -> str:
+    p = RESULTS / f"roofline_{tag}.json"
+    rows = json.loads(p.read_text())
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful ratio | roofline % | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | skipped | - | - | "
+                f"{r.get('skip_reason','')[:60]} |"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']*100:.1f} | {r['fix'][:60]} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if what in ("dryrun", "all"):
+        print("## §Dry-run\n")
+        print(dryrun_table())
+    if what in ("roofline", "all"):
+        print("\n## §Roofline\n")
+        print(roofline_table())

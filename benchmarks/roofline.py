@@ -1,0 +1,161 @@
+"""§Roofline — derive compute/memory/collective terms per (arch × shape).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), computes the
+three roofline terms on the single-pod mesh per the hardware model:
+
+    compute    = HLO_FLOPs_per_chip / 197e12        (bf16 peak per chip)
+    memory     = HLO_bytes_per_chip / 819e9         (HBM bandwidth)
+    collective = HLO_collective_bytes_per_chip / 50e9 (per-chip ICI link)
+
+HLO numbers come from the probe-extrapolated per-device HLO analysis
+(exact dot FLOPs; byte traffic under the fusion model; collective payloads
+with all-reduce 2x and ring (n-1)/n). CAVEATS recorded in EXPERIMENTS.md:
+XLA-CPU promotes bf16 arithmetic to f32, so byte/collective terms are ~2x
+upper bounds for tensors that are bf16 on TPU; sLSTM's in-loop recurrence
+is analytically corrected (+2*T*d*4d per sLSTM layer fwd, x3 with backward).
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (prefill,
+decode) plus the quadratic attention term for attention architectures.
+"""
+import json
+import math
+import pathlib
+
+from repro import configs
+from repro.models.config import SHAPES
+
+PEAK = 197e12       # bf16 FLOP/s per chip
+HBM = 819e9         # bytes/s per chip
+LINK = 50e9         # bytes/s per chip ICI (1-link conservative; /4 if all used)
+CHIPS = 256
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful-FLOPs for the whole step (global, fwd+bwd for train)."""
+    n = cfg.active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        k = 6.0
+        attn_mult = 3.0  # fwd + bwd(2x)
+        ctx = shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        k = 2.0
+        attn_mult = 1.0
+        ctx = shape.seq_len
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        k = 2.0
+        attn_mult = 1.0
+        ctx = shape.seq_len  # attends over the whole cache
+    total = k * n * tokens
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        # QK^T + PV: 2 matmuls, causal ~half for self-attn train/prefill
+        L = cfg.n_layers + cfg.encoder_layers
+        causal = 0.5 if shape.kind != "decode" else 1.0
+        attn = attn_mult * 2 * 2 * tokens * ctx * causal * cfg.n_heads * cfg.hd * L
+        total += attn
+    if cfg.family == "hybrid":
+        n_attn = math.ceil(cfg.n_layers / cfg.shared_attn_every)
+        causal = 0.5 if shape.kind != "decode" else 1.0
+        total += attn_mult * 4 * tokens * ctx * causal * cfg.n_heads * cfg.hd * n_attn
+    return total
+
+
+def slstm_correction(cfg, shape) -> float:
+    """In-loop recurrent matmul not visible to the HLO dot counter."""
+    if cfg.family != "ssm":
+        return 0.0
+    n_slstm = cfg.n_layers // 2
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * n_slstm * tokens * 2 * cfg.d_model * 4 * cfg.d_model / CHIPS
+
+
+def load_cells(tag="base", mesh="pod"):
+    cells = {}
+    for p in sorted(RESULTS.glob(f"dryrun/*__{mesh}__{tag}.json")):
+        r = json.loads(p.read_text())
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def roofline_row(rec) -> dict:
+    cfg = configs.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    ext = rec.get("extrapolated")
+    if rec.get("status") == "ok" and not ext:
+        # no probes: the scanned main compile carries transitive
+        # trip-count multipliers (validated within 1-4% of probes)
+        ext = rec.get("main")
+    if rec.get("status") != "ok" or not ext:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("status"),
+                "skip_reason": rec.get("skip_reason", rec.get("error", ""))[:90]}
+    fl = ext["flops"] + slstm_correction(cfg, shape)     # per device
+    by = ext.get("bytes_hbm", ext["bytes_accessed"])
+    coll = ext["collectives"]
+    coll_b = sum(coll[k] for k in
+                 ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute"))
+    t_comp = fl / PEAK
+    t_mem = by / HBM
+    t_coll = coll_b / LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    ratio = mf / (fl * CHIPS) if fl > 0 else float("nan")
+    mfu_at_bound = (mf / CHIPS / PEAK) / bound if bound > 0 else float("nan")
+    fixes = {
+        "compute": "raise useful-FLOP fraction: trim remat policy / fuse "
+                   "elementwise into matmuls",
+        "memory": "keep activations bf16 end-to-end, fuse attention "
+                  "(Pallas flash kernel), larger per-chip tiles",
+        "collective": "reshard to cut all-gathers (sequence-parallel norms, "
+                      "reduce-scatter instead of all-reduce), overlap with "
+                      "compute",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mode": rec.get("mode"),
+        "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": fl * CHIPS,
+        "useful_ratio": ratio,
+        "roofline_fraction": mfu_at_bound,
+        "bytes_per_dev": rec["main"]["memory"].get("temp_size_in_bytes", 0)
+        + rec["main"]["memory"].get("argument_size_in_bytes", 0),
+        "fix": fixes[dom],
+    }
+
+
+def run(tag="base", verbose=True):
+    cells = load_cells(tag)
+    rows = []
+    for (arch, shape), rec in sorted(cells.items()):
+        row = roofline_row(rec)
+        rows.append(row)
+        if verbose and row.get("status") == "ok":
+            print(f"roofline {arch:18s} {shape:12s} "
+                  f"comp={row['t_compute_s']*1e3:9.2f}ms "
+                  f"mem={row['t_memory_s']*1e3:9.2f}ms "
+                  f"coll={row['t_collective_s']*1e3:9.2f}ms "
+                  f"dom={row['dominant']:10s} "
+                  f"useful={row['useful_ratio']:.2f} "
+                  f"roofline={row['roofline_fraction']*100:5.1f}%")
+        elif verbose:
+            print(f"roofline {arch:18s} {shape:12s} -- {row.get('status')}: "
+                  f"{row.get('skip_reason','')[:70]}")
+    out = RESULTS / f"roofline_{tag}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"# wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(tag=sys.argv[1] if len(sys.argv) > 1 else "base")

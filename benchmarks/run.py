@@ -1,0 +1,63 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per artifact plus summary rows.
+Full experiments: run each module directly (python -m benchmarks.fig6_...).
+"""
+import time
+
+
+def main() -> None:
+    rows = []
+
+    def timed(name, fn, derived=""):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((name, us, derived(out) if callable(derived) else derived))
+        return out
+
+    from . import bench_kernels
+    for name, us in bench_kernels.run(verbose=False):
+        rows.append((f"kernel/{name}", us, "interpret-mode us/call"))
+
+    from . import fig2_depth_tradeoffs
+    timed("fig2_depth_tradeoffs",
+          lambda: fig2_depth_tradeoffs.run(depths=(1, 3, 5, 8, 15, 30), verbose=False),
+          lambda o: f"ranking_flips={o['ranking_flips']}")
+
+    from . import fig6_pareto_quality
+    timed("fig6_pareto_quality", lambda: fig6_pareto_quality.run(verbose=False),
+          lambda rows_: ";".join(f"{r[0]}={r[2]}" for r in rows_))
+
+    from . import fig8_profiler_ablation
+    timed("fig8_profiler_ablation",
+          lambda: fig8_profiler_ablation.run(iters=25, verbose=False),
+          lambda rows_: ";".join(f"{r[0]}={r[2]}" for r in rows_))
+
+    from . import table4_wallclock
+    timed("table4_wallclock", lambda: table4_wallclock.run(iters=8, verbose=False),
+          lambda rows_: f"total_per_iter={rows_[-2][1]}s")
+
+    # roofline summary if the dry-run matrix has results
+    try:
+        from . import roofline
+        rl = roofline.run(verbose=False)
+        ok = [r for r in rl if r.get("status") == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline_fraction"])
+            best = max(ok, key=lambda r: r["roofline_fraction"])
+            rows.append(("roofline_cells", len(ok) * 1.0,
+                         f"best={best['arch']}/{best['shape']}"
+                         f"@{best['roofline_fraction']*100:.0f}%;"
+                         f"worst={worst['arch']}/{worst['shape']}"
+                         f"@{worst['roofline_fraction']*100:.0f}%"))
+    except Exception as e:  # dry-run not complete yet
+        rows.append(("roofline_cells", 0.0, f"pending: {e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 2 — robustness to the maximum connection depth N (67 features)."""
+from repro.core import CatoOptimizer, SearchSpace
+
+from .common import emit, iot_setup, priors_for
+
+
+def run(max_depths=(3, 5, 10, 25, 50, 100), iters=35, verbose=True):
+    ds, prof, names = iot_setup(features="full", model="rf-fast")
+    rows = []
+    for N in max_depths:
+        N_eff = min(N, ds.max_pkts)
+        space = SearchSpace(names, max_depth=N_eff)
+        pri = priors_for(space, ds, prof)
+        res = CatoOptimizer(space, prof, pri, seed=0).run(iters)
+        best_f1 = res.best_by_perf()
+        best_cost = res.best_by_cost()
+        rows.append((N, best_f1.x.depth, round(best_f1.perf, 3),
+                     round(best_f1.cost, 3), best_cost.x.depth,
+                     round(best_cost.perf, 3), round(best_cost.cost, 3)))
+        if verbose:
+            print(f"table2 N={N:4d}: bestF1 n={best_f1.x.depth} "
+                  f"f1={best_f1.perf:.3f} t={best_f1.cost:.2f}us | "
+                  f"minCost n={best_cost.x.depth} f1={best_cost.perf:.3f} "
+                  f"t={best_cost.cost:.2f}us")
+    emit(rows, ("max_depth", "n_bestf1", "f1_best", "t_bestf1",
+                "n_mincost", "f1_mincost", "t_mincost"), "table2_max_depth")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

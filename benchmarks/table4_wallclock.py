@@ -1,0 +1,40 @@
+"""Table 4 — optimization wall-clock decomposition (measured cost mode)."""
+import time
+
+from repro.core import CatoOptimizer, SearchSpace
+from repro.traffic import TrafficProfiler
+
+from .common import emit, iot_setup, priors_for
+
+
+def run(iters=15, verbose=True):
+    ds, _, names = iot_setup(features="mini")
+    prof = TrafficProfiler(ds, names, model="rf-fast",
+                           cost_metric="exec_time", cost_mode="measured",
+                           seed=0, cache=False)
+    space = SearchSpace(names, max_depth=50)
+    pri = priors_for(space, ds, prof)
+
+    t0 = time.perf_counter()
+    opt = CatoOptimizer(space, prof, pri, seed=0)
+    res = opt.run(iters)
+    total = time.perf_counter() - t0
+    w = prof.wallclock
+    bo_sample = total - sum(w.values())
+    rows = [
+        ("preprocessing+BO sample", round(bo_sample / iters, 3)),
+        ("pipeline generation", round(w["pipeline_gen"] / iters, 3)),
+        ("measure perf(x) [train+eval]", round(w["train_perf"] / iters, 3)),
+        ("measure cost(x)", round(w["measure_cost"] / iters, 3)),
+        ("TOTAL per iteration", round(total / iters, 3)),
+        ("TOTAL elapsed", round(total, 1)),
+    ]
+    if verbose:
+        for k, v in rows:
+            print(f"table4 {k:32s} {v:>8}s")
+    emit(rows, ("stage", "seconds"), "table4_wallclock")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Train a reduced qwen3 config end-to-end on CPU with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        losses = train_main([
+            "--arch", "qwen3-8b", "--reduced", "--steps", "40",
+            "--batch", "8", "--seq", "64", "--lr", "3e-3",
+            "--ckpt-dir", d, "--ckpt-every", "20",
+        ])
+        assert losses[-1] < losses[0], "loss should decrease"
+        print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""CATO core: multi-objective Bayesian optimization of serving pipelines.
+
+The paper's primary contribution — an Optimizer (multi-objective BO with
+MI-based dimensionality reduction and πBO prior injection) plus a Profiler
+contract (measure, don't model). The traffic-analysis Profiler lives in
+`repro.traffic.profiler`; the LM serving-pipeline tuner in `repro.core.tuner`
+reuses the same Optimizer against the dry-run roofline cost model.
+"""
+from .search_space import FeatureRep, SearchSpace
+from .optimizer import CatoOptimizer, CatoResult, Observation
+from .priors import CatoPriors, build_priors
+from .pareto import hvi_ratio, hypervolume_2d, pareto_front, pareto_mask
+from .surrogate import RFSurrogate
+from .forest import DenseForest, train_forest, train_tree
+
+__all__ = [
+    "FeatureRep",
+    "SearchSpace",
+    "CatoOptimizer",
+    "CatoResult",
+    "Observation",
+    "CatoPriors",
+    "build_priors",
+    "hvi_ratio",
+    "hypervolume_2d",
+    "pareto_front",
+    "pareto_mask",
+    "RFSurrogate",
+    "DenseForest",
+    "train_forest",
+    "train_tree",
+]

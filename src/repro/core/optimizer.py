@@ -1,0 +1,204 @@
+"""The CATO Optimizer: multi-objective BO over feature representations.
+
+Loop (paper §3.3 + Fig. 3):
+  1. preprocessing — MI dimensionality reduction + automatic prior build
+     (done by the caller via `build_priors`; pass priors=None for CATO-BASE);
+  2. init — `n_init` points sampled from the priors (random but
+     prior-weighted, §5.5);
+  3. iterate — fit RF surrogate on observations, draw a candidate pool
+     (prior samples + uniform samples + mutations of incumbent Pareto
+     points), score with MC-EHVI, inject πBO prior weight, evaluate the
+     argmax with the *real* Profiler, update observations.
+
+The Profiler is any callable ``profile(x) -> (cost, perf)`` (or a
+``ProfileResult``); both objectives are minimized internally as
+``(cost, -perf)``.
+
+The optimizer is space-generic: any object implementing the `SearchSpace`
+protocol (encode / sample_uniform / sample_from_priors / mutate) works —
+`repro.core.tuner` reuses it for LM serving-pipeline configuration search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from .acquisition import apply_pibo, ehvi, scalarized_ei
+from .pareto import normalize_objectives, pareto_mask
+from .priors import CatoPriors
+from .search_space import FeatureRep, SearchSpace
+from .surrogate import RFSurrogate
+
+__all__ = ["Observation", "CatoResult", "CatoOptimizer"]
+
+
+@dataclasses.dataclass
+class Observation:
+    x: Any                 # FeatureRep (or tuner config)
+    cost: float
+    perf: float
+    aux: dict = dataclasses.field(default_factory=dict)
+    iteration: int = -1
+    elapsed_s: float = 0.0
+
+    @property
+    def objectives(self) -> tuple[float, float]:
+        """(cost, -perf) — both minimized."""
+        return (self.cost, -self.perf)
+
+
+@dataclasses.dataclass
+class CatoResult:
+    observations: list[Observation]
+    space: Any
+
+    def objective_matrix(self) -> np.ndarray:
+        return np.array([o.objectives for o in self.observations], dtype=np.float64)
+
+    def pareto_observations(self) -> list[Observation]:
+        if not self.observations:
+            return []
+        Y = self.objective_matrix()
+        mask = pareto_mask(Y)
+        obs = [o for o, m in zip(self.observations, mask) if m]
+        return sorted(obs, key=lambda o: o.cost)
+
+    def pareto_points(self) -> np.ndarray:
+        """(k, 2) array of (cost, perf) on the estimated front."""
+        return np.array(
+            [(o.cost, o.perf) for o in self.pareto_observations()], dtype=np.float64
+        )
+
+    def best_by_perf(self) -> Observation:
+        return max(self.observations, key=lambda o: o.perf)
+
+    def best_by_cost(self) -> Observation:
+        return min(self.observations, key=lambda o: o.cost)
+
+
+class CatoOptimizer:
+    def __init__(
+        self,
+        space: SearchSpace,
+        profiler: Callable[[Any], tuple[float, float] | Any],
+        priors: Optional[CatoPriors] = None,
+        *,
+        n_init: int = 3,
+        candidate_pool: int = 512,
+        surrogate: Optional[RFSurrogate] = None,
+        pibo_beta: float = 3.0,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.profiler = profiler
+        self.priors = priors
+        self.n_init = n_init
+        self.candidate_pool = candidate_pool
+        self.surrogate = surrogate or RFSurrogate(seed=seed)
+        self.pibo_beta = pibo_beta
+        self.rng = np.random.default_rng(seed)
+        self.observations: list[Observation] = []
+        self._seen: set = set()
+
+    # -- evaluation ----------------------------------------------------------
+    def _evaluate(self, x: Any, iteration: int) -> Observation:
+        t0 = time.perf_counter()
+        res = self.profiler(x)
+        dt = time.perf_counter() - t0
+        if isinstance(res, Observation):
+            res.x, res.iteration, res.elapsed_s = x, iteration, dt
+            obs = res
+        elif hasattr(res, "cost") and hasattr(res, "perf"):
+            obs = Observation(
+                x, float(res.cost), float(res.perf),
+                aux=dict(getattr(res, "aux", {})), iteration=iteration, elapsed_s=dt,
+            )
+        else:
+            cost, perf = res
+            obs = Observation(x, float(cost), float(perf), iteration=iteration, elapsed_s=dt)
+        self.observations.append(obs)
+        self._seen.add(self._key(x))
+        return obs
+
+    @staticmethod
+    def _key(x: Any):
+        return x.key() if hasattr(x, "key") else x
+
+    # -- candidate generation --------------------------------------------------
+    def _candidates(self, n: int) -> list[Any]:
+        cands: list[Any] = []
+        if self.priors is not None and hasattr(self.space, "sample_from_priors"):
+            cands += self.space.sample_from_priors(
+                self.rng, int(n * 0.6), self.priors.feature_probs, self.priors.depth_pmf
+            )
+        cands += self.space.sample_uniform(self.rng, n - len(cands))
+        # exploit: mutate incumbent Pareto points
+        if self.observations:
+            Y = np.array([o.objectives for o in self.observations])
+            inc = [o.x for o, m in zip(self.observations, pareto_mask(Y)) if m]
+            for x in inc:
+                for _ in range(4):
+                    cands.append(self.space.mutate(self.rng, x))
+        # drop already-evaluated
+        fresh, seen = [], set()
+        for c in cands:
+            k = self._key(c)
+            if k in self._seen or k in seen:
+                continue
+            seen.add(k)
+            fresh.append(c)
+        return fresh
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, n_iterations: int = 50, verbose: bool = False) -> CatoResult:
+        # initialization: random but prior-weighted (paper §5.5)
+        n_init = min(self.n_init, n_iterations)
+        if self.priors is not None and hasattr(self.space, "sample_from_priors"):
+            init = self.space.sample_from_priors(
+                self.rng, n_init, self.priors.feature_probs, self.priors.depth_pmf
+            )
+        else:
+            init = self.space.sample_uniform(self.rng, n_init)
+        for i, x in enumerate(init):
+            self._evaluate(x, i)
+
+        for it in range(len(self.observations), n_iterations):
+            x = self._propose(it)
+            obs = self._evaluate(x, it)
+            if verbose:
+                print(
+                    f"[cato] iter {it}: cost={obs.cost:.6g} perf={obs.perf:.4f} x={x}"
+                )
+        return CatoResult(self.observations, self.space)
+
+    def _propose(self, iteration: int) -> Any:
+        cands = self._candidates(self.candidate_pool)
+        if not cands:
+            return self.space.sample_uniform(self.rng, 1)[0]
+        Y = np.array([o.objectives for o in self.observations], dtype=np.float64)
+        Yn, lo, hi = normalize_objectives(Y)
+        X_obs = np.stack([self.space.encode(o.x) for o in self.observations])
+        try:
+            self.surrogate.fit(X_obs, Yn)
+        except Exception:
+            return cands[int(self.rng.integers(len(cands)))]
+        X_cand = np.stack([self.space.encode(c) for c in cands])
+        post = self.surrogate.posterior_samples(X_cand)  # (T, M, 2)
+        front = Yn[pareto_mask(Yn)]
+        # alternate EHVI (front-global) with random-scalarization EI
+        # (front-local coverage) — HyperMapper-style multi-objective mix
+        if iteration % 2 == 0:
+            acq = ehvi(post, front)
+        else:
+            # bathtub-distributed weights: favors the front's extremes
+            # (where Fig. 6 shows CATO's edge) while covering the middle
+            lam = float(self.rng.beta(0.3, 0.3))
+            acq = scalarized_ei(post, Yn, lam)
+        if self.priors is not None:
+            pl = getattr(self.priors, "pi_log_clipped", self.priors.pi_log)
+            lp = np.array([pl(self.space, c) for c in cands])
+            acq = apply_pibo(acq, lp, iteration, self.pibo_beta)
+        return cands[int(np.argmax(acq))]

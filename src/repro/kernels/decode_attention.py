@@ -1,0 +1,109 @@
+"""Single-token GQA decode attention over a paged-dense KV cache (Pallas).
+
+One new query token per sequence attends to a (B, S, Hkv, D) cache with
+per-sequence valid lengths. The grid walks (batch, kv_head, kv_block); the
+g = Hq/Hkv query heads of a group are processed together as a (g, D) tile —
+they share the same cache block, so the cache is streamed HBM→VMEM exactly
+once per group (the GQA bandwidth win; decode is memory-bound, see
+EXPERIMENTS.md §Roofline).
+
+Lengths arrive as a (B, 1) int32 array; blocks past a sequence's length are
+masked (and contribute nothing to the online softmax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _dec_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, scale: float, bs: int,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+
+    @pl.when(ik * bs < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (g, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (g, bs)
+        kpos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel_call(
+    q: jax.Array,        # (B, Hq, D)
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+
+    q4 = q.reshape(B, Hkv, g, D)
+    lengths2 = lengths.reshape(B, 1).astype(jnp.int32)
+    grid = (B, Hkv, S // bs)
+    kern = functools.partial(_dec_kernel, scale=scale, bs=bs)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, g, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths2, q4, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

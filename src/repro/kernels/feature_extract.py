@@ -1,0 +1,58 @@
+"""Segmented flow-statistics Pallas kernel — the feature-extraction hot path.
+
+The paper's per-packet Rust accumulator loop becomes, on TPU, one pass of
+masked reductions over a dense (flows × packets) tile resident in VMEM
+(DESIGN.md §3): count / sum / sum-of-squares / min / max per flow in a
+single kernel, from which mean, std and load are derived for free at
+extract() time — the kernel-level expression of the paper's shared-operation
+argument (one traversal serves every accumulator family).
+
+Grid tiles the flow axis; each step reduces a (bn, P) tile to (bn, 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flow_stats_kernel_call"]
+
+_BIG = 3.4e38
+
+
+def _stats_kernel(v_ref, m_ref, o_ref):
+    v = v_ref[...]                       # (bn, P) float32
+    m = m_ref[...] != 0                  # (bn, P) bool
+    mf = m.astype(jnp.float32)
+    cnt = mf.sum(axis=1)
+    s = (v * mf).sum(axis=1)
+    sq = (v * v * mf).sum(axis=1)
+    mn = jnp.min(jnp.where(m, v, _BIG), axis=1)
+    mx = jnp.max(jnp.where(m, v, -_BIG), axis=1)
+    has = cnt > 0
+    mn = jnp.where(has, mn, 0.0)
+    mx = jnp.where(has, mx, 0.0)
+    o_ref[...] = jnp.stack([cnt, s, sq, mn, mx], axis=1)
+
+
+def flow_stats_kernel_call(
+    values: jax.Array,  # (N, P) float32
+    mask: jax.Array,    # (N, P) bool/int
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    N, P = values.shape
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, P), lambda i: (i, 0)),
+            pl.BlockSpec((bn, P), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 5), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 5), jnp.float32),
+        interpret=interpret,
+    )(values.astype(jnp.float32), mask.astype(jnp.int32))

@@ -1,0 +1,122 @@
+"""FlashAttention-style fused attention Pallas kernel (TPU target).
+
+Online-softmax attention with GQA head grouping, tiled for VMEM:
+the grid walks (batch, q_head, q_block, kv_block) with the kv axis
+innermost; running max / denominator / accumulator live in VMEM scratch.
+Block sizes default to MXU-aligned (128) multiples. Causal blocks that are
+entirely masked are skipped (`pl.when`), so the causal prefill does half
+the work — on hardware this is the difference between 2·T²·D and T²·D
+useful FLOPs.
+
+Validated against `ref.flash_attention_ref` in interpret mode (CPU);
+the TPU lowering is exercised by the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, bq: int, bk: int, tq: int, tk: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal offset: query global position iq*bq + r maps to key limit
+    # (tk - tq) + global q position (supports tq != tk for chunked prefill)
+    offset = tk - tq
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos + offset, s, _NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks that lie entirely above the causal diagonal
+        first_q = iq * bq
+        first_k = ik * bk
+        pl.when(first_k <= first_q + offset + (bq - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(
+    q: jax.Array,  # (B, Hq, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, bq, Tk, bk)
+
+    grid = (B, Hq, Tq // bq, Tk // bk)
+    kern = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, bq=bq, bk=bk, tq=Tq, tk=Tk
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

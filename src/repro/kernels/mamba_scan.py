@@ -1,0 +1,108 @@
+"""Chunked Mamba-2 / SSD selective-scan Pallas kernel.
+
+The GPU Mamba kernel is a warp-level sequential scan; the TPU-native form
+(DESIGN.md §3) is the *chunked SSD decomposition*, which converts the
+recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t,     y_t = C_t · h_t
+
+into MXU matmuls per chunk of length c. With L_t = Σ_{τ<=t} dt_τ A the
+cumulative log-decay inside a chunk:
+
+    intra:  Y  += (tril(exp(L_t - L_τ)) ∘ (C Bᵀ)) @ (dt ∘ x)      (c×c matmul)
+    inter:  Y  += exp(L_t) ∘ (C @ h₀ᵀ)                            (c×S matmul)
+    carry:  h' = exp(L_c) h₀ + ((dt ∘ x) ∘ exp(L_c - L_t))ᵀ @ B   (P×c @ c×S)
+
+The grid walks (batch, head, chunk) with the chunk axis innermost and the
+(P, S) state carried in VMEM scratch — the sequential dependency is one
+scalar-decay chain per chunk rather than per step, so arithmetic intensity
+is MXU-bound instead of latency-bound. This is the long_500k serving path
+for the SSM/hybrid architectures (zamba2, xlstm).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_kernel_call"]
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[0]                                   # scalar decay rate (this head)
+    x = x_ref[0, :, 0].astype(jnp.float32)         # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (c,)
+    Bm = b_ref[0].astype(jnp.float32)              # (c, S)
+    Cm = c_ref[0].astype(jnp.float32)              # (c, S)
+
+    L = jnp.cumsum(dt * A)                         # (c,) cumulative log decay
+    # intra-chunk: G[t, tau] = exp(L_t - L_tau) for tau <= t, else 0
+    Lt = L[:, None]
+    Ltau = L[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    G = jnp.where(tril, jnp.exp(Lt - Ltau), 0.0)   # (c, c)
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (c, c)
+    dx = dt[:, None] * x                            # (c, P)
+    y_intra = jax.lax.dot_general(
+        G * CB, dx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (c, P)
+
+    # inter-chunk: contribution of carried state h0 (P, S)
+    h0 = h_ref[...]
+    Ch = jax.lax.dot_general(
+        Cm, h0, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (c, P)
+    y = y_intra + jnp.exp(L)[:, None] * Ch
+
+    # carry state to next chunk
+    w = jnp.exp(L[-1] - L)[:, None] * dx            # (c, P)
+    h_new = jnp.exp(L[-1]) * h0 + jax.lax.dot_general(
+        w, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (P, S)
+    h_ref[...] = h_new
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+def mamba_scan_kernel_call(
+    x: jax.Array,   # (B, T, H, P)
+    dt: jax.Array,  # (B, T, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, T, S)
+    Cm: jax.Array,  # (B, T, S)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, H, P = x.shape
+    S = Bm.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+
+    kern = functools.partial(_ssd_kernel, chunk=c)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, T // c),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (h,)),
+            pl.BlockSpec((1, c, 1, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, c, 1), lambda b, h, i: (b, i, h)),
+            pl.BlockSpec((1, c, S), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((1, c, S), lambda b, h, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, P), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, S), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt, Bm, Cm)

@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "forest_infer_ref",
+    "flow_stats_ref",
+    "mamba_scan_ref",
+]
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Hq, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference multi-head attention with GQA head grouping."""
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    logits = logits * scale
+    if causal:
+        Tk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, Hq, D) — one new token per sequence
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) valid cache lengths
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, kf) * scale
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def forest_infer_ref(
+    x: jax.Array,         # (N, F) float32 feature matrix
+    feature: jax.Array,   # (T, 2**depth - 1) int32
+    threshold: jax.Array, # (T, 2**depth - 1) float32 (+inf = pass-through)
+    leaf: jax.Array,      # (T, 2**depth, K) float32
+    depth: int,
+) -> jax.Array:
+    """Mean leaf payload over trees, (N, K). Matches forest_apply_np."""
+    N = x.shape[0]
+    T = feature.shape[0]
+    node = jnp.zeros((N, T), dtype=jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feature[None, :, :], node[:, :, None], axis=2)[..., 0]
+        th = jnp.take_along_axis(threshold[None, :, :], node[:, :, None], axis=2)[..., 0]
+        xv = jnp.take_along_axis(x[:, None, :], f[:, :, None].astype(jnp.int32), axis=2)[..., 0]
+        node = 2 * node + 1 + (xv > th).astype(jnp.int32)
+    leaf_idx = node - (2 ** depth - 1)
+    gathered = jnp.take_along_axis(
+        leaf[None], leaf_idx[:, :, None, None], axis=2
+    )[:, :, 0, :]  # (N, T, K)
+    return gathered.mean(axis=1)
+
+
+def flow_stats_ref(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked per-flow stats over packets: (N, 5) = count, sum, sumsq, min, max."""
+    m = mask.astype(jnp.float32)
+    cnt = m.sum(axis=1)
+    s = (values * m).sum(axis=1)
+    sq = (values * values * m).sum(axis=1)
+    big = jnp.float32(3.4e38)
+    mn = jnp.where(cnt > 0, jnp.min(jnp.where(mask, values, big), axis=1), 0.0)
+    mx = jnp.where(cnt > 0, jnp.max(jnp.where(mask, values, -big), axis=1), 0.0)
+    return jnp.stack([cnt, s, sq, mn, mx], axis=1)
+
+
+def mamba_scan_ref(
+    x: jax.Array,   # (B, T, H, P)  inputs
+    dt: jax.Array,  # (B, T, H)     softplus'd step sizes (>0)
+    A: jax.Array,   # (H,)          negative decay rates
+    Bm: jax.Array,  # (B, T, S)     input projections (state dim S)
+    Cm: jax.Array,  # (B, T, S)     output projections
+) -> jax.Array:
+    """Sequential SSD/Mamba-2 recurrence oracle.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t);   y_t = C_t · h_t
+    State h has shape (H, P, S) per sequence.
+    """
+    Bsz, T, H, P = x.shape
+    S = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A)[:, None, None]              # (H,1,1)
+        upd = (dtt[:, None] * xt)[:, :, None] * bt[None, None, :]  # (H,P,S)
+        h = decay * h + upd
+        y = (h * ct[None, None, :]).sum(-1)                  # (H,P)
+        return h, y
+
+    def per_seq(xb, dtb, bb, cb):
+        h0 = jnp.zeros((H, P, S), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb, dtb, bb, cb))
+        return ys
+
+    return jax.vmap(per_seq)(
+        x.astype(jnp.float32), dt.astype(jnp.float32),
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+    ).astype(x.dtype)

@@ -1,0 +1,99 @@
+"""Random-forest inference Pallas kernel — the model stage of the pipeline.
+
+TPU adaptation of the paper's SmartCore/Rust tree inference (DESIGN.md §3):
+a TPU has no pointer chasing, so trees live in the *dense complete
+level-order layout* produced by `repro.core.forest` and traversal is pure
+index arithmetic, unrolled over the (static) depth:
+
+    node <- 2*node + 1 + (x[feat[node]] > thresh[node])
+
+The grid tiles (flow_block × tree_block); each step keeps a (bn, F) tile of
+flows and a tree block's node/leaf tables in VMEM, updates a (bn, bt) vector
+of node cursors per level with VREG gathers, and accumulates class votes
+into the output tile across tree blocks (the output block index only
+depends on the flow axis, so Pallas keeps it resident while the tree axis
+iterates — a reduction without HBM round-trips).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["forest_infer_kernel_call"]
+
+
+def _tree_kernel(x_ref, f_ref, t_ref, l_ref, o_ref, *, depth: int, n_trees: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                      # (bn, F)
+    feat = f_ref[...]                   # (bt, NI)
+    thr = t_ref[...]                    # (bt, NI)
+    leaf = l_ref[...]                   # (bt, NL, K)
+    bn = x.shape[0]
+    bt = feat.shape[0]
+
+    node = jnp.zeros((bn, bt), jnp.int32)
+    for _ in range(depth):
+        # gather per (flow, tree): feature id + threshold at current node
+        f = jnp.take_along_axis(
+            jnp.broadcast_to(feat[None], (bn, bt, feat.shape[1])),
+            node[:, :, None], axis=2,
+        )[..., 0]
+        th = jnp.take_along_axis(
+            jnp.broadcast_to(thr[None], (bn, bt, thr.shape[1])),
+            node[:, :, None], axis=2,
+        )[..., 0]
+        xv = jnp.take_along_axis(
+            jnp.broadcast_to(x[:, None, :], (bn, bt, x.shape[1])),
+            f.astype(jnp.int32)[:, :, None], axis=2,
+        )[..., 0]
+        node = 2 * node + 1 + (xv > th).astype(jnp.int32)
+
+    leaf_idx = node - (2 ** depth - 1)                     # (bn, bt)
+    votes = jnp.take_along_axis(
+        jnp.broadcast_to(leaf[None], (bn,) + leaf.shape),
+        leaf_idx[:, :, None, None], axis=2,
+    )[:, :, 0, :]                                           # (bn, bt, K)
+    o_ref[...] += votes.sum(axis=1) / n_trees
+
+
+def forest_infer_kernel_call(
+    x: jax.Array,         # (N, F) float32
+    feature: jax.Array,   # (T, NI) int32
+    threshold: jax.Array, # (T, NI) float32
+    leaf: jax.Array,      # (T, NL, K) float32
+    depth: int,
+    *,
+    block_n: int = 256,
+    block_t: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    N, F = x.shape
+    T, NI = feature.shape
+    NL, K = leaf.shape[1], leaf.shape[2]
+    bn = min(block_n, N)
+    bt = min(block_t, T)
+    assert N % bn == 0 and T % bt == 0, (N, bn, T, bt)
+
+    kern = functools.partial(_tree_kernel, depth=depth, n_trees=T)
+    return pl.pallas_call(
+        kern,
+        grid=(N // bn, T // bt),
+        in_specs=[
+            pl.BlockSpec((bn, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, NI), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, NI), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, NL, K), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, K), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, K), jnp.float32),
+        interpret=interpret,
+    )(x, feature, threshold, leaf)

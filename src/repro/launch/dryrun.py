@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 pods × 256 chips. For every cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(*abstract)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+Cost accounting: the production artifact scans over layers, and XLA's
+cost_analysis does not multiply while-bodies by trip count. So in addition
+to the real (scanned) compile — which provides memory_analysis and the
+sharding proof — we compile two *probe* variants with 1 and 2 layer-units
+and every scan unrolled (`cfg.probe`), and extrapolate
+
+    total ≈ f(1) + (units - 1) · (f(2) - f(1))
+
+for FLOPs, bytes and per-collective bytes. Per-collective bytes come from
+the post-SPMD HLO text (all-reduce counted 2×, ring-(n-1)/n factors applied
+by the roofline benchmark). Results are cached as JSON under results/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--tag base] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2,
+}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _tensor_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-collective payload bytes (per device) from post-SPMD HLO.
+
+    all-reduce counts 2× (reduce-scatter + all-gather phases). Numbers are
+    payload-sized; the roofline term applies ring (n-1)/n scaling.
+    """
+    out = {k: 0 for k in COLL_KINDS}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        b = _tensor_bytes(shapes)
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += int(b * mult)
+        out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer-unit probes
+# ---------------------------------------------------------------------------
+
+def layer_units(cfg) -> float:
+    if cfg.family == "ssm":
+        return cfg.n_layers / 2          # pairs
+    if cfg.family == "hybrid":
+        return cfg.n_layers / cfg.shared_attn_every
+    return float(cfg.n_layers)           # audio: enc+dec shrink together
+
+
+def probe_cfg(cfg, n_units: int):
+    common = dict(probe=True, attn_chunk=0, remat=cfg.remat)
+    if cfg.family == "audio":
+        return dataclasses.replace(
+            cfg, n_layers=n_units, encoder_layers=n_units, **common
+        )
+    if cfg.family == "ssm":
+        return dataclasses.replace(cfg, n_layers=2 * n_units, **common)
+    if cfg.family == "hybrid":
+        return dataclasses.replace(
+            cfg, n_layers=n_units * cfg.shared_attn_every, **common
+        )
+    return dataclasses.replace(cfg, n_layers=n_units, **common)
+
+
+def _measure(cfg, shape, mesh, microbatches, zero1):
+    from repro.launch.specs import build_cell
+
+    cell = build_cell(cfg, shape, mesh, microbatches=microbatches, zero1=zero1)
+    t0 = time.time()
+    lowered = cell.fn.lower(*cell.abstract)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    from repro.launch.hlo_stats import hlo_stats
+
+    st = hlo_stats(hlo)
+    return {
+        "mode": cell.mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(st["flops"]),
+        "bytes_accessed": float(st["bytes"]),
+        "bytes_hbm": float(st.get("bytes_hbm", st["bytes"])),
+        "n_dots": int(st["n_dots"]),
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collectives": {k: float(v) for k, v in st["collectives"].items()},
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        "hlo_lines": hlo.count("\n"),
+    }
+
+
+def _extrapolate(f1: dict, f2: dict, units: float) -> dict:
+    def ext(a, b):
+        return a + (units - 1.0) * (b - a)
+
+    out = {
+        "flops": ext(f1["flops"], f2["flops"]),
+        "bytes_accessed": ext(f1["bytes_accessed"], f2["bytes_accessed"]),
+        "bytes_hbm": ext(f1.get("bytes_hbm", f1["bytes_accessed"]),
+                         f2.get("bytes_hbm", f2["bytes_accessed"])),
+        "transcendentals": ext(f1["transcendentals"], f2["transcendentals"]),
+        "collectives": {
+            k: ext(f1["collectives"][k], f2["collectives"][k])
+            for k in COLL_KINDS
+        },
+        "units": units,
+    }
+    out["collectives"]["count"] = ext(
+        f1["collectives"]["count"], f2["collectives"]["count"]
+    )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, tag: str = "base",
+             microbatches: int = 1, zero1: bool = True, force: bool = False,
+             probes: bool = True, overrides: dict | None = None):
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import skip_reason
+    from repro.models.config import SHAPES
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    out_path = RESULTS / f"{arch}__{shape_name}__{mesh_tag}__{tag}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[dryrun] cached: {out_path.name}")
+            return rec
+
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "tag": tag,
+        "overrides": overrides or {},
+        "microbatches": microbatches, "zero1": zero1, "family": cfg.family,
+        "params_total": cfg.total_params, "params_active": cfg.active_params,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", skip_reason=reason)
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] SKIP {arch} {shape_name} ({mesh_tag}): {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["n_devices"] = int(np.prod(list(mesh.shape.values())))
+    try:
+        main = _measure(cfg, shape, mesh, microbatches, zero1)
+        rec.update(status="ok", main=main, mode=main["mode"])
+        print(
+            f"[dryrun] OK {arch} {shape_name} ({mesh_tag},{tag}) "
+            f"mode={main['mode']} compile={main['compile_s']:.0f}s "
+            f"coll_ops={main['collectives']['count']}"
+        )
+        if probes and not multi_pod:
+            u = layer_units(cfg)
+            f1 = _measure(probe_cfg(cfg, 1), shape, mesh, microbatches, zero1)
+            f2 = _measure(probe_cfg(cfg, 2), shape, mesh, microbatches, zero1)
+            rec["probe1"], rec["probe2"] = f1, f2
+            rec["extrapolated"] = _extrapolate(f1, f2, u)
+            print(
+                f"[dryrun]    probes: flops/dev={rec['extrapolated']['flops']:.3g} "
+                f"coll(AR/AG/RS/A2A)="
+                + "/".join(
+                    f"{rec['extrapolated']['collectives'][k]/1e9:.2f}G"
+                    for k in ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all")
+                )
+            )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {arch} {shape_name} ({mesh_tag}): "
+              f"{type(e).__name__}: {str(e)[:300]}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--residual", default=None, choices=("tp", "replicated"))
+    ap.add_argument("--remat", default=None, choices=("none", "block", "dots"))
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--pad-heads", type=int, default=None)
+    args = ap.parse_args()
+    overrides = {}
+    if args.residual:
+        overrides["residual"] = args.residual
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.attn_chunk is not None:
+        overrides["attn_chunk"] = args.attn_chunk
+    if args.pad_heads is not None:
+        overrides["n_heads_padded"] = args.pad_heads
+
+    from repro import configs
+    from repro.models.config import SHAPES
+
+    archs = [args.arch] if args.arch else list(configs.all_arch_ids())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_fail = 0
+    for a in archs:
+        for s in shapes:
+            rec = run_cell(
+                a, s, args.multi_pod, tag=args.tag,
+                microbatches=args.microbatches, zero1=not args.no_zero1,
+                force=args.force, probes=not args.no_probes,
+                overrides=overrides or None,
+            )
+            n_fail += rec.get("status") == "error"
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

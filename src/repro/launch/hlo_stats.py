@@ -1,0 +1,206 @@
+"""HLO text analyzer: exact dot FLOPs, byte traffic, collective payloads.
+
+XLA's `compiled.cost_analysis()` proved unreliable on large multi-computation
+SPMD modules in this environment (it undercounts dots that sit in non-entry
+computations), so the dry-run derives its §Roofline terms from the
+post-optimization HLO text directly:
+
+  * dot FLOPs: 2 × |out| × (contracted extent), operand shapes resolved from
+    the defining instruction — exact for every `dot` in every computation.
+  * convolution FLOPs: 2 × |out| × (kernel spatial × input features / groups).
+  * byte traffic: Σ over instructions of (operand bytes + output bytes) for
+    compute/fusion/copy ops — a proxy for HBM traffic under the "fusions keep
+    internals in VREGs" model.
+  * collective payloads: per-kind byte totals (all-reduce 2×).
+
+Computations reached through `while` bodies are multiplied by the loop trip
+count when XLA annotates it; the dry-run's probe variants unroll every scan
+so probes have no whiles at all.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["hlo_stats"]
+
+_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _parse_shape(text):
+    """First dtype[dims] in text -> (dtype, [dims]); tuples -> list of both."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d]
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _BYTES[dt]
+    return total
+
+
+def _nelems(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def hlo_stats(hlo: str) -> dict:
+    """Analyze post-optimization HLO text. Returns flops/bytes/collectives."""
+    # pass 1: computation membership + instruction shapes
+    shape_of: dict[str, list] = {}
+    comp_of: dict[str, str] = {}
+    instrs = []  # (comp, name, op, shapes, line)
+    comp = "entry"
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.startswith("ENTRY ") or (s.startswith("%") and s.endswith("{")):
+            comp = s.split(" ")[0].lstrip("%")
+            continue
+        m = _DEF_RE.match(line)
+        if not m or "=" not in line:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        shapes_txt, op = om.group(1), om.group(2)
+        shapes = _parse_shape(shapes_txt)
+        shape_of[name] = shapes
+        comp_of[name] = comp
+        instrs.append((comp, name, op, shapes, rest))
+
+    # pass 2: computation multipliers.
+    #  - while bodies inherit caller multiplier × trip count (transitive —
+    #    nested scans multiply), caller resolved through the call graph;
+    #  - fusion/reduce sub-computations ("calls="/"to_apply=") are costed at
+    #    their call site: bytes/collectives inside them are skipped, dots
+    #    inside them count with the caller's multiplier.
+    while_edges = []   # (caller_comp, body_comp, trip)
+    fused_comps: dict[str, str] = {}  # comp -> caller comp
+    for comp, name, op, shapes, rest in instrs:
+        if op == "while":
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            tc = re.search(r"trip_count[^0-9]*([0-9]+)", rest)
+            trip = float(tc.group(1)) if tc else 1.0
+            if body:
+                while_edges.append((comp, body.group(1), trip))
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", rest):
+            fused_comps.setdefault(m.group(1), comp)
+
+    mult_of: dict[str, float] = defaultdict(lambda: 1.0)
+    # fixed-point over nested while chains (depth is small)
+    for _ in range(6):
+        changed = False
+        for caller, body, t in while_edges:
+            want = mult_of[caller] * t
+            if mult_of[body] != want:
+                mult_of[body] = want
+                changed = True
+        for comp, caller in fused_comps.items():
+            want = mult_of[caller]
+            if comp not in while_edges and mult_of[comp] != want and \
+                    comp not in [b for _, b, _ in while_edges]:
+                mult_of[comp] = want
+                changed = True
+        if not changed:
+            break
+
+    def trip(comp_name: str) -> float:
+        return mult_of[comp_name]
+
+    flops = 0.0
+    bytes_traffic = 0.0
+    bytes_hbm = 0.0
+    coll = {k: 0.0 for k in COLL_KINDS}
+    coll["count"] = 0
+    n_dots = 0
+
+    for comp, name, op, shapes, rest in instrs:
+        mult = trip(comp)
+        if not shapes:
+            continue
+        out_bytes = _nbytes(shapes)
+
+        if op == "dot":
+            ops_named = _OPERAND_RE.findall(rest.split("metadata")[0])
+            lhs = shape_of.get(ops_named[0], []) if ops_named else []
+            cdims = _DIMS_RE["lhs_c"].search(rest)
+            contr = 1
+            if lhs and cdims and cdims.group(1):
+                lhs_shape = lhs[0][1]
+                for i in [int(x) for x in cdims.group(1).split(",") if x]:
+                    if i < len(lhs_shape):
+                        contr *= lhs_shape[i]
+            out_elems = sum(_nelems(s) for _, s in shapes)
+            flops += mult * 2.0 * out_elems * contr
+            n_dots += 1
+        elif op == "convolution":
+            ops_named = _OPERAND_RE.findall(rest.split("metadata")[0])
+            rhs = shape_of.get(ops_named[1], []) if len(ops_named) > 1 else []
+            k_elems = _nelems(rhs[0][1]) if rhs else 1
+            out_elems = sum(_nelems(s) for _, s in shapes)
+            # per output element: 2 * (kernel elems / output features)
+            out_feat = shapes[0][1][-1] if shapes[0][1] else 1
+            flops += mult * 2.0 * out_elems * max(k_elems // max(out_feat, 1), 1)
+
+        in_fused = comp in fused_comps
+
+        if (op in COLL_KINDS or any(
+            op == f"{k}-start" for k in COLL_KINDS
+        )) and not in_fused:
+            kind = op.replace("-start", "")
+            payload = out_bytes if kind != "all-gather" else out_bytes
+            factor = 2.0 if kind == "all-reduce" else 1.0
+            coll[kind] += mult * payload * factor
+            coll["count"] += int(mult)
+
+        if op in ("fusion", "dot", "convolution", "copy", "reduce",
+                  "transpose", "broadcast", "concatenate", "scatter",
+                  "gather", "dynamic-slice", "dynamic-update-slice", "sort") \
+                and not in_fused:
+            ops_named = _OPERAND_RE.findall(rest.split("metadata")[0])
+            in_bytes = sum(_nbytes(shape_of.get(o, [])) for o in ops_named)
+            bytes_traffic += mult * (out_bytes + in_bytes)
+            # v2 "HBM traffic": exclude bare copies/transposes/broadcasts/
+            # concats — XLA-CPU emits them profusely where the TPU backend
+            # fuses them away, so they inflate the memory term
+            if op in ("fusion", "dot", "convolution", "reduce", "scatter",
+                      "gather", "dynamic-slice", "dynamic-update-slice",
+                      "sort"):
+                bytes_hbm += mult * (out_bytes + in_bytes)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_traffic,
+        "bytes_hbm": bytes_hbm,
+        "collectives": coll,
+        "n_dots": n_dots,
+    }

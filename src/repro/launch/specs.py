@@ -1,0 +1,215 @@
+"""Input specs + sharding assembly for every (arch × shape × mesh) cell.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, no device allocation. The modality
+frontends are stubs: whisper receives precomputed frame embeddings,
+internvl2 precomputed patch embeddings (per the assignment).
+
+`build_cell(cfg, shape, mesh, ...)` assembles the jit'd step function for a
+cell with in/out shardings and returns (fn, abstract args, shardings) ready
+for `.lower().compile()` — shared by the dry-run, the trainer and the
+server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig, SHAPES, ShapeSpec
+from repro.parallel import ParallelCtx, current_ctx, maybe_axis, param_pspecs, parallel_ctx
+from repro.parallel.sharding import default_rules
+from repro.train import AdamW, make_train_step
+from repro.serve import make_prefill, make_serve_step
+
+__all__ = [
+    "input_specs", "cache_pspecs", "batch_pspecs", "build_cell", "skip_reason",
+]
+
+_DT = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """Cells excluded by the assignment rules (recorded in DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is full-attention ({cfg.family})"
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch for train/prefill shapes ({tokens, targets, ...})."""
+    B, T = shape.global_batch, shape.seq_len
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, _DT[cfg.dtype])
+    if cfg.family == "audio":
+        Te = Td = T // 2
+        batch = {"frames": emb(B, Te, cfg.d_model), "tokens": tok(B, Td)}
+        tgt_len = Td
+    elif cfg.family == "vlm":
+        Np = cfg.num_patches
+        Tt = max(T - Np, 1)
+        batch = {"patches": emb(B, Np, cfg.d_model), "tokens": tok(B, Tt)}
+        tgt_len = Tt
+    else:
+        batch = {"tokens": tok(B, T)}
+        tgt_len = T
+    if shape.kind == "train":
+        batch["targets"] = tok(B, tgt_len)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache sds, tokens sds) for decode shapes — cache holds `seq_len`."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tokens
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch, ctx: ParallelCtx):
+    def spec(x):
+        if x.ndim == 1:
+            return P(maybe_axis(ctx, "dp", x.shape[0]))
+        if x.ndim == 2:
+            return P(maybe_axis(ctx, "dp", x.shape[0]), None)
+        return P(maybe_axis(ctx, "dp", x.shape[0]), None,
+                 maybe_axis(ctx, "tp", x.shape[-1]))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_pspecs(cache, ctx: ParallelCtx, cfg: ModelConfig):
+    """KV caches: batch->dp; heads->tp when divisible, else sequence->tp
+    (sequence-parallel KV; GSPMD turns softmax reductions into all-reduces).
+    SSM states: heads/channels->tp, batch->dp."""
+
+    def spec(path, x):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in ("k", "v", "xk", "xv", "attn_k", "attn_v"):
+            L, B, S, H, hd = x.shape
+            dp = maybe_axis(ctx, "dp", B)
+            tp_h = maybe_axis(ctx, "tp", H)
+            if tp_h is not None:
+                return P(None, dp, None, tp_h, None)
+            return P(None, dp, maybe_axis(ctx, "tp", S), None, None)
+        if name == "ssm":
+            return P(None, maybe_axis(ctx, "dp", x.shape[1]),
+                     maybe_axis(ctx, "tp", x.shape[2]), None, None)
+        if name == "conv":
+            return P(None, maybe_axis(ctx, "dp", x.shape[1]), None,
+                     maybe_axis(ctx, "tp", x.shape[3]))
+        if name == "mlstm":
+            return P(None, maybe_axis(ctx, "dp", x.shape[1]),
+                     maybe_axis(ctx, "tp", x.shape[2]), None, None)
+        if name.startswith("slstm"):
+            return P(None, maybe_axis(ctx, "dp", x.shape[1]),
+                     maybe_axis(ctx, "tp", x.shape[2]))
+        if name in ("pos", "mem_len"):
+            return P(maybe_axis(ctx, "dp", x.shape[0]))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def _shardings(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: object          # jit'd function, ready to .lower(*abstract)
+    abstract: tuple     # abstract args
+    mode: str           # train | prefill | decode
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    *,
+    microbatches: int = 1,
+    zero1: bool = True,
+    donate: bool = True,
+) -> Cell:
+    rules = default_rules(mesh)
+    with parallel_ctx(mesh, rules) as ctx:
+        params_sds = jax.eval_shape(
+            functools.partial(init_params, cfg), jax.random.PRNGKey(0)
+        )
+        p_specs = param_pspecs(params_sds, ctx)
+        p_shard = _shardings(p_specs, mesh)
+
+        if shape.kind in ("train",):
+            opt = AdamW(zero1=zero1)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            opt_specs = opt.opt_state_pspecs(p_specs, params_sds)
+            state_sds = {"params": params_sds, "opt": opt_sds}
+            state_shard = {"params": p_shard, "opt": _shardings(opt_specs, mesh)}
+            batch_sds = input_specs(cfg, shape)
+            b_shard = _shardings(batch_pspecs(batch_sds, ctx), mesh)
+            step = make_train_step(cfg, opt, microbatches)
+
+            def wrapped(state, batch):
+                with parallel_ctx(mesh, rules):
+                    return step(state, batch)
+
+            fn = jax.jit(
+                wrapped,
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,) if donate else (),
+            )
+            return Cell(fn, (state_sds, batch_sds), "train")
+
+        if shape.kind == "prefill":
+            batch_sds = input_specs(cfg, shape)
+            b_shard = _shardings(batch_pspecs(batch_sds, ctx), mesh)
+            prefill = make_prefill(cfg)
+
+            def wrapped(params, batch):
+                with parallel_ctx(mesh, rules):
+                    return prefill(params, batch)
+
+            fn = jax.jit(wrapped, in_shardings=(p_shard, b_shard))
+            return Cell(fn, (params_sds, batch_sds), "prefill")
+
+        # decode
+        cache_sds, tok_sds = decode_input_specs(cfg, shape)
+        c_shard = _shardings(cache_pspecs(cache_sds, ctx, cfg), mesh)
+        t_shard = _shardings(batch_pspecs(tok_sds, ctx), mesh)
+        sstep = make_serve_step(cfg)
+
+        def wrapped(params, cache, tokens):
+            with parallel_ctx(mesh, rules):
+                return sstep(params, cache, tokens)
+
+        fn = jax.jit(
+            wrapped,
+            in_shardings=(p_shard, c_shard, t_shard),
+            out_shardings=(t_shard, c_shard),
+            donate_argnums=(1,) if donate else (),
+        )
+        return Cell(fn, (params_sds, cache_sds, tok_sds), "decode")

@@ -1,0 +1,14 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+from .config import ModelConfig, SHAPES, ShapeSpec
+from .zoo import decode_step, forward, init_cache, init_params, loss_fn
+
+__all__ = [
+    "ModelConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+]

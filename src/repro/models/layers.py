@@ -1,0 +1,164 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention, gated MLPs.
+
+Functional style: ``init_*`` builds parameter pytrees (or their
+eval_shape'd ShapeDtypeStructs for the dry-run), ``apply`` functions are
+pure. Activations carry `with_sharding_constraint` hints at layer
+boundaries; parameter shardings come from `repro.parallel.sharding`.
+
+Attention uses a *query-chunked* XLA path by default (lax.scan over query
+blocks, full-softmax per block) so prefill never materializes a T×T logits
+tensor — peak temp is (B, H, chunk, T). On TPU the fused Pallas kernel
+(`repro.kernels.flash_attention`) replaces it via ``attn_impl='pallas'``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "rope_cos_sin",
+    "apply_rope",
+    "attention",
+    "decode_attention_xla",
+    "mlp",
+    "init_dense",
+    "init_norm",
+]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2), float32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., T, H, D); cos/sin (..., T, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def _sdpa_block(q, k, v, scale, causal, q_offset, kv_len):
+    """Full-softmax attention for one query chunk. q (B,H,cq,D), k/v (B,H,T,D)."""
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        cq = q.shape[2]
+        qpos = q_offset + jnp.arange(cq)[:, None]
+        kpos = jnp.arange(kv_len)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,  # (B, T, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    chunk: int = 0,
+    attn_impl: str = "xla",
+) -> jax.Array:
+    """GQA attention over a full sequence (training / prefill)."""
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    scale = D ** -0.5
+
+    if attn_impl == "pallas":
+        from repro.kernels import ops
+
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+        )
+        return out.transpose(0, 2, 1, 3)
+
+    qh = q.transpose(0, 2, 1, 3)                       # (B,Hq,T,D)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+
+    if chunk and T > chunk and T % chunk == 0:
+        nq = T // chunk
+
+        def body(carry, i):
+            qc = jax.lax.dynamic_slice_in_dim(qh, i * chunk, chunk, axis=2)
+            oc = _sdpa_block(qc, kh, vh, scale, causal, i * chunk, T)
+            return carry, oc
+
+        _, chunks = jax.lax.scan(body, None, jnp.arange(nq))
+        out = jnp.moveaxis(chunks, 0, 2).reshape(B, Hq, T, D)
+    else:
+        out = _sdpa_block(qh, kh, vh, scale, causal, 0, T)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention_xla(
+    q: jax.Array,        # (B, Hq, D) single new token
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    """XLA decode attention; S may be sharded — max/sum reductions over the
+    sequence axis become all-reduces under GSPMD (sequence-parallel KV)."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def mlp(x: jax.Array, w: dict, act: str) -> jax.Array:
+    if act == "swiglu":
+        gate = jnp.einsum("btd,df->btf", x, w["w_gate"])
+        up = jnp.einsum("btd,df->btf", x, w["w_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:  # gelu
+        h = jnp.einsum("btd,df->btf", x, w["w_up"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", h, w["w_down"])
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    w = {"w_up": init_dense(ks[0], d, d_ff, dtype),
+         "w_down": init_dense(ks[1], d_ff, d, dtype)}
+    if act == "swiglu":
+        w["w_gate"] = init_dense(ks[2], d, d_ff, dtype)
+    return w

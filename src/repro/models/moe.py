@@ -1,0 +1,242 @@
+"""Mixture-of-Experts layer: top-k routing, shared experts, expert parallelism.
+
+Two implementations with identical routing semantics:
+
+`moe_ref`      — single-logical-device capacity dispatch (sort-based, pure
+                 jnp). Used by smoke tests and as the numerical oracle.
+
+`moe_sharded`  — the production path (DeepSeek/Kimi-style EP × TP), written
+                 in `shard_map`:
+                   tokens sharded over ("pod","data"), d_model over "model";
+                   experts sharded over EP groups = pod×data;
+                   1. router logits: partial matmul + psum("model")
+                   2. capacity dispatch to a (groups, C, d_loc) buffer
+                   3. all_to_all over ("pod","data")  — tokens → experts
+                   4. per-expert FFN with row-parallel up-proj and
+                      psum_scatter("model") (never materializes the full
+                      hidden dim), row-parallel down-proj + psum_scatter
+                   5. all_to_all back, weighted combine at the sender.
+                 Dropped tokens (over capacity) fall through the residual,
+                 exactly like the reference.
+
+Capacity C = ceil(tokens·k / E · capacity_factor) is static, so the whole
+block lowers to fixed-shape matmuls + two all_to_alls — no dynamic shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import init_dense
+
+__all__ = ["init_moe", "moe_ref", "moe_sharded", "router_topk"]
+
+
+def init_moe(key, d: int, cfg, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.moe_d_ff
+    ES = cfg.expert_slots  # storage slots (padded for EP divisibility)
+    p = {
+        "w_router": init_dense(ks[0], d, E, jnp.float32),
+        "w_gate": init_dense(ks[1], d, F, dtype)[None].repeat(ES, 0) * 1.0,
+        "w_up": init_dense(ks[2], d, F, dtype)[None].repeat(ES, 0) * 1.0,
+        "w_down": init_dense(ks[3], F, d, dtype)[None].repeat(ES, 0) * 1.0,
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": init_dense(kk[0], d, Fs, dtype),
+            "w_up": init_dense(kk[1], d, Fs, dtype),
+            "w_down": init_dense(kk[2], Fs, d, dtype),
+        }
+    return p
+
+
+def router_topk(x2d: jax.Array, w_router: jax.Array, k: int):
+    """(N, d) tokens -> (weights (N,k) f32, sel (N,k) i32)."""
+    logits = x2d.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, sel = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, sel.astype(jnp.int32)
+
+
+def _capacity(n_slots: int, n_buckets: int, cf: float) -> int:
+    return int(np.ceil(n_slots / n_buckets * cf))
+
+
+def _dispatch_indices(sel_flat: jax.Array, n_buckets: int, capacity: int):
+    """Sort token-slots by bucket; return (order, bucket_sorted, pos, keep)."""
+    order = jnp.argsort(sel_flat, stable=True)
+    sorted_b = sel_flat[order]
+    counts = jnp.bincount(sel_flat, length=n_buckets)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(sel_flat.shape[0]) - starts[sorted_b]
+    keep = pos < capacity
+    return order, sorted_b, pos, keep
+
+
+def _expert_ffn(buf: jax.Array, w_gate, w_up, w_down, act: str = "swiglu"):
+    """buf (E, C, d) -> (E, C, d); per-expert gated FFN."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _shared_expert(x: jax.Array, w: dict) -> jax.Array:
+    g = x @ w["w_gate"]
+    u = x @ w["w_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ w["w_down"]
+
+
+def moe_ref(x: jax.Array, params: dict, cfg) -> jax.Array:
+    """Reference MoE. x (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    E, k, cf = cfg.expert_slots, cfg.experts_per_tok, cfg.capacity_factor
+    xt = x.reshape(-1, d)
+    N = xt.shape[0]
+    weights, sel = router_topk(xt, params["w_router"], k)
+
+    C = _capacity(N * k, cfg.n_experts, cf)
+    sel_flat = sel.reshape(-1)
+    tok_of_slot = jnp.repeat(jnp.arange(N), k)
+    w_flat = weights.reshape(-1)
+
+    order, sorted_e, pos, keep = _dispatch_indices(sel_flat, E, C)
+    src_tok = tok_of_slot[order]
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], xt[src_tok], 0)
+    )
+    out_buf = _expert_ffn(buf, params["w_gate"], params["w_up"], params["w_down"])
+
+    y_slot = out_buf[sorted_e, jnp.where(keep, pos, 0)]
+    y_slot = jnp.where(keep[:, None], y_slot, 0) * w_flat[order][:, None].astype(x.dtype)
+    y = jnp.zeros((N, d), x.dtype).at[src_tok].add(y_slot)
+
+    if "shared" in params:
+        y = y + _shared_expert(xt, params["shared"])
+    return y.reshape(B, T, d)
+
+
+# ---------------------------------------------------------------------------
+# Sharded expert-parallel MoE (shard_map)
+# ---------------------------------------------------------------------------
+
+def moe_sharded(
+    x: jax.Array,        # (B, T, d) global
+    params: dict,
+    cfg,
+    mesh: jax.sharding.Mesh,
+    *,
+    ep_axes: tuple[str, ...],   # e.g. ("pod", "data")
+    tp_axis: str = "model",
+) -> jax.Array:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    E, k, cf = cfg.expert_slots, cfg.experts_per_tok, cfg.capacity_factor
+    G = int(np.prod([mesh.shape[a] for a in ep_axes]))   # EP group count
+    tp = mesh.shape[tp_axis]
+    assert E % G == 0, (E, G, "pad n_expert_slots to a multiple of EP size")
+    E_loc = E // G
+    d = x.shape[-1]
+    B, T = x.shape[0], x.shape[1]
+    N_loc = B * T // G                    # tokens per EP shard
+    C = _capacity(N_loc * k, G, cf)       # per-destination-group capacity
+    C2 = _capacity(G * C, E_loc, cf)      # per-expert capacity after a2a
+
+    def local(x_loc, w_router, w_gate, w_up, w_down):
+        # x_loc: (B_loc, T, d_loc); experts weights are EP+TP shards:
+        # w_gate (E_loc, d_loc, F) / w_down (E_loc, F_loc, d)… see specs below
+        d_loc = x_loc.shape[-1]
+        xt = x_loc.reshape(-1, d_loc)
+
+        # --- router: partial logits + psum over TP
+        part = xt.astype(jnp.float32) @ w_router.astype(jnp.float32)
+        logits = jax.lax.psum(part, tp_axis)
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, sel = jax.lax.top_k(probs, k)
+        weights = (weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9))
+        sel = sel.astype(jnp.int32)
+
+        # --- first-stage dispatch: destination EP group = expert // E_loc
+        sel_flat = sel.reshape(-1)
+        grp = sel_flat // E_loc
+        tok_of_slot = jnp.repeat(jnp.arange(xt.shape[0]), k)
+        order, sorted_g, pos, keep = _dispatch_indices(grp, G, C)
+        src_tok = tok_of_slot[order]
+        safe_pos = jnp.where(keep, pos, 0)
+
+        send = jnp.zeros((G, C, d_loc), x_loc.dtype)
+        send = send.at[sorted_g, safe_pos].add(
+            jnp.where(keep[:, None], xt[src_tok], 0)
+        )
+        send_eid = jnp.full((G, C), E_loc, jnp.int32)  # E_loc = invalid slot
+        send_eid = send_eid.at[sorted_g, safe_pos].set(
+            jnp.where(keep, sel_flat[order] % E_loc, E_loc)
+        )
+
+        # --- all_to_all: tokens to the group owning their expert
+        recv = jax.lax.all_to_all(send, ep_axes, 0, 0, tiled=True)
+        recv_eid = jax.lax.all_to_all(send_eid, ep_axes, 0, 0, tiled=True)
+
+        # --- second-stage dispatch to per-expert buffers (invalid -> bucket E_loc)
+        flat_tok = recv.reshape(G * C, d_loc)
+        flat_eid = recv_eid.reshape(G * C)
+        order2, sorted_e, pos2, keep2 = _dispatch_indices(flat_eid, E_loc + 1, C2)
+        keep2 = keep2 & (sorted_e < E_loc)
+        safe_e = jnp.where(keep2, sorted_e, 0)
+        safe_p2 = jnp.where(keep2, pos2, 0)
+        ebuf = jnp.zeros((E_loc, C2, d_loc), x_loc.dtype)
+        ebuf = ebuf.at[safe_e, safe_p2].add(
+            jnp.where(keep2[:, None], flat_tok[order2], 0)
+        )
+
+        # --- expert FFN: row-parallel over d_loc, psum_scatter to F_loc
+        g_part = jnp.einsum("ecd,edf->ecf", ebuf, w_gate)   # partial (E,C2,F)
+        u_part = jnp.einsum("ecd,edf->ecf", ebuf, w_up)
+        g_loc = jax.lax.psum_scatter(g_part, tp_axis, scatter_dimension=2, tiled=True)
+        u_loc = jax.lax.psum_scatter(u_part, tp_axis, scatter_dimension=2, tiled=True)
+        h_loc = jax.nn.silu(g_loc.astype(jnp.float32)).astype(x_loc.dtype) * u_loc
+        o_part = jnp.einsum("ecf,efd->ecd", h_loc, w_down)  # partial (E,C2,d)
+        o_loc = jax.lax.psum_scatter(o_part, tp_axis, scatter_dimension=2, tiled=True)
+
+        # --- gather back to a2a slots, return trip, weighted combine
+        y_slots = jnp.zeros((G * C, d_loc), x_loc.dtype)
+        vals = o_loc[safe_e, safe_p2]
+        y_slots = y_slots.at[order2].add(jnp.where(keep2[:, None], vals, 0))
+        y_back = jax.lax.all_to_all(
+            y_slots.reshape(G, C, d_loc), ep_axes, 0, 0, tiled=True
+        )
+
+        w_flat = weights.reshape(-1)[order].astype(x_loc.dtype)
+        y_tok = jnp.zeros_like(xt)
+        contrib = y_back[sorted_g, safe_pos] * w_flat[:, None]
+        y_tok = y_tok.at[src_tok].add(jnp.where(keep[:, None], contrib, 0))
+        return y_tok.reshape(x_loc.shape)
+
+    specs_in = (
+        P(ep_axes, None, tp_axis),                    # x (B, T, d)
+        P(tp_axis, None),                             # w_router (d, E): d sharded
+        P(ep_axes, tp_axis, None),                    # w_gate (E, d, F): d sharded
+        P(ep_axes, tp_axis, None),                    # w_up   (E, d, F): d sharded
+        P(ep_axes, tp_axis, None),                    # w_down (E, F, d): F sharded
+    )
+    out_spec = P(ep_axes, None, tp_axis)
+
+    y = shard_map(
+        local, mesh=mesh, in_specs=specs_in, out_specs=out_spec, check_rep=False,
+    )(x, params["w_router"], params["w_gate"], params["w_up"], params["w_down"])
+
+    if "shared" in params:
+        y = y + _shared_expert(x.reshape(-1, d), params["shared"]).reshape(x.shape)
+    return y

@@ -1,0 +1,310 @@
+"""SSM-family mixers: Mamba-2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+Training/prefill uses the chunked SSD decomposition (lax.scan over chunks of
+the sequence; intra-chunk work is MXU matmuls — same math as the
+`mamba_scan` Pallas kernel, vectorized over batch and heads). Decode is the
+O(1)-per-token state recurrence, which is why the SSM/hybrid architectures
+are the ones that run the long_500k shape (DESIGN.md §4).
+
+The mLSTM is implemented as gated linear attention in the same chunked form
+(per-head keys/values; sigmoid input/forget gates — the stabilized
+exponential-gating variant of the paper is simplified to sigmoid gates,
+which preserves the compute/memory profile; recorded in DESIGN.md). The
+sLSTM is a per-unit scalar recurrence scanned over time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import init_dense, init_norm, rms_norm
+
+__all__ = [
+    "chunked_ssd",
+    "init_mamba2", "mamba2_forward", "mamba2_init_state", "mamba2_decode_step",
+    "init_mlstm", "mlstm_forward", "mlstm_decode_step",
+    "init_slstm", "slstm_forward", "slstm_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Generalized chunked SSD: h_t = exp(ld_t) h_{t-1} + s_t x_t ⊗ B_t ; y = C·h
+# ---------------------------------------------------------------------------
+
+def chunked_ssd(
+    x: jax.Array,         # (B, T, H, P) values
+    log_decay: jax.Array, # (B, T, H)
+    scale: jax.Array,     # (B, T, H) input scale (dt or input gate)
+    Bm: jax.Array,        # (B, T, G, S) keys; G == 1 (shared) or H (per-head)
+    Cm: jax.Array,        # (B, T, G, S) queries
+    chunk: int = 128,
+    unroll: bool = False,
+) -> jax.Array:
+    B, T, H, P = x.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    c = min(chunk, T)
+    assert T % c == 0
+    nc = T // c
+
+    xr = x.reshape(B, nc, c, H, P)
+    ldr = log_decay.reshape(B, nc, c, H).astype(jnp.float32)
+    sr = scale.reshape(B, nc, c, H).astype(jnp.float32)
+    Br = Bm.reshape(B, nc, c, G, S).astype(jnp.float32)
+    Cr = Cm.reshape(B, nc, c, G, S).astype(jnp.float32)
+
+    tril = np.tril(np.ones((c, c), np.float32))
+
+    def step(h, inp):
+        xc, ldc, sc, bc, cc = inp         # (B,c,H,P) (B,c,H) (B,c,H) (B,c,G,S)
+        L = jnp.cumsum(ldc, axis=1)       # (B,c,H)
+        # intra-chunk
+        CB = jnp.einsum("bcgs,bkgs->bckg", cc, bc)          # (B,c,c,G)
+        if G == 1:
+            CB = jnp.broadcast_to(CB, (B, c, c, 1))
+        decay = jnp.exp(L[:, :, None, :] - L[:, None, :, :])  # (B,c,c,H)
+        gmat = jnp.where(tril[None, :, :, None] > 0, decay, 0.0)
+        if G == 1:
+            attn = gmat * CB                                 # (B,c,c,H)
+        else:
+            attn = gmat * CB
+        dx = sc[..., None] * xc.astype(jnp.float32)          # (B,c,H,P)
+        y_intra = jnp.einsum("bckh,bkhp->bchp", attn, dx)
+        # inter-chunk (carried state h: (B,H,P,S) for G==1 / (B,H,P,S))
+        if G == 1:
+            y_inter = jnp.einsum("bcs,bhps->bchp", cc[:, :, 0], h)
+        else:
+            y_inter = jnp.einsum("bchs,bhps->bchp", cc, h)
+        y = y_intra + jnp.exp(L)[..., None] * y_inter
+        # state update
+        w = jnp.exp(L[:, -1:, :] - L)[..., None] * dx        # (B,c,H,P)
+        if G == 1:
+            dh = jnp.einsum("bkhp,bks->bhps", w, bc[:, :, 0])
+        else:
+            dh = jnp.einsum("bkhp,bkhs->bhps", w, bc)
+        h = jnp.exp(L[:, -1])[..., None, None] * h + dh
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, S), jnp.float32)
+    xs = (
+        jnp.moveaxis(xr, 1, 0), jnp.moveaxis(ldr, 1, 0),
+        jnp.moveaxis(sr, 1, 0), jnp.moveaxis(Br, 1, 0), jnp.moveaxis(Cr, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs, unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y.astype(x.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4
+_HEAD_P = 64
+
+
+def _mamba_dims(d: int, cfg):
+    di = cfg.ssm_expand * d
+    H = di // _HEAD_P
+    S = cfg.ssm_state
+    return di, H, S
+
+
+def init_mamba2(key, d: int, cfg, dtype=jnp.bfloat16) -> dict:
+    di, H, S = _mamba_dims(d, cfg)
+    ks = jax.random.split(key, 4)
+    zxbcdt = 2 * di + 2 * S + H
+    conv_ch = di + 2 * S
+    return {
+        "w_in": init_dense(ks[0], d, zxbcdt, dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, conv_ch), jnp.float32)
+                   * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_norm(di, dtype),
+        "w_out": init_dense(ks[2], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along T. x (B,T,C), w (K,C). Returns (y, tail)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    tail = xp[:, -(K - 1):]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), tail
+
+
+def _mamba_split(zxbcdt, di, H, S):
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + S, 2 * di + 2 * S], axis=-1
+    )
+    return z, xs, B_, C_, dt
+
+
+def mamba2_forward(x: jax.Array, p: dict, cfg, chunk: int | None = None):
+    """x (B,T,d) -> (B,T,d); returns (out, final_state dict)."""
+    B, T, d = x.shape
+    di, H, S = _mamba_dims(d, cfg)
+    zxbcdt = jnp.einsum("btd,dz->btz", x, p["w_in"])
+    z, xs, B_, C_, dt = _mamba_split(zxbcdt, di, H, S)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"])
+    xs, B_, C_ = jnp.split(conv_out, [di, di + S], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, T, H, _HEAD_P)
+    c = chunk or cfg.ssd_chunk
+    y, h_last = chunked_ssd(
+        xh, dt * A, dt, B_[:, :, None, :], C_[:, :, None, :], chunk=c,
+        unroll=getattr(cfg, "probe", False),
+    )
+    y = (y + p["D"][None, None, :, None] * xh).astype(x.dtype)
+    y = y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    out = jnp.einsum("bti,id->btd", y, p["w_out"]).astype(x.dtype)
+    return out, {"ssm": h_last, "conv": conv_tail}
+
+
+def mamba2_init_state(batch: int, d: int, cfg, dtype=jnp.bfloat16) -> dict:
+    di, H, S = _mamba_dims(d, cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, _HEAD_P, S), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, di + 2 * S), dtype),
+    }
+
+
+def mamba2_decode_step(x: jax.Array, state: dict, p: dict, cfg):
+    """x (B, d) single token; returns (out (B, d), new state)."""
+    B, d = x.shape
+    di, H, S = _mamba_dims(d, cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xs, B_, C_, dt = _mamba_split(zxbcdt, di, H, S)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)[:, None, :]
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    y = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)
+    xs, B_, C_ = jnp.split(y, [di, di + S], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                           # (B,H)
+    xh = xs.reshape(B, H, _HEAD_P).astype(jnp.float32)
+    upd = (dt[..., None] * xh)[..., None] * B_.astype(jnp.float32)[:, None, None, :]
+    h = decay[..., None, None] * state["ssm"] + upd                   # (B,H,P,S)
+    yh = (h * C_.astype(jnp.float32)[:, None, None, :]).sum(-1)       # (B,H,P)
+    yh = yh + p["D"][None, :, None] * xh
+    yv = yh.reshape(B, di).astype(x.dtype)
+    yv = rms_norm(yv * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = yv @ p["w_out"]
+    return out, {"ssm": h, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunked gated linear attention) and sLSTM (scalar recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, n_heads: int, dtype=jnp.bfloat16) -> dict:
+    hd = d // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q": init_dense(ks[0], d, d, dtype),
+        "w_k": init_dense(ks[1], d, d, dtype),
+        "w_v": init_dense(ks[2], d, d, dtype),
+        "w_gates": init_dense(ks[3], d, 2 * n_heads, jnp.float32),
+        "norm": init_norm(d, dtype),
+        "w_out": init_dense(ks[4], d, d, dtype),
+    }
+
+
+def mlstm_forward(x: jax.Array, p: dict, n_heads: int, chunk: int = 128,
+                  unroll: bool = False):
+    B, T, d = x.shape
+    hd = d // n_heads
+    q = jnp.einsum("btd,de->bte", x, p["w_q"]).reshape(B, T, n_heads, hd)
+    k = jnp.einsum("btd,de->bte", x, p["w_k"]).reshape(B, T, n_heads, hd)
+    v = jnp.einsum("btd,de->bte", x, p["w_v"]).reshape(B, T, n_heads, hd)
+    gates = jnp.einsum("btd,dg->btg", x.astype(jnp.float32), p["w_gates"])
+    i_g, f_g = jnp.split(gates, 2, axis=-1)                 # (B,T,H)
+    log_f = jax.nn.log_sigmoid(f_g)
+    i_s = jax.nn.sigmoid(i_g)
+    y, h_last = chunked_ssd(
+        v, log_f, i_s, k * (hd ** -0.5), q, chunk=chunk, unroll=unroll
+    )
+    y = rms_norm(y.reshape(B, T, d), p["norm"])
+    return jnp.einsum("btd,de->bte", y, p["w_out"]), h_last
+
+
+def mlstm_decode_step(x: jax.Array, state: jax.Array, p: dict, n_heads: int):
+    """x (B,d); state (B,H,hd_v,hd_k)."""
+    B, d = x.shape
+    hd = d // n_heads
+    q = (x @ p["w_q"]).reshape(B, n_heads, hd)
+    k = (x @ p["w_k"]).reshape(B, n_heads, hd) * (hd ** -0.5)
+    v = (x @ p["w_v"]).reshape(B, n_heads, hd)
+    gates = x.astype(jnp.float32) @ p["w_gates"]
+    i_g, f_g = jnp.split(gates, 2, axis=-1)                 # (B,H)
+    f_s = jax.nn.sigmoid(f_g)
+    i_s = jax.nn.sigmoid(i_g)
+    upd = (i_s[..., None] * v.astype(jnp.float32))[..., None] * \
+        k.astype(jnp.float32)[:, :, None, :]
+    h = f_s[..., None, None] * state + upd                  # (B,H,hd,hd)
+    y = (h * q.astype(jnp.float32)[:, :, None, :]).sum(-1)  # (B,H,hd)
+    y = rms_norm(y.reshape(B, d).astype(x.dtype), p["norm"])
+    return y @ p["w_out"], h
+
+
+def init_slstm(key, d: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": init_dense(ks[0], d, 4 * d, dtype),
+        "w_h": init_dense(ks[1], d, 4 * d, dtype),
+        "norm": init_norm(d, dtype),
+        "w_out": init_dense(ks[2], d, d, dtype),
+    }
+
+
+def slstm_forward(x: jax.Array, p: dict):
+    """Scalar LSTM scanned over time. x (B,T,d)."""
+    B, T, d = x.shape
+    gx = jnp.einsum("btd,dg->btg", x, p["w_x"])             # (B,T,4d)
+
+    def step(carry, gxt):
+        c, n, h = carry
+        g = gxt + h @ p["w_h"]
+        i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        z = jnp.tanh(z)
+        c = f * c + i * z
+        n = f * n + i
+        h_new = (o * c / jnp.maximum(n, 1.0)).astype(gxt.dtype)
+        return (c, n, h_new), h_new
+
+    c0 = jnp.zeros((B, d), jnp.float32)
+    n0 = jnp.zeros((B, d), jnp.float32)
+    h0 = jnp.zeros((B, d), x.dtype)
+    (c, n, h), ys = jax.lax.scan(step, (c0, n0, h0), jnp.moveaxis(gx, 1, 0))
+    y = rms_norm(jnp.moveaxis(ys, 0, 1), p["norm"])
+    return jnp.einsum("btd,de->bte", y, p["w_out"]), (c, n, h)
+
+
+def slstm_decode_step(x: jax.Array, state, p: dict):
+    c, n, h = state
+    g = x @ p["w_x"] + h @ p["w_h"]
+    i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    z = jnp.tanh(z)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = (o * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+    y = rms_norm(h_new, p["norm"])
+    return y @ p["w_out"], (c, n, h_new)

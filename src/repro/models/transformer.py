@@ -1,0 +1,222 @@
+"""Transformer block assembly: GQA attention blocks, scan-over-layers LMs.
+
+Everything is functional: `init_*` builds parameter pytrees (materialized
+for smoke tests, `jax.eval_shape`'d for the dry-run), `*_forward` are pure.
+Layers are stacked along a leading axis and applied with `jax.lax.scan`
+(keeps the HLO one-block-sized at 61 layers) with optional block-level
+remat. Activation sharding hints come from `repro.parallel.constrain`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain, current_ctx
+
+from .layers import (
+    apply_rope,
+    attention,
+    decode_attention_xla,
+    init_dense,
+    init_mlp,
+    init_norm,
+    mlp,
+    rms_norm,
+    rope_cos_sin,
+)
+from .moe import init_moe, moe_ref, moe_sharded
+
+__all__ = [
+    "init_attn", "attn_forward", "attn_decode",
+    "init_block", "block_forward",
+    "scan_layers", "stacked_init",
+]
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype=jnp.bfloat16, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    He = cfg.heads_eff
+    ks = jax.random.split(key, 4)
+    w_q = init_dense(ks[0], d, He * hd, dtype)
+    w_o = init_dense(ks[3], He * hd, d, dtype)
+    if He > cfg.n_heads:
+        # padded heads: zero their projections so they are numerically inert
+        w_q = w_q.at[:, cfg.n_heads * hd:].set(0)
+        w_o = w_o.at[cfg.n_heads * hd:, :].set(0)
+    p = {
+        "w_q": w_q,
+        "w_k": init_dense(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "w_v": init_dense(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "w_o": w_o,
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    return p
+
+
+def _qkv(x, p, cfg, kv_src=None):
+    B, T, d = x.shape
+    hd = cfg.hd
+    kv_in = x if kv_src is None else kv_src
+    q = jnp.einsum("btd,de->bte", x, p["w_q"]).reshape(B, T, cfg.heads_eff, hd)
+    k = jnp.einsum("btd,de->bte", kv_in, p["w_k"]).reshape(
+        B, kv_in.shape[1], cfg.n_kv_heads, hd
+    )
+    v = jnp.einsum("btd,de->bte", kv_in, p["w_v"]).reshape(
+        B, kv_in.shape[1], cfg.n_kv_heads, hd
+    )
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attn_forward(
+    x: jax.Array,
+    p: dict,
+    cfg,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_src: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    B, T, d = x.shape
+    q, k, v = _qkv(x, p, cfg, kv_src)
+    if use_rope and kv_src is None:
+        pos = positions if positions is not None else jnp.arange(T)[None, :]
+        cos, sin = rope_cos_sin(pos, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    o = attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    o = o.reshape(B, T, cfg.heads_eff * cfg.hd)
+    return jnp.einsum("bte,ed->btd", o, p["w_o"])
+
+
+def attn_decode(
+    x: jax.Array,          # (B, d) one token
+    p: dict,
+    cfg,
+    k_cache: jax.Array,    # (B, S, Hkv, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,        # (B,) write/attend position per sequence
+    *,
+    use_rope: bool = True,
+):
+    B, d = x.shape
+    hd = cfg.hd
+    q = (x @ p["w_q"]).reshape(B, cfg.heads_eff, hd)
+    k = (x @ p["w_k"]).reshape(B, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v"]).reshape(B, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope:
+        cos, sin = rope_cos_sin(pos, hd, cfg.rope_theta)  # (B, hd/2)
+        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    k_cache = k_cache.at[jnp.arange(B), pos].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[jnp.arange(B), pos].set(v.astype(v_cache.dtype))
+    o = decode_attention_xla(q, k_cache, v_cache, pos + 1)
+    return (o.reshape(B, cfg.heads_eff * hd) @ p["w_o"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, dtype=jnp.bfloat16, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(cfg.d_model, dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": init_norm(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if cross:
+        p["ln_x"] = init_norm(cfg.d_model, dtype)
+        p["xattn"] = init_attn(ks[2], cfg, dtype, cross=True)
+    return p
+
+
+def _ffn(x, p, cfg):
+    if cfg.family == "moe":
+        ctx = current_ctx()
+        if ctx.active and ctx.axes("ep"):
+            return moe_sharded(
+                x, p["moe"], cfg, ctx.mesh,
+                ep_axes=ctx.axes("ep"), tp_axis=ctx.axes("tp")[0],
+            )
+        return moe_ref(x, p["moe"], cfg)
+    return mlp(x, p["mlp"], cfg.act)
+
+
+def _res(x, cfg):
+    axis = "tp" if getattr(cfg, "residual", "tp") == "tp" else None
+    return constrain(x, "dp", None, axis)
+
+
+def block_forward(
+    x: jax.Array, p: dict, cfg, *, causal=True, use_rope=True, memory=None
+) -> jax.Array:
+    x = _res(x, cfg)
+    h = attn_forward(rms_norm(x, p["ln1"]), p["attn"], cfg,
+                     causal=causal, use_rope=use_rope)
+    x = x + h
+    if memory is not None and "xattn" in p:
+        hx = attn_forward(
+            rms_norm(x, p["ln_x"]), p["xattn"], cfg,
+            causal=False, use_rope=False, kv_src=memory,
+        )
+        x = x + hx
+    h = _ffn(rms_norm(x, p["ln2"]), p, cfg)
+    x = x + h
+    return _res(x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Layer stacking
+# ---------------------------------------------------------------------------
+
+def stacked_init(init_fn, key, n: int):
+    """vmap an init over layer keys -> params stacked on a leading axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def scan_layers(x, stacked, body, remat: str = "block", extra_xs=None,
+                unroll: bool = False):
+    """Apply `body(h, per_layer_params, per_layer_xs)` over stacked layers."""
+    fn = body
+    if remat == "block":
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names()
+        )
+    elif remat == "dots":
+        fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+
+    def f(h, xs):
+        layer_params, extra = xs
+        return fn(h, layer_params, extra), None
+
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    extra = extra_xs if extra_xs is not None else jnp.arange(n_layers)
+    out, _ = jax.lax.scan(
+        f, x, (stacked, extra), unroll=n_layers if unroll else 1
+    )
+    return out

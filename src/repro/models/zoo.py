@@ -1,0 +1,352 @@
+"""Family-level model assembly: init / forward / cache / decode per family.
+
+Public API (used by launch, tests and benchmarks):
+
+  init_params(cfg, key)              -> params pytree
+  forward(params, batch, cfg)        -> logits (train / prefill)
+  init_cache(cfg, batch, max_len)    -> decode cache pytree
+  decode_step(params, cache, tokens, cfg) -> (logits, new cache)
+
+`batch` is a dict: LM families use {"tokens"}; whisper {"frames", "tokens"};
+internvl {"patches", "tokens"}. The modality frontends are stubs per the
+assignment: frames/patches arrive as precomputed embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import constrain
+
+from .config import ModelConfig
+from .layers import init_dense, init_norm, rms_norm
+from .moe import moe_ref
+from .ssm import (
+    init_mamba2, init_mlstm, init_slstm,
+    mamba2_decode_step, mamba2_forward, mamba2_init_state,
+    mlstm_decode_step, mlstm_forward,
+    slstm_decode_step, slstm_forward,
+)
+from .transformer import (
+    attn_decode, attn_forward, block_forward, init_attn, init_block,
+    scan_layers, stacked_init,
+)
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step", "loss_fn"]
+
+_DT = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dt = _DT[cfg.dtype]
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {
+        "tok_emb": (jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32)
+                    * 0.02).astype(dt),
+        "ln_f": init_norm(d, dt),
+        "lm_head": init_dense(ks[1], d, cfg.vocab_size, dt),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["blocks"] = stacked_init(
+            lambda k: init_block(k, cfg, dt), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "audio":
+        p["enc_blocks"] = stacked_init(
+            lambda k: init_block(k, cfg, dt), ks[2], cfg.encoder_layers
+        )
+        p["dec_blocks"] = stacked_init(
+            lambda k: init_block(k, cfg, dt, cross=True), ks[3], cfg.n_layers
+        )
+        p["ln_enc"] = init_norm(d, dt)
+    elif cfg.family == "ssm":  # xLSTM: alternating mLSTM / sLSTM pairs
+        n_pairs = cfg.n_layers // 2
+        def pair_init(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln_m": init_norm(d, dt), "mlstm": init_mlstm(k1, d, cfg.n_heads, dt),
+                "ln_s": init_norm(d, dt), "slstm": init_slstm(k2, d, dt),
+            }
+        p["pairs"] = stacked_init(pair_init, ks[2], n_pairs)
+    elif cfg.family == "hybrid":  # zamba2: mamba2 stack + one shared attn block
+        def m_init(k):
+            return {"ln": init_norm(d, dt), "mamba": init_mamba2(k, d, cfg, dt)}
+        p["blocks"] = stacked_init(m_init, ks[2], cfg.n_layers)
+        p["shared"] = {
+            "ln": init_norm(d, dt),
+            "attn": init_attn(ks[3], cfg, dt),
+            "w_concat": init_dense(ks[4], 2 * d, d, dt),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(p, tokens, cfg):
+    x = jnp.take(p["tok_emb"], tokens, axis=0)
+    axis = "tp" if getattr(cfg, "residual", "tp") == "tp" else None
+    return constrain(x, "dp", None, axis)
+
+
+def _head(p, x, cfg):
+    x = rms_norm(x, p["ln_f"])
+    logits = jnp.einsum("btd,dv->btv", x, p["lm_head"])
+    return constrain(logits, "dp", None, "tp")
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        x = _embed(params, batch["tokens"], cfg)
+        body = lambda h, pl, i: block_forward(h, pl, cfg)
+        x = scan_layers(x, params["blocks"], body, cfg.remat, unroll=cfg.probe)
+        return _head(params, x, cfg)
+
+    if fam == "vlm":
+        x_txt = _embed(params, batch["tokens"], cfg)
+        x = jnp.concatenate([batch["patches"].astype(x_txt.dtype), x_txt], axis=1)
+        x = constrain(x, "dp", None, "tp")
+        body = lambda h, pl, i: block_forward(h, pl, cfg)
+        x = scan_layers(x, params["blocks"], body, cfg.remat, unroll=cfg.probe)
+        return _head(params, x, cfg)
+
+    if fam == "audio":
+        enc = constrain(batch["frames"].astype(_DT[cfg.dtype]), "dp", None, "tp")
+        enc_body = lambda h, pl, i: block_forward(h, pl, cfg, causal=False)
+        enc = scan_layers(enc, params["enc_blocks"], enc_body, cfg.remat, unroll=cfg.probe)
+        enc = rms_norm(enc, params["ln_enc"])
+        x = _embed(params, batch["tokens"], cfg)
+        dec_body = lambda h, pl, i: block_forward(h, pl, cfg, memory=enc)
+        x = scan_layers(x, params["dec_blocks"], dec_body, cfg.remat, unroll=cfg.probe)
+        return _head(params, x, cfg)
+
+    if fam == "ssm":
+        x = _embed(params, batch["tokens"], cfg)
+
+        def body(h, pl, i):
+            h = h + mlstm_forward(rms_norm(h, pl["ln_m"]), pl["mlstm"], cfg.n_heads,
+                                  chunk=cfg.ssd_chunk, unroll=cfg.probe)[0]
+            h = h + slstm_forward(rms_norm(h, pl["ln_s"]), pl["slstm"])[0]
+            axis = "tp" if cfg.residual == "tp" else None
+            return constrain(h, "dp", None, axis)
+
+        x = scan_layers(x, params["pairs"], body, cfg.remat, unroll=cfg.probe)
+        return _head(params, x, cfg)
+
+    if fam == "hybrid":
+        x = _embed(params, batch["tokens"], cfg)
+        emb0 = x
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+
+        def body(h, pl, i):
+            def with_attn(h):
+                a_in = jnp.concatenate([h, emb0], axis=-1) @ shared["w_concat"]
+                a = attn_forward(rms_norm(a_in, shared["ln"]), shared["attn"], cfg)
+                return h + a
+            h = jax.lax.cond(i % every == 0, with_attn, lambda h: h, h)
+            h = h + mamba2_forward(rms_norm(h, pl["ln"]), pl["mamba"], cfg)[0]
+            axis = "tp" if cfg.residual == "tp" else None
+            return constrain(h, "dp", None, axis)
+
+        x = scan_layers(x, params["blocks"], body, cfg.remat, unroll=cfg.probe)
+        return _head(params, x, cfg)
+
+    raise ValueError(fam)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    """Mean next-token cross-entropy (sharded-vocab-safe: no full gather)."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    targets = batch["targets"]
+    if cfg.family == "vlm":  # loss only over the text tail
+        logits = logits[:, -targets.shape[1]:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum((lse - picked) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode: caches + single-token step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = _DT[cfg.dtype]
+    hd = cfg.hd
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if fam == "audio":
+        mem_len = min(max_len, 1500)
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "xk": jnp.zeros((cfg.n_layers, batch, mem_len, cfg.n_kv_heads, hd), dt),
+            "xv": jnp.zeros((cfg.n_layers, batch, mem_len, cfg.n_kv_heads, hd), dt),
+            "mem_len": jnp.full((batch,), mem_len, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if fam == "ssm":
+        n_pairs = cfg.n_layers // 2
+        d = cfg.d_model
+        hd_m = d // cfg.n_heads
+        return {
+            "mlstm": jnp.zeros((n_pairs, batch, cfg.n_heads, hd_m, hd_m), jnp.float32),
+            "slstm_c": jnp.zeros((n_pairs, batch, d), jnp.float32),
+            "slstm_n": jnp.zeros((n_pairs, batch, d), jnp.float32),
+            "slstm_h": jnp.zeros((n_pairs, batch, d), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if fam == "hybrid":
+        from .ssm import _CONV_K, _HEAD_P, _mamba_dims
+
+        di, H, S = _mamba_dims(cfg.d_model, cfg)
+        n_app = int(np.ceil(cfg.n_layers / cfg.shared_attn_every))
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch, H, _HEAD_P, S), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, _CONV_K - 1, di + 2 * S), dt),
+            "attn_k": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "attn_v": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
+    """One decode step. tokens (B,) int32 -> (logits (B, V), new cache)."""
+    dt = _DT[cfg.dtype]
+    fam = cfg.family
+    pos = cache["pos"]
+    x = jnp.take(params["tok_emb"], tokens, axis=0)  # (B, d)
+    x = constrain(x, "dp", "tp")
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            pl, kc, vc = xs
+            a, kc, vc = attn_decode(
+                rms_norm(h, pl["ln1"]), pl["attn"], cfg, kc, vc, pos
+            )
+            h = h + a
+            if cfg.family == "moe":
+                f = moe_ref(rms_norm(h, pl["ln2"])[:, None, :], pl["moe"], cfg)[:, 0]
+            else:
+                from .layers import mlp
+                f = mlp(rms_norm(h, pl["ln2"])[:, None, :], pl["mlp"], cfg.act)[:, 0]
+            return h + f, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.n_layers if cfg.probe else 1,
+        )
+        new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+    elif fam == "audio":
+        from .layers import decode_attention_xla
+
+        def body(h, xs):
+            pl, kc, vc, xk, xv = xs
+            a, kc, vc = attn_decode(
+                rms_norm(h, pl["ln1"]), pl["attn"], cfg, kc, vc, pos, use_rope=True
+            )
+            h = h + a
+            # cross attention against the (precomputed) encoder memory
+            hd = cfg.hd
+            B = h.shape[0]
+            qx = (rms_norm(h, pl["ln_x"]) @ pl["xattn"]["w_q"]).reshape(
+                B, cfg.heads_eff, hd
+            )
+            ax = decode_attention_xla(qx, xk, xv, cache["mem_len"])
+            h = h + ax.reshape(B, cfg.heads_eff * hd) @ pl["xattn"]["w_o"]
+            from .layers import mlp
+            f = mlp(rms_norm(h, pl["ln2"])[:, None, :], pl["mlp"], cfg.act)[:, 0]
+            return h + f, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x,
+            (params["dec_blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+            unroll=cfg.n_layers if cfg.probe else 1,
+        )
+        new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+    elif fam == "ssm":
+        def body(h, xs):
+            pl, m_st, c_st, n_st, h_st = xs
+            y, m_new = mlstm_decode_step(
+                rms_norm(h, pl["ln_m"]), m_st, pl["mlstm"], cfg.n_heads
+            )
+            h = h + y
+            y, (c2, n2, h2) = slstm_decode_step(
+                rms_norm(h, pl["ln_s"]), (c_st, n_st, h_st), pl["slstm"]
+            )
+            return h + y, (m_new, c2, n2, h2)
+
+        x, (m_new, c_new, n_new, h_new) = jax.lax.scan(
+            body, x,
+            (params["pairs"], cache["mlstm"], cache["slstm_c"],
+             cache["slstm_n"], cache["slstm_h"]),
+            unroll=(cfg.n_layers // 2) if cfg.probe else 1,
+        )
+        new_cache = dict(
+            cache, mlstm=m_new, slstm_c=c_new, slstm_n=n_new, slstm_h=h_new,
+            pos=pos + 1,
+        )
+
+    elif fam == "hybrid":
+        # Python-unrolled: the shared-attn KV cache has one slot per
+        # *application point* (L/every slots, statically indexed), not per
+        # layer — 38 copies of a 32k cache would be a 5× memory regression.
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+        emb0 = x  # zamba2 concat-skip uses the original embedding
+        ssm_new, conv_new, ak_new, av_new = [], [], [], []
+        h = x
+        for i in range(cfg.n_layers):
+            pl = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            if i % every == 0:
+                slot = i // every
+                a_in = jnp.concatenate([h, emb0], axis=-1) @ shared["w_concat"]
+                a, ak, av = attn_decode(
+                    rms_norm(a_in, shared["ln"]), shared["attn"], cfg,
+                    cache["attn_k"][slot], cache["attn_v"][slot], pos,
+                )
+                h = h + a
+                ak_new.append(ak)
+                av_new.append(av)
+            y, st = mamba2_decode_step(
+                rms_norm(h, pl["ln"]),
+                {"ssm": cache["ssm"][i], "conv": cache["conv"][i]},
+                pl["mamba"], cfg,
+            )
+            h = h + y
+            ssm_new.append(st["ssm"])
+            conv_new.append(st["conv"])
+        x = h
+        new_cache = dict(
+            cache,
+            ssm=jnp.stack(ssm_new), conv=jnp.stack(conv_new),
+            attn_k=jnp.stack(ak_new), attn_v=jnp.stack(av_new), pos=pos + 1,
+        )
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return constrain(logits, "dp", "tp"), new_cache

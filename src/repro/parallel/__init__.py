@@ -1,0 +1,18 @@
+"""Distribution layer: logical-axis sharding rules and parallel context."""
+from .sharding import (
+    ParallelCtx,
+    constrain,
+    current_ctx,
+    maybe_axis,
+    param_pspecs,
+    parallel_ctx,
+)
+
+__all__ = [
+    "ParallelCtx",
+    "constrain",
+    "current_ctx",
+    "maybe_axis",
+    "param_pspecs",
+    "parallel_ctx",
+]

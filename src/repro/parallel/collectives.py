@@ -1,0 +1,54 @@
+"""Collective-communication helpers: hierarchical reductions, compression.
+
+`hierarchical_psum` — two-phase gradient reduction for multi-pod meshes:
+reduce-scatter inside the pod (fast ICI), all-reduce of the 1/N-sized shards
+across pods (slow DCN), all-gather back inside the pod. Cuts cross-pod
+traffic by the intra-pod world size — the standard topology-aware schedule
+for 1000+ node jobs.
+
+`compressed_pod_psum` — optional int8 gradient compression for the
+cross-pod hop (per-tensor absmax scaling): trades ~0.4% gradient SNR for 4×
+less DCN traffic. Used by the trainer when `--compress-pods` is set; error
+feedback is left to the caller (documented limitation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["hierarchical_psum", "compressed_pod_psum", "int8_encode", "int8_decode"]
+
+
+def int8_encode(x: jax.Array):
+    absmax = jnp.max(jnp.abs(x)) + 1e-12
+    q = jnp.clip(jnp.round(x / absmax * 127.0), -127, 127).astype(jnp.int8)
+    return q, absmax
+
+
+def int8_decode(q: jax.Array, absmax: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * (absmax / 127.0)).astype(dtype)
+
+
+def hierarchical_psum(x: jax.Array, pod_axis: str, inner_axis: str) -> jax.Array:
+    """psum over (pod, inner) with pod-traffic = 1/|inner| of the naive AR.
+
+    Must run inside shard_map with both axes present.
+    """
+    # phase 1: reduce-scatter within the pod (shards the tensor 1/N)
+    shard = jax.lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
+    # phase 2: small all-reduce across pods
+    shard = jax.lax.psum(shard, pod_axis)
+    # phase 3: all-gather within the pod
+    return jax.lax.all_gather(shard, inner_axis, axis=0, tiled=True)
+
+
+def compressed_pod_psum(x: jax.Array, pod_axis: str, inner_axis: str) -> jax.Array:
+    """Hierarchical psum with int8-compressed cross-pod traffic."""
+    shard = jax.lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
+    q, absmax = int8_encode(shard)
+    # all-gather int8 shards + scales across pods, decode, sum locally
+    qs = jax.lax.all_gather(q, pod_axis)            # (pods, ...)
+    scales = jax.lax.all_gather(absmax, pod_axis)   # (pods,)
+    dec = jax.vmap(int8_decode)(qs, scales)
+    shard = jnp.sum(dec, axis=0).astype(x.dtype)
+    return jax.lax.all_gather(shard, inner_axis, axis=0, tiled=True)

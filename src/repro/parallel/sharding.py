@@ -1,0 +1,175 @@
+"""Logical-axis sharding: rules, divisibility-aware mapping, param specs.
+
+Logical axes:
+  dp  — data parallel      -> ("pod", "data") when multi-pod, else ("data",)
+  tp  — tensor parallel    -> ("model",)
+  ep  — expert parallel    -> same mesh axes as dp (experts across pods+data)
+  sp  — sequence parallel  -> ("model",) (KV-cache sequence sharding, decode)
+
+Mapping is *divisibility-aware*: if a dimension doesn't divide the mesh axis
+size (e.g. 8 KV heads on a 16-wide model axis), the axis is dropped for that
+dimension and the tensor is replicated along it instead of erroring — the
+rule that makes one config system serve all 10 architectures.
+
+Parameter PartitionSpecs are derived from pytree paths by `param_pspecs`
+(rules keyed on leaf names, validated against leaf shapes).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParallelCtx",
+    "parallel_ctx",
+    "current_ctx",
+    "constrain",
+    "maybe_axis",
+    "param_pspecs",
+]
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    mesh: Optional[Mesh]
+    rules: dict
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and np.prod(list(self.mesh.shape.values())) > 1
+
+    def axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def axis_size(self, logical: str) -> int:
+        axes = self.rules.get(logical)
+        if not axes or self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def default_rules(mesh: Optional[Mesh]) -> dict:
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = ("model",) if "model" in names else ()
+    return {"dp": dp, "tp": tp, "ep": dp, "sp": tp}
+
+
+@contextlib.contextmanager
+def parallel_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ParallelCtx(mesh, rules or default_rules(mesh))
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def current_ctx() -> ParallelCtx:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx if ctx is not None else ParallelCtx(None, {})
+
+
+def maybe_axis(ctx: ParallelCtx, logical: Optional[str], dim: int):
+    """Mesh axes for `logical` if `dim` divides their product, else None."""
+    axes = ctx.axes(logical)
+    if not axes:
+        return None
+    size = int(np.prod([ctx.mesh.shape[a] for a in axes]))
+    if size <= 1 or dim % size != 0:
+        # try a prefix of the axes (e.g. ("pod","data") -> ("pod",))
+        for cut in range(len(axes) - 1, 0, -1):
+            sub = axes[:cut]
+            s = int(np.prod([ctx.mesh.shape[a] for a in sub]))
+            if s > 1 and dim % s == 0:
+                return sub
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    ctx = current_ctx()
+    if not ctx.active:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = P(*[maybe_axis(ctx, l, d) for l, d in zip(logical, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs from pytree paths
+# ---------------------------------------------------------------------------
+
+# leaf-name -> logical axes, aligned to the LAST ndim of the leaf
+# (leading layer-stack axes are replicated). None = replicated dim.
+_PARAM_RULES: dict[str, tuple] = {
+    "tok_emb": ("tp", None),          # (V, d) vocab-sharded
+    "pos_emb": (None, None),
+    "lm_head": (None, "tp"),          # (d, V)
+    "w_q": (None, "tp"),
+    "w_k": (None, "tp"),
+    "w_v": (None, "tp"),
+    "w_o": ("tp", None),
+    "w_gate": (None, "tp"),
+    "w_up": (None, "tp"),
+    "w_down": ("tp", None),
+    "w_router": ("tp", None),
+    # MoE experts: (E, d, F) / (E, F, d) — E over ep, contraction over tp
+    "moe_w_gate": ("ep", "tp", None),
+    "moe_w_up": ("ep", "tp", None),
+    "moe_w_down": ("ep", "tp", None),
+    # mamba / xlstm
+    "w_in": (None, "tp"),
+    "w_out": ("tp", None),
+    "conv_w": (None, "tp"),
+    "A_log": ("tp",),
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    "w_gates": (None, "tp"),
+    "w_x": (None, "tp"),
+    "w_h": (None, "tp"),
+    # concat-skip projections (hybrid)
+    "w_concat": (None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    parts = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    return str(parts[-1]), parts
+
+
+def param_pspecs(params_tree, ctx: Optional[ParallelCtx] = None):
+    """PartitionSpec pytree for a parameter pytree (shape-validated)."""
+    ctx = ctx or current_ctx()
+
+    def spec_for(path, leaf):
+        name, parts = _leaf_name(path)
+        # expert weights are nested under a 'moe' / 'experts' key
+        # (shared experts are plain MLPs — plain rules)
+        in_moe = any(str(p) in ("moe", "experts") for p in parts) and not any(
+            str(p) == "shared" for p in parts
+        )
+        key = f"moe_{name}" if in_moe and f"moe_{name}" in _PARAM_RULES else name
+        rule = _PARAM_RULES.get(key)
+        if rule is None or ctx.mesh is None:
+            return P()
+        shape = leaf.shape
+        ndim = len(shape)
+        k = len(rule)
+        logical = (None,) * (ndim - k) + tuple(rule) if ndim >= k else rule[-ndim:]
+        return P(*[maybe_axis(ctx, l, d) for l, d in zip(logical, shape)])
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)

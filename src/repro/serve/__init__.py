@@ -1,0 +1,4 @@
+"""Serving substrate: decode step, batching, KV-cache management."""
+from .serve_step import make_serve_step, make_prefill
+
+__all__ = ["make_serve_step", "make_prefill"]

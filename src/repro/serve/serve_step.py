@@ -1,0 +1,38 @@
+"""Serving steps: prefill (full-sequence forward) and per-token decode.
+
+`serve_step` advances every sequence in the batch by one token (greedy or
+temperature sampling) against the decode cache; `prefill` runs the
+full-sequence forward (the same code path as training, minus the loss) —
+prefill_32k lowers this, decode shapes lower `serve_step`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward
+from repro.models.config import ModelConfig
+
+__all__ = ["make_serve_step", "make_prefill"]
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    def serve_step(params, cache, tokens: jax.Array, rng: Optional[jax.Array] = None):
+        logits, cache = decode_step(params, cache, tokens, cfg)
+        if temperature > 0.0 and rng is not None:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch: dict):
+        return forward(params, batch, cfg)
+
+    return prefill

@@ -1,0 +1,28 @@
+"""Traffic-analysis substrate: traces, features, extraction, models, profiler.
+
+This package provides everything below the CATO Optimizer: the packet/flow
+data layer (synthetic but statistically structured traces for the paper's two
+use cases), the 67-candidate-feature registry with its shared-operation DAG,
+the JAX feature-extraction engine (jit-specialized per feature representation
+— the XLA analogue of the paper's cfg-macro conditional compilation), model
+training, and the Profiler that measures cost(x) and perf(x).
+"""
+from .synth import TrafficDataset, make_dataset
+from .features import FEATURES, FEATURE_NAMES, MINI_FEATURE_NAMES, OPS
+from .extraction import extract_features
+from .profiler import TrafficProfiler, ProfileResult
+from .models import train_traffic_model, macro_f1
+
+__all__ = [
+    "TrafficDataset",
+    "make_dataset",
+    "FEATURES",
+    "FEATURE_NAMES",
+    "MINI_FEATURE_NAMES",
+    "OPS",
+    "extract_features",
+    "TrafficProfiler",
+    "ProfileResult",
+    "train_traffic_model",
+    "macro_f1",
+]

@@ -1,0 +1,71 @@
+"""The generated end-to-end serving pipeline (paper §3.4, Pipeline Generation).
+
+`build_pipeline` takes a Pareto-optimal feature representation selected by
+the Optimizer plus its trained model and returns a single compiled callable
+
+    packets (dense flow tensors) -> class predictions
+
+containing exactly the extraction ops for (F, n) (jit specialization ==
+conditional compilation, DESIGN.md §3) fused with the dense-forest inference
+stage (the `tree_infer` Pallas kernel on TPU; interpret mode here). This is
+the deployable artifact — `examples/deploy_pipeline.py` drives it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import DenseForest
+from repro.core.search_space import FeatureRep
+from repro.kernels import ops
+
+from .extraction import extraction_fn
+from .synth import TrafficDataset
+
+__all__ = ["ServingPipeline", "build_pipeline"]
+
+
+@dataclasses.dataclass
+class ServingPipeline:
+    rep: FeatureRep
+    forest: DenseForest
+    _fn: Callable
+
+    def __call__(self, ds: TrafficDataset) -> np.ndarray:
+        """Predicted class ids for every flow in the batch."""
+        probs = self._fn(ds)
+        idx = np.asarray(jnp.argmax(probs, axis=1))
+        if self.forest.classes is not None:
+            return self.forest.classes[idx]
+        return idx
+
+    def probabilities(self, ds: TrafficDataset) -> np.ndarray:
+        return np.asarray(self._fn(ds))
+
+
+def build_pipeline(
+    rep: FeatureRep,
+    forest: DenseForest,
+    max_pkts: int,
+    *,
+    use_kernel: bool = True,
+) -> ServingPipeline:
+    extract = extraction_fn(rep.features, rep.depth, max_pkts)
+    feat_t = jnp.asarray(forest.feature)
+    thr_t = jnp.asarray(forest.threshold)
+    leaf_t = jnp.asarray(forest.leaf)
+    depth = forest.depth
+
+    def run(ds: TrafficDataset):
+        x = extract(ds)
+        if use_kernel:
+            return ops.forest_infer(x, feat_t, thr_t, leaf_t, depth)
+        from repro.kernels import ref
+
+        return ref.forest_infer_ref(x, feat_t, thr_t, leaf_t, depth)
+
+    return ServingPipeline(rep, forest, run)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpointing."""
+from .optimizer import AdamW, cosine_schedule
+from .train_step import TrainState, make_train_step, init_state
+
+__all__ = ["AdamW", "cosine_schedule", "TrainState", "make_train_step", "init_state"]

@@ -1,0 +1,150 @@
+"""Sharded checkpointing with atomic commit, resume, and elastic re-shard.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000123/
+        manifest.json        # step, leaf paths, shapes, dtypes, mesh shape
+        leaf_00000.npy ...   # one .npy per pytree leaf (host-gathered)
+      LATEST                 # atomically-renamed pointer file
+
+Fault-tolerance contract:
+  * `save` writes into `step_xxxx.tmp` and renames only after every leaf +
+    manifest hit disk — a crash mid-save never corrupts the latest
+    checkpoint (restart resumes from the previous LATEST).
+  * `restore` takes the *current* mesh/shardings: a checkpoint written on a
+    16×16 mesh restores onto 2×16×16 (or a degraded 15-host remnant mesh)
+    by resharding on load — this is the elastic-scaling path.
+  * `save_async` runs host gather + IO on a background thread so the train
+    loop overlaps checkpoint writes with the next step (one outstanding
+    save; joins before starting another).
+
+On a real multi-host cluster each host would write only its address-local
+shards; this single-process implementation gathers to host (documented
+simplification — the manifest format already carries per-leaf metadata).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves), "treedef": str(treedef)}
+    metas = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        metas.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest["leaves"] = metas
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic commit
+    latest_tmp = ckpt_dir / "LATEST.tmp"
+    latest_tmp.write_text(str(step))
+    latest_tmp.rename(ckpt_dir / "LATEST")
+    return final
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    p = pathlib.Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore(
+    ckpt_dir: str | pathlib.Path,
+    step: Optional[int],
+    template: Any,
+    shardings: Optional[Any] = None,
+) -> Any:
+    """Restore into the structure of `template`, placed per `shardings`.
+
+    `shardings` may target a different mesh than the one that saved —
+    resharding happens in device_put (elastic restart path).
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no LATEST under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    t_leaves, treedef = _flatten(template)
+    assert manifest["n_leaves"] == len(t_leaves), "pytree structure changed"
+    s_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(t_leaves)
+    )
+    out = []
+    for i, (tl, sh) in enumerate(zip(t_leaves, s_leaves)):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        arr = arr.astype(tl.dtype) if hasattr(tl, "dtype") else arr
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class Checkpointer:
+    """Async checkpointer with a single outstanding background save."""
+
+    def __init__(self, ckpt_dir: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()
+        # device_get on the caller thread (consistent snapshot), IO off-thread
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        snapshot = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            save(self.dir, step, snapshot)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+
+def save_async(ckpt: Checkpointer, step: int, tree: Any):
+    ckpt.save_async(step, tree)

@@ -1,0 +1,133 @@
+"""AdamW with global-norm clipping and ZeRO-1 optimizer-state sharding.
+
+No optax in this environment — implemented directly. Moment tensors are
+float32 regardless of parameter dtype. Under a mesh, `zero1_pspecs` extends
+each parameter's PartitionSpec with the data-parallel axes on the first
+still-replicated, divisible dimension: optimizer state (and its update
+math) is then sharded across DP ranks, and GSPMD materializes the classic
+ZeRO-1 reduce-scatter(grads) → shard-update → all-gather(params) schedule.
+This is what makes the yi-34b / kimi-k2 optimizer states fit (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel import ParallelCtx, current_ctx
+
+__all__ = ["AdamW", "cosine_schedule", "zero1_pspecs"]
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def zero1_pspecs(param_specs, params_shapes, ctx: Optional[ParallelCtx] = None):
+    """Extend param specs with DP axes for optimizer-state sharding."""
+    ctx = ctx or current_ctx()
+    dp = ctx.axes("dp") if ctx.mesh is not None else None
+    if not dp:
+        return param_specs
+    dp_size = int(np.prod([ctx.mesh.shape[a] for a in dp]))
+
+    def extend(spec: P, leaf):
+        shape = leaf.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        used = set()
+        for ax in parts:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a is not None:
+                    used.add(a)
+        # only mesh axes not already consumed by the param sharding (e.g.
+        # expert weights already use the dp axes for expert parallelism)
+        free = tuple(a for a in dp if a not in used)
+        if not free:
+            return P(*parts)
+        size = int(np.prod([ctx.mesh.shape[a] for a in free]))
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and size > 1 and dim % size == 0 and dim >= size:
+                parts[i] = free if len(free) > 1 else free[0]
+                return P(*parts)
+        return P(*parts)  # nothing divisible: stays param-sharded only
+
+    return jax.tree_util.tree_map(
+        extend, param_specs, params_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = True
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def opt_state_pspecs(self, param_specs, params_shapes):
+        base = (
+            zero1_pspecs(param_specs, params_shapes) if self.zero1 else param_specs
+        )
+        return {"m": base, "v": base, "step": P()}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+
+        # global-norm clip
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)
+        )
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + \
+                self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr,
+        }

@@ -1,0 +1,98 @@
+"""Histogram forest trainer: correctness + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.forest import (
+    DenseForest, forest_apply_np, forest_predict_class, forest_predict_value,
+    train_forest, train_tree,
+)
+
+
+def test_tree_fits_separable(rng):
+    X = rng.standard_normal((2000, 8)).astype(np.float32)
+    y = (X[:, 2] > 0.3).astype(int)
+    t = train_tree(X[:1500], y[:1500], max_depth=4)
+    acc = (forest_predict_class(t, X[1500:]) == y[1500:]).mean()
+    assert acc > 0.97
+
+
+def test_forest_beats_chance_multiclass(rng):
+    K = 6
+    centers = rng.normal(0, 3, (K, 10))
+    y = rng.integers(0, K, 3000)
+    X = (centers[y] + rng.normal(0, 1.0, (3000, 10))).astype(np.float32)
+    f = train_forest(X[:2400], y[:2400], n_trees=15, max_depth=8)
+    acc = (forest_predict_class(f, X[2400:]) == y[2400:]).mean()
+    assert acc > 0.9
+
+
+def test_regression_r2(rng):
+    X = rng.standard_normal((2000, 6)).astype(np.float32)
+    y = 2 * X[:, 0] - X[:, 1] ** 2
+    f = train_forest(X[:1600], y[:1600], n_trees=20, max_depth=8,
+                     classification=False, max_features=None)
+    pred = forest_predict_value(f, X[1600:])
+    r2 = 1 - np.mean((pred - y[1600:]) ** 2) / np.var(y[1600:])
+    assert r2 > 0.8
+
+
+def test_dense_layout_invariants(rng):
+    X = rng.standard_normal((500, 5)).astype(np.float32)
+    y = rng.integers(0, 3, 500)
+    f = train_forest(X, y, n_trees=5, max_depth=6)
+    assert f.feature.shape == (5, 2 ** 6 - 1)
+    assert f.leaf.shape == (5, 2 ** 6, 3)
+    # features in range; pass-through slots have +inf thresholds
+    assert (f.feature >= 0).all() and (f.feature < 5).all()
+    live = np.isfinite(f.threshold)
+    assert live.any()
+    # class histograms in leaves are distributions (or a fill value)
+    sums = f.leaf.sum(-1)
+    assert np.all(sums > 0.99)
+
+
+def test_probability_output_normalized(rng):
+    X = rng.standard_normal((400, 4)).astype(np.float32)
+    y = rng.integers(0, 4, 400)
+    f = train_forest(X, y, n_trees=8, max_depth=5)
+    probs = forest_apply_np(f, X)
+    np.testing.assert_allclose(probs.sum(1), 1.0, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(50, 300),
+    f_dim=st.integers(2, 8),
+    k=st.integers(2, 5),
+    depth=st.integers(2, 6),
+    seed=st.integers(0, 1000),
+)
+def test_property_training_never_crashes_and_predicts_valid_classes(
+    n, f_dim, k, depth, seed
+):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, f_dim)).astype(np.float32)
+    y = rng.integers(0, k, n)
+    f = train_forest(X, y, n_trees=3, max_depth=depth,
+                     rng=np.random.default_rng(seed))
+    pred = forest_predict_class(f, X)
+    assert set(np.unique(pred)) <= set(np.unique(y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_property_constant_labels_predict_constant(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((100, 3)).astype(np.float32)
+    y = np.full(100, 7)
+    f = train_forest(X, y, n_trees=3, max_depth=4)
+    assert (forest_predict_class(f, X) == 7).all()
+
+
+def test_feature_importance_identifies_signal(rng):
+    X = rng.standard_normal((2000, 10)).astype(np.float32)
+    y = (X[:, 4] + 0.3 * X[:, 7] > 0).astype(int)
+    f = train_forest(X, y, n_trees=10, max_depth=6, max_features=None)
+    imp = f.feature_importance()
+    assert imp[4] == imp.max()

@@ -1,0 +1,53 @@
+"""HLO text analyzer unit tests (pure parsing — no compilation needed)."""
+import numpy as np
+
+from repro.launch.hlo_stats import hlo_stats
+
+HLO = """
+HloModule jit_f
+
+%fused_computation (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  ROOT %neg = f32[128,64]{1,0} negate(%p0)
+}
+
+%wide.body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%c, %y)
+}
+
+ENTRY %main (a: f32[128,256], b: f32[256,64]) -> f32[128,64] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %b = f32[256,64]{1,0} parameter(1)
+  %d = f32[128,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,64]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %ag = f32[128,128]{1,0} all-gather(%ar), dimensions={1}
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%wide.body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[128,64]{1,0} fusion(%ar), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_dot_flops_exact():
+    st = hlo_stats(HLO)
+    # entry dot: 2*128*64*256 ; while-body dot: 2*8*8*8 * trip 10
+    want = 2 * 128 * 64 * 256 + 10 * 2 * 8 * 8 * 8
+    assert st["flops"] == want, (st["flops"], want)
+    assert st["n_dots"] == 2
+
+
+def test_collectives_counted_with_allreduce_doubling():
+    st = hlo_stats(HLO)
+    ar = st["collectives"]["all-reduce"]
+    ag = st["collectives"]["all-gather"]
+    assert ar == 2 * 128 * 64 * 4   # payload x2
+    assert ag == 128 * 128 * 4      # gathered result size
+    assert st["collectives"]["count"] == 2
+
+
+def test_bytes_traffic_positive_and_sane():
+    st = hlo_stats(HLO)
+    assert st["bytes"] > 128 * 256 * 4  # at least the big dot's operands

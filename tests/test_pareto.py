@@ -1,0 +1,85 @@
+"""Pareto / hypervolume invariants (hypothesis property tests)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.pareto import (
+    hvi_ratio, hypervolume_2d, normalize_objectives, pareto_front, pareto_mask,
+)
+
+pts = hnp.arrays(
+    np.float64, st.tuples(st.integers(1, 60), st.just(2)),
+    elements=st.floats(0, 1, allow_nan=False),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(Y=pts)
+def test_front_is_nondominated(Y):
+    P = pareto_front(Y)
+    for i in range(len(P)):
+        dom = np.all(P <= P[i], axis=1) & np.any(P < P[i], axis=1)
+        assert not dom.any()
+
+
+@settings(max_examples=50, deadline=None)
+@given(Y=pts)
+def test_front_members_come_from_input(Y):
+    P = pareto_front(Y)
+    for p in P:
+        assert np.any(np.all(np.isclose(Y, p), axis=1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(Y=pts)
+def test_hv_of_front_equals_hv_of_set(Y):
+    assert np.isclose(hypervolume_2d(pareto_front(Y)), hypervolume_2d(Y))
+
+
+@settings(max_examples=50, deadline=None)
+@given(Y=pts, extra=pts)
+def test_hv_monotone_under_union(Y, extra):
+    both = np.concatenate([Y, extra])
+    assert hypervolume_2d(both) >= hypervolume_2d(Y) - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(Y=pts)
+def test_hv_bounded_by_ref_box(Y):
+    hv = hypervolume_2d(Y, ref=(1.0, 1.0))
+    assert 0.0 <= hv <= 1.0 + 1e-12
+
+
+def test_hv_known_value():
+    # single point at (0.5, 0.5) with ref (1,1): area 0.25
+    assert np.isclose(hypervolume_2d(np.array([[0.5, 0.5]])), 0.25)
+    # staircase
+    front = np.array([[0.2, 0.8], [0.5, 0.4], [0.9, 0.1]])
+    hv = (1 - 0.2) * (1 - 0.8) + (1 - 0.5) * (0.8 - 0.4) + (1 - 0.9) * (0.4 - 0.1)
+    assert np.isclose(hypervolume_2d(front), hv)
+
+
+@settings(max_examples=30, deadline=None)
+@given(Y=pts)
+def test_hvi_ratio_self_is_one(Y):
+    if hypervolume_2d(*normalize_objectives(Y)[:1]) > 0:
+        assert np.isclose(hvi_ratio(Y, Y), 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(Y=pts)
+def test_subset_hvi_at_most_one(Y):
+    sub = Y[: max(1, len(Y) // 2)]
+    assert hvi_ratio(sub, Y) <= 1.0 + 1e-9
+
+
+def test_hvi_contribution_matches_hv_delta(rng):
+    from repro.core.acquisition import hvi_contribution
+
+    front = pareto_front(rng.random((20, 2)))
+    cands = rng.random((50, 2))
+    contrib = hvi_contribution(front, cands)
+    base = hypervolume_2d(front)
+    for c, pt in zip(contrib, cands):
+        truth = hypervolume_2d(np.vstack([front, pt])) - base
+        assert np.isclose(c, truth, atol=1e-9), (c, truth, pt)

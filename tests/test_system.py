@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the paper's system (CATO on traffic).
+
+The integration contract, reproduced at mini scale:
+  1. CATO's Pareto front on the real profiler dominates fixed-depth
+     baselines (paper Fig. 5 behaviour);
+  2. the estimated front approaches the exhaustive ground truth (Fig. 6);
+  3. the deployed pipeline built from a Pareto point reproduces the
+     profiler's measured F1 (validation property, §3.4).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CatoOptimizer, FeatureRep, SearchSpace, build_priors, hvi_ratio,
+)
+from repro.core.baselines import run_random_search, select_all
+from repro.traffic import (
+    MINI_FEATURE_NAMES, TrafficProfiler, extract_features, make_dataset,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("iot-class", n_flows=1200, max_pkts=64, seed=5)
+    prof = TrafficProfiler(ds, MINI_FEATURE_NAMES, model="rf-fast",
+                           cost_metric="exec_time", cost_mode="modeled", seed=0)
+    space = SearchSpace(MINI_FEATURE_NAMES, max_depth=24)
+    X = extract_features(ds, MINI_FEATURE_NAMES, 24)
+    priors = build_priors(space, X, ds.label)
+    return ds, prof, space, priors
+
+
+def test_cato_dominates_fixed_depth_all_features(setup):
+    ds, prof, space, priors = setup
+    res = CatoOptimizer(space, prof, priors, seed=0).run(25)
+    front = res.pareto_observations()
+    assert len(front) >= 2
+
+    base = prof(select_all(space, 10))
+    # some Pareto point should approach the ALL@10 baseline from below on
+    # cost without giving up much F1 (tolerances sized for 25 iterations)
+    assert any(
+        o.cost <= base.cost * 1.05 and o.perf >= base.perf - 0.06
+        for o in front
+    )
+
+
+def test_cato_front_quality_vs_ground_truth(setup):
+    """Exhaustively enumerate a small space; CATO@20% samples gets close."""
+    ds, prof, space, priors = setup
+    small = SearchSpace(MINI_FEATURE_NAMES[:4], max_depth=8)
+    Xs = extract_features(ds, small.feature_names, 8)
+    pri = build_priors(small, Xs, ds.label)
+    Yt = np.array(
+        [[prof(x).cost, -prof(x).perf] for x in small.enumerate_all()]
+    )
+    n_budget = max(10, int(0.2 * len(Yt)))
+    res = CatoOptimizer(small, prof, pri, seed=1).run(n_budget)
+    Yb = np.array([o.objectives for o in res.observations])
+    assert hvi_ratio(Yb, Yt) > 0.8
+
+
+def test_pipeline_validates_profiler_f1(setup):
+    from repro.traffic.models import macro_f1, train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+
+    ds, prof, space, priors = setup
+    rep = FeatureRep(MINI_FEATURE_NAMES, 12)
+    r = prof(rep)
+    # rebuild the deployable pipeline exactly as the Profiler measured it
+    Xtr, _ = prof.columns(rep)
+    forest, _ = train_traffic_model(Xtr, prof.train_ds.label, model="rf-fast",
+                                    seed=0)
+    pipe = build_pipeline(rep, forest, ds.max_pkts)
+    pred = pipe(prof.test_ds)
+    f1 = macro_f1(prof.test_ds.label, pred)
+    assert abs(f1 - r.perf) < 1e-6, "deployed pipeline must match measured perf"
