@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench-runtime example-stream
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# fast perf datapoint: measured zero-loss throughput -> BENCH_runtime.json
+bench-smoke:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke
+
+# full runtime benchmark (Fig. 5c, measured)
+bench-runtime:
+	$(PYTHON) -m benchmarks.bench_runtime
+
+example-stream:
+	$(PYTHON) examples/serve_stream.py

@@ -1,0 +1,68 @@
+"""Streaming-runtime benchmark: measured zero-loss throughput (Fig. 5c).
+
+Drives `fig5_serving_perf.run_replayed` — CATO Pareto points vs the
+ALL/MI10/RFE10 baselines, each measured by offered-load replay through
+`repro.serve.runtime` with bisection to the highest zero-drop rate — and
+records the result as a machine-readable `BENCH_runtime.json` datapoint at
+the repo root so the perf trajectory is tracked across PRs.
+
+    python -m benchmarks.bench_runtime --smoke    # CI-sized, ~a minute
+    python -m benchmarks.bench_runtime            # full figure
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
+
+
+def run(smoke: bool = False, use_case: str = "app", verbose: bool = True):
+    from .fig5_serving_perf import REPLAYED_HEADER as HEADER, run_replayed
+
+    cfg = dict(
+        use_case=use_case,
+        iters=8 if smoke else 25,
+        n_flows=600 if smoke else 1500,
+        max_pkts=32 if smoke else 48,
+        bisect_iters=7 if smoke else 10,
+        cost_mode="measured",
+        verbose=verbose,
+    )
+    t0 = time.perf_counter()
+    rows = run_replayed(**cfg)
+    wall_s = time.perf_counter() - t0
+
+    recs = [dict(zip(HEADER, r)) for r in rows]
+    cato_best = max((r["zero_loss_gbps"] for r in recs if r["method"] == "CATO"),
+                    default=0.0)
+    gains = {
+        r["method"]: round(cato_best / r["zero_loss_gbps"], 3)
+        for r in recs
+        if r["method"] != "CATO" and r["zero_loss_gbps"] > 0
+    }
+    out = {
+        "bench": "runtime_zero_loss",
+        "smoke": smoke,
+        "config": {k: v for k, v in cfg.items() if k != "verbose"},
+        "wall_s": round(wall_s, 2),
+        "rows": recs,
+        "cato_best_gbps": cato_best,
+        "gain_vs_baseline": gains,
+        "zero_drops_at_reported_rate": all(r["drops"] == 0 for r in recs),
+    }
+    BENCH_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    if verbose:
+        print(f"# wrote {BENCH_PATH} (wall {wall_s:.1f}s, "
+              f"CATO best {cato_best:.3f} Gbps, gains {gains})")
+    return out
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true", help="CI-sized run")
+    p.add_argument("--use-case", default="app", choices=("app", "iot"))
+    args = p.parse_args()
+    run(smoke=args.smoke, use_case=args.use_case)

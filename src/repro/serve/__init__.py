@@ -1,4 +1,43 @@
-"""Serving substrate: decode step, batching, KV-cache management."""
+"""Serving substrate.
+
+Two serving stacks live here:
+
+- LM serving steps (`serve_step`): prefill (full-sequence forward) and
+  per-token decode against the KV cache — consumed by `launch.specs` when
+  assembling decode-shape cells.
+- the streaming traffic runtime (`runtime/`): online flow table,
+  micro-batched shape-bucketed dispatch, and offered-load replay with
+  zero-loss throughput measurement — the continuous-serving layer over the
+  jit-specialized CATO pipelines (DESIGN.md §6).
+
+The runtime re-exports resolve lazily (PEP 562): `from repro.serve import
+make_serve_step` must not drag in the traffic/extraction stack, and the
+traffic package must stay importable without touching this one.
+"""
 from .serve_step import make_serve_step, make_prefill
 
-__all__ = ["make_serve_step", "make_prefill"]
+_RUNTIME_EXPORTS = (
+    "BatchRecord",
+    "FlowStatus",
+    "FlowTable",
+    "LatencyHistogram",
+    "MicroBatchDispatcher",
+    "PacketStream",
+    "ReplayStats",
+    "RuntimeMetrics",
+    "ServiceModel",
+    "StreamingRuntime",
+    "find_zero_loss_rate",
+    "replay",
+    "tuple_hash64",
+)
+
+__all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _RUNTIME_EXPORTS:
+        from . import runtime
+
+        return getattr(runtime, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

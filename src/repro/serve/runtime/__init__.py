@@ -1,0 +1,38 @@
+"""Streaming serving runtime: online flow table, micro-batched dispatch,
+offered-load replay, and zero-loss throughput measurement (DESIGN.md §6).
+
+Turns the batch `ServingPipeline` into a continuous online service:
+
+    packets -> FlowTable -> MicroBatchDispatcher -> jit pipeline -> labels
+
+with `replay`/`find_zero_loss_rate` reproducing the paper's Fig. 5c
+zero-loss throughput as a measurement over live packet streams rather than
+a modeled drain rate.
+"""
+from .dispatch import BatchRecord, MicroBatchDispatcher, StreamingRuntime, next_bucket
+from .flow_table import FlowStatus, FlowTable, tuple_hash64
+from .metrics import LatencyHistogram, RuntimeMetrics
+from .replay import (
+    PacketStream,
+    ReplayStats,
+    ServiceModel,
+    find_zero_loss_rate,
+    replay,
+)
+
+__all__ = [
+    "BatchRecord",
+    "FlowStatus",
+    "FlowTable",
+    "LatencyHistogram",
+    "MicroBatchDispatcher",
+    "PacketStream",
+    "ReplayStats",
+    "RuntimeMetrics",
+    "ServiceModel",
+    "StreamingRuntime",
+    "find_zero_loss_rate",
+    "next_bucket",
+    "replay",
+    "tuple_hash64",
+]

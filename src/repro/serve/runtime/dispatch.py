@@ -1,0 +1,269 @@
+"""Micro-batched dispatch: shape-bucketed, double-buffered (DESIGN.md §6).
+
+InferLine's lesson applies unchanged to traffic pipelines: the model is not
+the serving system — between the flow table and the jit-specialized
+pipeline there has to be a queueing/batching layer with explicit policies.
+
+Two policies matter here:
+
+- **Shape bucketing.** ``jax.jit`` specializes on input *shape*; if every
+  micro-batch were submitted at its natural size, a replay would compile a
+  fresh XLA executable per distinct batch size. Batches are therefore
+  padded up to power-of-two buckets in ``[min_bucket, max_batch]``: at most
+  ``log2(max_batch / min_bucket) + 1`` executables exist over any run, and
+  every one is compiled at most once (jit specialization as conditional
+  compilation, DESIGN.md §3 — here specialized over *batch geometry*
+  instead of feature sets). Padding rows have ``flow_len == 0`` so every
+  masked reduction sees an empty flow; their predictions are discarded.
+
+- **Double-buffered async submit.** ``predict_async`` returns an
+  unresolved device array; the dispatcher keeps up to ``max_pending``
+  batches in flight and only blocks (``finalize``) when the window is
+  full. Extraction + inference of batch *k* overlap accumulation of batch
+  *k+1* — the ingest thread never waits for the accelerator unless it is
+  more than a full batch ahead.
+
+Flushes trigger on depth (``max_batch`` flows ready), on timeout (oldest
+ready flow waited ``flush_timeout_s``), or on drain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.traffic.pipeline import ServingPipeline
+from repro.traffic.synth import TrafficDataset
+
+from .flow_table import FlowStatus, FlowTable
+from .metrics import RuntimeMetrics
+
+__all__ = ["BatchRecord", "MicroBatchDispatcher", "StreamingRuntime", "next_bucket"]
+
+
+def next_bucket(n: int, min_bucket: int, max_batch: int) -> int:
+    """Smallest power-of-two >= n, clamped to [min_bucket, max_batch]."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    """One flushed micro-batch; `preds` is filled when the batch resolves."""
+
+    flow_ids: np.ndarray       # (n_real,) external flow ids
+    ready_ts: np.ndarray       # (n_real,) when each flow became dispatchable
+    flush_ts: float            # when the batch left the queue
+    bucket: int                # padded batch size actually submitted
+    n_real: int
+    reason: str                # "full" | "timeout" | "drain"
+    probs: Optional[object] = None   # in-flight device array
+    preds: Optional[np.ndarray] = None
+
+
+class MicroBatchDispatcher:
+    def __init__(
+        self,
+        table: FlowTable,
+        pipeline: ServingPipeline,
+        *,
+        max_batch: int = 256,
+        min_bucket: int = 8,
+        flush_timeout_s: float = 0.05,
+        max_pending: int = 2,
+        execute: bool = True,
+        metrics: RuntimeMetrics | None = None,
+    ):
+        if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
+            raise ValueError("max_batch and min_bucket must be powers of two")
+        self.table = table
+        self.pipeline = pipeline
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.flush_timeout_s = flush_timeout_s
+        self.max_pending = max_pending
+        self.execute = execute
+        self.metrics = metrics if metrics is not None else table.metrics
+        self._queue: deque[tuple[int, float]] = deque()  # (slot, ready_ts)
+        self._pending: deque[BatchRecord] = deque()
+        self.results: dict[int, object] = {}  # flow_id -> predicted class
+        self.records: list[BatchRecord] = []
+
+    # -- queue ---------------------------------------------------------------
+
+    def enqueue(self, slot: int, ready_ts: float) -> None:
+        self._queue.append((slot, ready_ts))
+
+    def maybe_flush(self, now: float) -> list[BatchRecord]:
+        """Flush every full batch, then at most one timeout batch."""
+        out = []
+        while len(self._queue) >= self.max_batch:
+            out.append(self._flush(now, "full"))
+        if self._queue and now - self._queue[0][1] >= self.flush_timeout_s:
+            out.append(self._flush(now, "timeout"))
+        return out
+
+    def drain(self, now: float) -> list[BatchRecord]:
+        out = []
+        while self._queue:
+            out.append(self._flush(now, "drain"))
+        while self._pending:
+            self._resolve(self._pending.popleft())
+        return out
+
+    # -- flush mechanics -----------------------------------------------------
+
+    def _flush(self, now: float, reason: str) -> BatchRecord:
+        n = min(len(self._queue), self.max_batch)
+        slots = np.empty(n, dtype=np.int64)
+        ready = np.empty(n, dtype=np.float64)
+        for i in range(n):
+            slots[i], ready[i] = self._queue.popleft()
+        bucket = next_bucket(n, self.min_bucket, self.max_batch)
+
+        m = self.metrics
+        m.batches += 1
+        m.batch_occupancy.append(n / bucket)
+        m.shapes_seen.add((bucket, self.table.pkt_depth))
+        m.flows_predicted += n
+        if reason == "full":
+            m.flushes_full += 1
+        elif reason == "timeout":
+            m.flushes_timeout += 1
+        else:
+            m.flushes_drain += 1
+
+        rec = BatchRecord(
+            flow_ids=self.table.ctrl["flow_id"][slots].copy(),
+            ready_ts=ready,
+            flush_ts=now,
+            bucket=bucket,
+            n_real=n,
+            reason=reason,
+        )
+        if self.execute:
+            ds = self.gather(slots, bucket)
+            # retire the oldest in-flight batch before submitting a new one:
+            # at most `max_pending` batches overlap ingest at any time
+            while len(self._pending) >= self.max_pending:
+                self._resolve(self._pending.popleft())
+            rec.probs = self.pipeline.predict_async(ds)
+            self._pending.append(rec)
+        # slots are safe to reuse once gathered (or immediately in timing-only
+        # mode): finished flows recycle now, the rest become PREDICTED
+        self.table.mark_predicted(slots)
+        self.records.append(rec)
+        return rec
+
+    def gather(self, slots: np.ndarray, bucket: int) -> TrafficDataset:
+        """Copy table rows into a padded, dense TrafficDataset batch."""
+        t = self.table
+        n = len(slots)
+        P = t.pkt_depth
+
+        def pad2(a, dtype):
+            out = np.zeros((bucket, P), dtype=dtype)
+            out[:n] = a[slots]
+            return out
+
+        flags = np.zeros((bucket, P, 8), dtype=np.uint8)
+        flags[:n] = t.flags[slots]
+        meta = lambda a: np.pad(a[slots].astype(np.float32), (0, bucket - n))
+        return TrafficDataset(
+            ts=pad2(t.ts, np.float32),
+            size=pad2(t.size, np.float32),
+            direction=pad2(t.direction, np.uint8),
+            ttl=pad2(t.ttl, np.float32),
+            winsize=pad2(t.winsize, np.float32),
+            flags=flags,
+            flow_len=np.pad(t.ctrl["count"][slots], (0, bucket - n)).astype(np.int32),
+            proto=meta(t.proto),
+            s_port=meta(t.s_port),
+            d_port=meta(t.d_port),
+            label=np.zeros(bucket, dtype=np.int32),
+            name="stream-batch",
+        )
+
+    def _resolve(self, rec: BatchRecord) -> None:
+        preds = self.pipeline.finalize(rec.probs)[: rec.n_real]
+        rec.preds = preds
+        rec.probs = None
+        for fid, p in zip(rec.flow_ids, preds):
+            # first prediction wins: a re-tenancy of the same 5-tuple (e.g.
+            # a stray final ACK after close) must not overwrite the real
+            # classification with a tail-fragment one
+            if int(fid) in self.results:
+                self.metrics.duplicate_predictions += 1
+            else:
+                self.results[int(fid)] = p
+
+
+class StreamingRuntime:
+    """Facade: flow table + dispatcher behind a per-packet ingest call.
+
+    Owns no clock — callers pass `now` (wall time in live use, virtual time
+    under the replay driver), which is what makes zero-loss search
+    deterministic and replayable.
+    """
+
+    def __init__(
+        self,
+        pipeline: ServingPipeline,
+        *,
+        capacity: int = 2048,
+        max_batch: int = 256,
+        min_bucket: int = 8,
+        flush_timeout_s: float = 0.05,
+        idle_timeout_s: float = 60.0,
+        max_pending: int = 2,
+        execute: bool = True,
+        pkt_depth: Optional[int] = None,
+    ):
+        self.pipeline = pipeline
+        depth = pkt_depth if pkt_depth is not None else pipeline.rep.depth
+        self.metrics = RuntimeMetrics()
+        self.table = FlowTable(
+            capacity, depth, idle_timeout_s=idle_timeout_s, metrics=self.metrics
+        )
+        self.dispatcher = MicroBatchDispatcher(
+            self.table,
+            pipeline,
+            max_batch=max_batch,
+            min_bucket=min_bucket,
+            flush_timeout_s=flush_timeout_s,
+            max_pending=max_pending,
+            execute=execute,
+            metrics=self.metrics,
+        )
+
+    @property
+    def results(self) -> dict:
+        return self.dispatcher.results
+
+    def ingest_packet(
+        self, key, now, rel_ts, size, direction, ttl, winsize, flags_byte,
+        proto, s_port, d_port, flow_id, fin,
+    ) -> tuple[FlowStatus, list[BatchRecord]]:
+        status, slot = self.table.observe(
+            key, now, rel_ts, size, direction, ttl, winsize, flags_byte,
+            proto, s_port, d_port, flow_id, fin,
+        )
+        if status in (FlowStatus.READY, FlowStatus.READY_EOF):
+            self.dispatcher.enqueue(slot, now)
+        return status, self.dispatcher.maybe_flush(now)
+
+    def poll(self, now: float) -> list[BatchRecord]:
+        """Periodic maintenance: idle eviction + timeout flushes."""
+        for slot in self.table.evict_idle(now):
+            self.dispatcher.enqueue(slot, now)
+        return self.dispatcher.maybe_flush(now)
+
+    def drain(self, now: float) -> list[BatchRecord]:
+        """End of stream: classify every flow still holding packets."""
+        for slot in self.table.flush_all(now):
+            self.dispatcher.enqueue(slot, now)
+        return self.dispatcher.drain(now)

@@ -1,0 +1,337 @@
+"""Online flow table: preallocated dense per-flow packet state (DESIGN.md §6).
+
+Traffic Refinery's measurement holds here too: per-flow state management is
+the dominant systems cost of a network-ML pipeline, so the table is laid
+out for the extractor, not for the tracker. All packet payload lives in
+preallocated dense ``(capacity, pkt_depth)`` arrays — the *same* layout the
+batch ``TrafficDataset`` uses (DESIGN.md §3) — so dispatch is a row gather
+with zero per-flow reshaping, and the jit-specialized extraction executable
+runs unchanged on streaming state.
+
+Components:
+
+- a NumPy structured *control block* (key, state, counts, timestamps) —
+  one row per slot;
+- dense payload arrays (ts/size/direction/ttl/winsize/flags + 5-tuple
+  metadata) capped at ``pkt_depth`` packets: CATO classifies at connection
+  depth n, so packets past n never touch the payload, only the tracker;
+- an open-addressed hash index (linear probing, stored-key verification,
+  tombstone deletion) mapping 64-bit 5-tuple hashes to slots;
+- a free list for O(1) slot recycling, idle-timeout eviction, and overflow
+  (drop) accounting when the preallocated capacity is exhausted.
+
+Timestamps stored in the payload are *flow-relative* float32 (first packet
+= 0.0): absolute epoch seconds in float32 would lose the microsecond bits
+the IAT features are made of.
+"""
+from __future__ import annotations
+
+import enum
+
+import numpy as np
+
+from repro.serve.runtime.metrics import RuntimeMetrics
+
+__all__ = ["FlowStatus", "FlowTable", "tuple_hash64"]
+
+
+_CTRL_DTYPE = np.dtype([
+    ("key", np.uint64),        # 5-tuple hash (verified on probe)
+    ("state", np.uint8),       # FREE / ACTIVE / READY / PREDICTED
+    ("fin_mask", np.uint8),    # bit per direction; flow closed when == 0b11
+    ("count", np.int32),       # packets accumulated into the payload (<= depth)
+    ("seen", np.int32),        # all packets observed for the flow
+    ("first_ts", np.float64),  # absolute arrival of first packet
+    ("last_ts", np.float64),   # absolute arrival of latest packet
+    ("ready_ts", np.float64),  # when the flow was queued for dispatch
+    ("flow_id", np.int32),     # external id (dataset row) for result join
+])
+
+
+class FlowStatus(enum.IntEnum):
+    """Outcome of `FlowTable.observe` for one packet."""
+
+    TRACKED = 0        # payload or tracker updated, nothing to dispatch
+    READY = 1          # flow just reached depth n -> queue for inference
+    READY_EOF = 2      # flow closed (FIN both ways) before depth n -> queue
+    CLOSED = 3         # close completed on a predicted flow -> slot recycled
+    DROPPED = 4        # table full: packet of an untracked flow lost
+
+
+# (256, 8) lookup: packed TCP-flag byte -> FLAG_NAMES-ordered uint8 vector.
+_FLAG_LUT = ((np.arange(256, dtype=np.uint16)[:, None] >> np.arange(8)) & 1).astype(
+    np.uint8
+)
+
+
+_M64 = 0xFFFFFFFFFFFFFFFF
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = (x ^ (x >> 30)) * 0xBF58476D1CE4E5B9 & _M64
+    x = (x ^ (x >> 27)) * 0x94D049BB133111EB & _M64
+    return x ^ (x >> 31)
+
+
+def tuple_hash64(s_ip: int, d_ip: int, s_port: int, d_port: int, proto: int) -> int:
+    """64-bit 5-tuple hash: splitmix64 chained over two lossless words.
+
+    Each word packs its fields without overlap (ips: 32+32 bits; ports +
+    proto: 16+16+8 bits), so distinct 5-tuples collide only at the generic
+    ~2^-64 hash-collision rate — never structurally.
+    """
+    w1 = ((s_ip & 0xFFFFFFFF) << 32) | (d_ip & 0xFFFFFFFF)
+    w2 = ((proto & 0xFF) << 32) | ((s_port & 0xFFFF) << 16) | (d_port & 0xFFFF)
+    h = _splitmix64(_splitmix64(w1) ^ w2)
+    return h or 1  # 0 is reserved for "empty bucket"
+
+
+_EMPTY = -1      # bucket sentinel: never used
+_TOMBSTONE = -2  # bucket sentinel: deleted, keep probing
+
+
+class FlowTable:
+    """Preallocated flow table; all storage is allocated once in __init__."""
+
+    def __init__(
+        self,
+        capacity: int,
+        pkt_depth: int,
+        *,
+        idle_timeout_s: float = 60.0,
+        metrics: RuntimeMetrics | None = None,
+    ):
+        if capacity <= 0 or pkt_depth <= 0:
+            raise ValueError("capacity and pkt_depth must be positive")
+        self.capacity = capacity
+        self.pkt_depth = pkt_depth
+        self.idle_timeout_s = idle_timeout_s
+        self.metrics = metrics if metrics is not None else RuntimeMetrics()
+
+        self.ctrl = np.zeros(capacity, dtype=_CTRL_DTYPE)
+        # dense payload, TrafficDataset layout (DESIGN.md §3)
+        self.ts = np.zeros((capacity, pkt_depth), dtype=np.float32)
+        self.size = np.zeros((capacity, pkt_depth), dtype=np.float32)
+        self.direction = np.zeros((capacity, pkt_depth), dtype=np.uint8)
+        self.ttl = np.zeros((capacity, pkt_depth), dtype=np.float32)
+        self.winsize = np.zeros((capacity, pkt_depth), dtype=np.float32)
+        self.flags = np.zeros((capacity, pkt_depth, 8), dtype=np.uint8)
+        self.proto = np.zeros(capacity, dtype=np.float32)
+        self.s_port = np.zeros(capacity, dtype=np.float32)
+        self.d_port = np.zeros(capacity, dtype=np.float32)
+
+        # open-addressed index: power-of-two bucket array at load <= 0.5
+        n_buckets = 1
+        while n_buckets < 2 * capacity:
+            n_buckets *= 2
+        self._n_buckets = n_buckets
+        self._mask = n_buckets - 1
+        self._buckets = np.full(n_buckets, _EMPTY, dtype=np.int64)
+        self._tombstones = 0
+
+        self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
+
+    # -- hash index ----------------------------------------------------------
+
+    def _probe(self, key: int) -> tuple[int, int]:
+        """Return (slot, first_usable_bucket). slot is -1 on miss."""
+        b = key & self._mask
+        first_usable = -1
+        while True:
+            s = self._buckets[b]
+            if s == _EMPTY:
+                return -1, (b if first_usable < 0 else first_usable)
+            if s == _TOMBSTONE:
+                if first_usable < 0:
+                    first_usable = b
+            elif self.ctrl["key"][s] == key:
+                return int(s), b
+            b = (b + 1) & self._mask
+
+    def _index_insert(self, key: int, slot: int, bucket: int) -> None:
+        if self._buckets[bucket] == _TOMBSTONE:
+            self._tombstones -= 1
+        self._buckets[bucket] = slot
+
+    def _index_remove(self, key: int) -> None:
+        b = key & self._mask
+        while True:
+            s = self._buckets[b]
+            if s == _EMPTY:
+                return  # not present (already removed)
+            if s >= 0 and self.ctrl["key"][s] == key:
+                self._buckets[b] = _TOMBSTONE
+                self._tombstones += 1
+                if self._tombstones > self._n_buckets // 4:
+                    self._rebuild_index()
+                return
+            b = (b + 1) & self._mask
+
+    def _rebuild_index(self) -> None:
+        self._buckets.fill(_EMPTY)
+        self._tombstones = 0
+        for s in np.nonzero(self.ctrl["state"] != 0)[0]:
+            key = int(self.ctrl["key"][s])
+            b = key & self._mask
+            while self._buckets[b] >= 0:
+                b = (b + 1) & self._mask
+            self._buckets[b] = s
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    def _alloc(self, key: int, t: float, flow_id: int) -> int:
+        slot = self._free.pop()
+        c = self.ctrl[slot]
+        c["key"] = key
+        c["state"] = 1  # ACTIVE
+        c["fin_mask"] = 0
+        c["count"] = 0
+        c["seen"] = 0
+        c["first_ts"] = t
+        c["last_ts"] = t
+        c["ready_ts"] = 0.0
+        c["flow_id"] = flow_id
+        self.metrics.flows_seen += 1
+        return slot
+
+    def recycle(self, slot: int) -> None:
+        """Return a slot to the free list and clear its payload row."""
+        key = int(self.ctrl["key"][slot])
+        # state must clear BEFORE the index removal: removal can trigger a
+        # rebuild, and the rebuild must not re-insert the departing slot
+        self.ctrl["state"][slot] = 0
+        self._index_remove(key)
+        self.ctrl["key"][slot] = 0
+        # payload rows are zeroed so the next tenant starts from padding
+        self.ts[slot] = 0.0
+        self.size[slot] = 0.0
+        self.direction[slot] = 0
+        self.ttl[slot] = 0.0
+        self.winsize[slot] = 0.0
+        self.flags[slot] = 0
+        self._free.append(slot)
+        self.metrics.slots_recycled += 1
+
+    # -- hot path ------------------------------------------------------------
+
+    def observe(
+        self,
+        key: int,
+        t: float,
+        rel_ts: float,
+        size: float,
+        direction: int,
+        ttl: float,
+        winsize: float,
+        flags_byte: int,
+        proto: float,
+        s_port: float,
+        d_port: float,
+        flow_id: int,
+        fin: bool,
+    ) -> tuple[FlowStatus, int]:
+        """Account one packet; returns (status, slot) — slot is -1 on drop."""
+        m = self.metrics
+        m.pkts_total += 1
+        slot, bucket = self._probe(key)
+        if slot < 0:
+            if not self._free:
+                m.drops_table += 1
+                return FlowStatus.DROPPED, -1
+            slot = self._alloc(key, t, flow_id)
+            self._index_insert(key, slot, bucket)
+            self.proto[slot] = proto
+            self.s_port[slot] = s_port
+            self.d_port[slot] = d_port
+
+        c = self.ctrl[slot]
+        c["last_ts"] = t
+        c["seen"] += 1
+        state = int(c["state"])
+        if fin:
+            # per-direction FIN: a half-close (one side done, the other
+            # still sending) must NOT end the flow, or trailing packets
+            # would re-tenant the 5-tuple and get classified twice
+            c["fin_mask"] |= np.uint8(1 << (direction & 1))
+        closed = c["fin_mask"] == 3
+
+        if state == 1 and c["count"] < self.pkt_depth:  # ACTIVE, accumulating
+            i = int(c["count"])
+            self.ts[slot, i] = rel_ts
+            self.size[slot, i] = size
+            self.direction[slot, i] = direction
+            self.ttl[slot, i] = ttl
+            self.winsize[slot, i] = winsize
+            self.flags[slot, i] = _FLAG_LUT[flags_byte]
+            c["count"] = i + 1
+            m.pkts_accumulated += 1
+            if c["count"] == self.pkt_depth:
+                c["state"] = 2  # READY
+                c["ready_ts"] = t
+                return FlowStatus.READY, slot
+            if closed:
+                c["state"] = 2
+                c["ready_ts"] = t
+                return FlowStatus.READY_EOF, slot
+            return FlowStatus.TRACKED, slot
+
+        # past depth / already queued / already predicted: tracker only
+        m.pkts_tracked += 1
+        if closed and state == 3:  # PREDICTED: flow over, reclaim now
+            self.recycle(slot)
+            return FlowStatus.CLOSED, slot
+        return FlowStatus.TRACKED, slot
+
+    # -- maintenance ---------------------------------------------------------
+
+    def mark_predicted(self, slots: np.ndarray) -> list[int]:
+        """Dispatch flushed these slots: recycle fully-closed flows, keep
+        the rest as PREDICTED (tracked until both FINs or idle timeout)."""
+        recycled = []
+        for s in np.asarray(slots, dtype=np.int64):
+            if self.ctrl["fin_mask"][s] == 3:
+                self.recycle(int(s))
+                recycled.append(int(s))
+            else:
+                self.ctrl["state"][s] = 3  # PREDICTED
+        return recycled
+
+    def evict_idle(self, now: float) -> list[int]:
+        """Timeout flows idle for > idle_timeout_s.
+
+        PREDICTED flows are recycled; ACTIVE flows (never reached depth n,
+        never saw FIN) are transitioned to READY and returned so the caller
+        can enqueue them for a late flush. READY flows are left to the
+        dispatcher's flush timeout.
+        """
+        state = self.ctrl["state"]
+        idle = (now - self.ctrl["last_ts"]) > self.idle_timeout_s
+        for s in np.nonzero((state == 3) & idle)[0]:
+            self.recycle(int(s))
+        late = []
+        for s in np.nonzero((state == 1) & idle)[0]:
+            if self.ctrl["count"][s] > 0:
+                self.ctrl["state"][s] = 2
+                self.ctrl["ready_ts"][s] = now
+                late.append(int(s))
+                self.metrics.flows_evicted_idle += 1
+            else:
+                self.recycle(int(s))
+        return late
+
+    def flush_all(self, now: float) -> list[int]:
+        """End-of-stream drain: queue every still-active flow with data."""
+        late = []
+        for s in np.nonzero(self.ctrl["state"] == 1)[0]:
+            if self.ctrl["count"][s] > 0:
+                self.ctrl["state"][s] = 2
+                self.ctrl["ready_ts"][s] = now
+                late.append(int(s))
+            else:
+                self.recycle(int(s))
+        return late

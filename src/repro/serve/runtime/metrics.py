@@ -1,0 +1,140 @@
+"""Observability for the streaming runtime (DESIGN.md §6).
+
+Everything the replay driver and the dispatcher want to report lives here:
+
+- `LatencyHistogram` — log-bucketed enqueue→prediction flow latencies with
+  exact percentiles (raw samples are kept; flow counts are small enough
+  that the histogram is a *view*, not the storage).
+- `RuntimeMetrics`  — drop/evict/recycle counters, batch-occupancy stats
+  and the compile-count probe the shape-bucketing tests assert against.
+
+The counters are deliberately plain ints mutated by the flow table and the
+dispatcher: the hot ingest path must not pay for abstraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["LatencyHistogram", "RuntimeMetrics"]
+
+
+class LatencyHistogram:
+    """Flow-latency samples with exact quantiles + a log-bucketed view.
+
+    Raw samples are the storage (flow counts are small — thousands, not
+    billions); the log-spaced histogram is computed on demand for display,
+    so the record path is just an append.
+    """
+
+    def __init__(self, lo_s: float = 1e-6, hi_s: float = 1e3, per_decade: int = 8):
+        self.lo_s = lo_s
+        self.hi_s = hi_s
+        n_dec = math.log10(hi_s / lo_s)
+        self.edges = np.logspace(
+            math.log10(lo_s), math.log10(hi_s), int(round(n_dec * per_decade)) + 1
+        )
+        self._samples: list[float] = []
+
+    def record_many(self, seconds: np.ndarray) -> None:
+        self._samples.extend(np.asarray(seconds, dtype=np.float64).ravel().tolist())
+
+    def counts(self) -> np.ndarray:
+        """Log-bucket counts (len(edges)+1: underflow ... overflow)."""
+        idx = np.searchsorted(self.edges, np.asarray(self._samples), side="right")
+        return np.bincount(idx, minlength=len(self.edges) + 1).astype(np.int64)
+
+    def rows(self) -> list[tuple[float, float, int]]:
+        """Occupied buckets as (lo_s, hi_s, count) — the display view."""
+        c = self.counts()
+        lo = np.concatenate([[0.0], self.edges])
+        hi = np.concatenate([self.edges, [np.inf]])
+        return [(float(lo[i]), float(hi[i]), int(c[i]))
+                for i in np.nonzero(c)[0]]
+
+    @property
+    def n(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), q))
+
+    def summary(self) -> dict:
+        return {
+            "n": self.n,
+            "p50_s": self.percentile(50),
+            "p90_s": self.percentile(90),
+            "p99_s": self.percentile(99),
+            "max_s": float(max(self._samples)) if self._samples else 0.0,
+        }
+
+
+@dataclasses.dataclass
+class RuntimeMetrics:
+    """Shared counter block for one runtime instance / one replay run."""
+
+    # ingest-side
+    pkts_total: int = 0
+    pkts_accumulated: int = 0      # packets that updated the dense payload
+    pkts_tracked: int = 0          # connection-tracking-only packets (past depth)
+    drops_ring: int = 0            # offered load exceeded ingest capacity
+    drops_table: int = 0           # flow table full, new flow rejected
+    # flow-table lifecycle
+    flows_seen: int = 0
+    flows_evicted_idle: int = 0    # evicted before reaching depth (late flush)
+    slots_recycled: int = 0
+    # dispatch-side
+    batches: int = 0
+    flushes_full: int = 0          # flushed because depth-n batch filled
+    flushes_timeout: int = 0       # flushed because oldest flow waited too long
+    flushes_drain: int = 0         # flushed at end-of-stream drain
+    flows_predicted: int = 0
+    duplicate_predictions: int = 0  # re-tenancy fragments, first wins
+    batch_occupancy: list = dataclasses.field(default_factory=list)
+    shapes_seen: set = dataclasses.field(default_factory=set)
+    latency: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
+
+    @property
+    def drops(self) -> int:
+        """All loss sources combined — the zero-loss criterion counts both."""
+        return self.drops_ring + self.drops_table
+
+    def compile_count(self) -> int:
+        """Distinct dispatch shapes == upper bound on new XLA executables."""
+        return len(self.shapes_seen)
+
+    def occupancy_stats(self) -> dict:
+        if not self.batch_occupancy:
+            return {"mean": 0.0, "min": 0.0, "max": 0.0}
+        occ = np.asarray(self.batch_occupancy)
+        return {
+            "mean": float(occ.mean()),
+            "min": float(occ.min()),
+            "max": float(occ.max()),
+        }
+
+    def summary(self) -> dict:
+        return {
+            "pkts_total": self.pkts_total,
+            "pkts_accumulated": self.pkts_accumulated,
+            "pkts_tracked": self.pkts_tracked,
+            "drops": self.drops,
+            "drops_ring": self.drops_ring,
+            "drops_table": self.drops_table,
+            "flows_seen": self.flows_seen,
+            "flows_predicted": self.flows_predicted,
+            "duplicate_predictions": self.duplicate_predictions,
+            "flows_evicted_idle": self.flows_evicted_idle,
+            "slots_recycled": self.slots_recycled,
+            "batches": self.batches,
+            "flushes_full": self.flushes_full,
+            "flushes_timeout": self.flushes_timeout,
+            "flushes_drain": self.flushes_drain,
+            "compile_count": self.compile_count(),
+            "batch_occupancy": self.occupancy_stats(),
+            "latency": self.latency.summary(),
+        }

@@ -37,7 +37,19 @@ class ServingPipeline:
 
     def __call__(self, ds: TrafficDataset) -> np.ndarray:
         """Predicted class ids for every flow in the batch."""
-        probs = self._fn(ds)
+        return self.finalize(self.predict_async(ds))
+
+    def predict_async(self, ds: TrafficDataset) -> jax.Array:
+        """Submit the batch and return the (unresolved) device array.
+
+        JAX dispatch is asynchronous: the caller can keep accumulating the
+        next micro-batch while this one runs, and only block in `finalize`.
+        The streaming runtime's double-buffered dispatch relies on this.
+        """
+        return self._fn(ds)
+
+    def finalize(self, probs: jax.Array) -> np.ndarray:
+        """Block on a `predict_async` result and map to class labels."""
         idx = np.asarray(jnp.argmax(probs, axis=1))
         if self.forest.classes is not None:
             return self.forest.classes[idx]

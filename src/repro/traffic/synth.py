@@ -77,6 +77,19 @@ class TrafficDataset:
         te, tr = perm[:n_test], perm[n_test:]
         return self.take(tr), self.take(te)
 
+    def truncate(self, depth: int) -> "TrafficDataset":
+        """View of the first `depth` packet columns (flow_len uncapped:
+        the extraction mask min()s it against depth anyway). This is the
+        batch-side twin of the streaming flow table's `pkt_depth` storage."""
+        return TrafficDataset(
+            ts=self.ts[:, :depth], size=self.size[:, :depth],
+            direction=self.direction[:, :depth], ttl=self.ttl[:, :depth],
+            winsize=self.winsize[:, :depth], flags=self.flags[:, :depth],
+            flow_len=self.flow_len, proto=self.proto,
+            s_port=self.s_port, d_port=self.d_port,
+            label=self.label, class_names=self.class_names, name=self.name,
+        )
+
     def take(self, idx: np.ndarray) -> "TrafficDataset":
         return TrafficDataset(
             ts=self.ts[idx], size=self.size[idx], direction=self.direction[idx],

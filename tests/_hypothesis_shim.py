@@ -1,0 +1,133 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The property tests in this repo use a small slice of the API — `given` /
+`settings`, `strategies.{integers,floats,tuples,just,sampled_from}` and
+`hypothesis.extra.numpy.arrays`. This shim implements exactly that slice
+as seeded random sampling: each `@given` test runs `max_examples` randomly
+drawn examples (deterministic seed, so failures reproduce) and reports the
+falsifying example on assertion failure.
+
+It is NOT a replacement for hypothesis (no shrinking, no coverage-guided
+generation); it exists so `python -m pytest` collects and runs the full
+suite in environments without the dependency. When hypothesis is
+available, the real library is used instead (see the try/except imports in
+the test modules).
+"""
+from __future__ import annotations
+
+import inspect
+import types
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "hnp"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def tuples(*strategies_) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies_))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    just=just,
+    tuples=tuples,
+    sampled_from=sampled_from,
+    booleans=booleans,
+)
+
+
+def _np_arrays(dtype, shape, *, elements: _Strategy | None = None) -> _Strategy:
+    shape_strat = shape if isinstance(shape, _Strategy) else just(tuple(shape))
+
+    def draw(rng: np.random.Generator):
+        shp = shape_strat.draw(rng)
+        shp = (shp,) if isinstance(shp, int) else tuple(shp)
+        n = int(np.prod(shp)) if shp else 1
+        if elements is not None:
+            flat = np.array([elements.draw(rng) for _ in range(n)], dtype=dtype)
+        else:
+            flat = rng.random(n).astype(dtype)
+        return flat.reshape(shp)
+
+    return _Strategy(draw)
+
+
+hnp = types.SimpleNamespace(arrays=_np_arrays)
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*fixture_args, **fixture_kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on example {i}: {drawn!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the strategy params from pytest's fixture resolution: the
+        # visible signature keeps only non-strategy (fixture) parameters
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco

@@ -1,7 +1,11 @@
 """Histogram forest trainer: correctness + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sampling fallback, see tests/_hypothesis_shim.py
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.forest import (
     DenseForest, forest_apply_np, forest_predict_class, forest_predict_value,

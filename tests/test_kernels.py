@@ -71,6 +71,33 @@ def test_forest_infer_sweep(n, F, K, T, depth):
     np.testing.assert_allclose(np.asarray(got_ref), want, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,F,K,T,depth,block_t", [
+    (64, 5, 4, 6, 3, 4),       # tree padding (6 % 4 != 0)
+    (130, 9, 2, 8, 5, 8),      # flow padding (130 % 128 != 0)
+    (256, 3, 7, 12, 6, 4),
+])
+def test_forest_infer_ref_vs_kernel_random(n, F, K, T, depth, block_t):
+    """Direct ref-vs-Pallas parity on *random* dense forests: arbitrary
+    feature ids, thresholds (incl. +inf pass-through slots) and leaves —
+    not just trainer-produced trees."""
+    rng = np.random.default_rng(n + T)
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+    feature = rng.integers(0, F, (T, n_int)).astype(np.int32)
+    threshold = rng.standard_normal((T, n_int)).astype(np.float32)
+    threshold[rng.random((T, n_int)) < 0.15] = np.inf  # pass-through slots
+    leaf = rng.random((T, n_leaf, K)).astype(np.float32)
+    X = rng.standard_normal((n, F)).astype(np.float32)
+    got = ops.forest_infer(
+        jnp.asarray(X), jnp.asarray(feature), jnp.asarray(threshold),
+        jnp.asarray(leaf), depth, block_n=128, block_t=block_t,
+    )
+    want = ref.forest_infer_ref(
+        jnp.asarray(X), jnp.asarray(feature), jnp.asarray(threshold),
+        jnp.asarray(leaf), depth,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 @pytest.mark.parametrize("n,P", [(64, 32), (300, 96), (1000, 128)])
 def test_flow_stats_sweep(n, P):
     v = _arr((n, P))

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sampling fallback, see tests/_hypothesis_shim.py
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.moe import _capacity, _dispatch_indices, init_moe, moe_ref
 

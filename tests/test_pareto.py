@@ -1,7 +1,11 @@
 """Pareto / hypervolume invariants (hypothesis property tests)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # seeded-sampling fallback, see tests/_hypothesis_shim.py
+    from _hypothesis_shim import given, hnp, settings, strategies as st
 
 from repro.core.pareto import (
     hvi_ratio, hypervolume_2d, normalize_objectives, pareto_front, pareto_mask,

@@ -122,3 +122,30 @@ def test_end_to_end_pipeline_artifact(ds):
     assert f1 > 0.2  # trained on itself; just proves the artifact works
     probs = pipe.probabilities(ds)
     np.testing.assert_allclose(probs.sum(1), 1.0, atol=1e-3)
+
+
+def test_pipeline_kernel_and_ref_paths_agree(ds):
+    """build_pipeline(use_kernel=False) routes through ref.forest_infer_ref;
+    it must match the Pallas ops.forest_infer path on the same forest."""
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+
+    rep = FeatureRep(MINI_FEATURE_NAMES + ("ack_cnt", "d_winsize_std"), 9)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="rf-fast", seed=1)
+    pk = build_pipeline(rep, forest, ds.max_pkts, use_kernel=True)
+    pr = build_pipeline(rep, forest, ds.max_pkts, use_kernel=False)
+    np.testing.assert_allclose(
+        pk.probabilities(ds), pr.probabilities(ds), atol=1e-5
+    )
+    assert (pk(ds) == pr(ds)).all()
+
+
+def test_truncate_view_preserves_extraction(ds):
+    """Extraction at depth d over truncated tensors matches the full-width
+    dataset — the contract the streaming flow table's storage relies on."""
+    depth = 10
+    names = ("s_bytes_sum", "dur", "ack_cnt", "s_iat_mean")
+    full = extract_features(ds, names, depth)
+    trunc = extract_features(ds.truncate(depth), names, depth)
+    np.testing.assert_array_equal(full, trunc)
