@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-runtime example-stream
+.PHONY: test bench-smoke bench-runtime bench-compare example-stream
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -11,9 +11,15 @@ test:
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke
 
-# full runtime benchmark (Fig. 5c, measured)
+# full runtime benchmark (Fig. 5c, measured) — separate output so it never
+# clobbers the smoke baseline the bench-compare gate diffs against
 bench-runtime:
-	$(PYTHON) -m benchmarks.bench_runtime
+	$(PYTHON) -m benchmarks.bench_runtime --out results/BENCH_runtime_full.json
+
+# perf gate: fresh smoke run vs committed BENCH_runtime.json
+# (fails on >20% median CATO zero_loss_pps regression)
+bench-compare:
+	$(PYTHON) -m benchmarks.compare_runtime
 
 example-stream:
 	$(PYTHON) examples/serve_stream.py

@@ -19,9 +19,11 @@ import time
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
 
-def run(smoke: bool = False, use_case: str = "app", verbose: bool = True):
+def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
+        out_path: pathlib.Path | None = None):
     from .fig5_serving_perf import REPLAYED_HEADER as HEADER, run_replayed
 
+    out_path = BENCH_PATH if out_path is None else pathlib.Path(out_path)
     cfg = dict(
         use_case=use_case,
         iters=8 if smoke else 25,
@@ -53,9 +55,9 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True):
         "gain_vs_baseline": gains,
         "zero_drops_at_reported_rate": all(r["drops"] == 0 for r in recs),
     }
-    BENCH_PATH.write_text(json.dumps(out, indent=2) + "\n")
+    out_path.write_text(json.dumps(out, indent=2) + "\n")
     if verbose:
-        print(f"# wrote {BENCH_PATH} (wall {wall_s:.1f}s, "
+        print(f"# wrote {out_path} (wall {wall_s:.1f}s, "
               f"CATO best {cato_best:.3f} Gbps, gains {gains})")
     return out
 
@@ -64,5 +66,7 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI-sized run")
     p.add_argument("--use-case", default="app", choices=("app", "iot"))
+    p.add_argument("--out", default=None, help="output path (default: repo "
+                   "root BENCH_runtime.json)")
     args = p.parse_args()
-    run(smoke=args.smoke, use_case=args.use_case)
+    run(smoke=args.smoke, use_case=args.use_case, out_path=args.out)

@@ -1,0 +1,75 @@
+"""Perf gate: fresh `--smoke` run vs the committed BENCH_runtime.json.
+
+Runs the smoke-sized zero-loss benchmark into a scratch file, compares its
+median CATO zero_loss_pps against the committed datapoint, and exits
+non-zero on a regression beyond the threshold (default 20%). Driven by
+``make bench-compare``; the committed file is only ever rewritten by an
+explicit ``make bench-smoke``.
+
+    python -m benchmarks.compare_runtime [--threshold 0.2] [--fresh path]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import tempfile
+import pathlib
+
+from .bench_runtime import BENCH_PATH, run
+
+
+def median_cato_pps(doc: dict) -> float:
+    vals = [r["zero_loss_pps"] for r in doc["rows"] if r["method"] == "CATO"]
+    if not vals:
+        raise SystemExit("no CATO rows in benchmark document")
+    return statistics.median(vals)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--threshold", type=float, default=0.20,
+                   help="max tolerated fractional regression (default 0.20)")
+    p.add_argument("--fresh", default=None,
+                   help="reuse an existing fresh result instead of re-running")
+    args = p.parse_args(argv)
+
+    if not BENCH_PATH.exists():
+        print(f"no committed baseline at {BENCH_PATH}", file=sys.stderr)
+        return 2
+    committed = json.loads(BENCH_PATH.read_text())
+
+    if args.fresh:
+        fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    else:
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            scratch = pathlib.Path(f.name)
+        try:
+            fresh = run(smoke=True, out_path=scratch)
+        finally:
+            scratch.unlink(missing_ok=True)
+
+    if not committed.get("smoke") or committed.get("config") != fresh.get("config"):
+        print("config mismatch: committed baseline is not a smoke run with "
+              "the current config — refusing an apples-to-oranges diff.\n"
+              f"  committed: smoke={committed.get('smoke')} {committed.get('config')}\n"
+              f"  fresh:     smoke={fresh.get('smoke')} {fresh.get('config')}",
+              file=sys.stderr)
+        return 2
+
+    base = median_cato_pps(committed)
+    now = median_cato_pps(fresh)
+    ratio = now / base
+    print(f"committed median CATO zero_loss_pps: {base:,.0f}")
+    print(f"fresh     median CATO zero_loss_pps: {now:,.0f}  "
+          f"({(ratio - 1) * 100:+.1f}%)")
+    if ratio < 1.0 - args.threshold:
+        print(f"FAIL: regression beyond {args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("OK: within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

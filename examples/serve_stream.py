@@ -1,7 +1,9 @@
 """Sustained streaming classification through the online serving runtime.
 
 Replays a synthetic app-class trace as a live packet stream through the
-flow table + micro-batched dispatch runtime, measures the zero-loss
+vectorized ingest path (`FlowTable.observe_batch` blocks), micro-batched
+dispatch with reused staging arenas, and the single-launch fused
+extract+infer Pallas pipeline (DESIGN.md §7); measures the zero-loss
 throughput point (highest offered load with zero drops, Fig. 5c), and
 checks that the streaming path's predictions are bit-identical to the
 batch `ServingPipeline` on the same flows.
@@ -32,7 +34,8 @@ def main():
     )
     X = extract_features(train_ds, rep.features, rep.depth)
     forest, _ = train_traffic_model(X, train_ds.label, model="rf-fast", seed=0)
-    pipeline = build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+    # fused=True: one Pallas launch per micro-batch (extract+infer in VMEM)
+    pipeline = build_pipeline(rep, forest, max_pkts=rep.depth, fused=True)
 
     stream = PacketStream.from_dataset(test_ds, seed=0)
     print(f"trace: {stream.n_flows} flows, {stream.n_events} packets, "

@@ -8,6 +8,9 @@ extract() time — the kernel-level expression of the paper's shared-operation
 argument (one traversal serves every accumulator family).
 
 Grid tiles the flow axis; each step reduces a (bn, P) tile to (bn, 5).
+Arbitrary flow counts are handled by padding the flow axis up to the block
+multiple (padding rows carry an all-zero mask, so they reduce to zeros) and
+slicing the result — no block-divisibility precondition on callers.
 """
 from __future__ import annotations
 
@@ -44,15 +47,23 @@ def flow_stats_kernel_call(
 ) -> jax.Array:
     N, P = values.shape
     bn = min(block_n, N)
-    assert N % bn == 0, (N, bn)
-    return pl.pallas_call(
+    values = values.astype(jnp.float32)
+    mask = mask.astype(jnp.int32)
+    rem = (-N) % bn
+    if rem:
+        # pad the flow axis to the block multiple: padded rows carry an
+        # all-zero mask, so every statistic reduces to 0 and is sliced off
+        values = jnp.pad(values, ((0, rem), (0, 0)))
+        mask = jnp.pad(mask, ((0, rem), (0, 0)))
+    out = pl.pallas_call(
         _stats_kernel,
-        grid=(N // bn,),
+        grid=((N + rem) // bn,),
         in_specs=[
             pl.BlockSpec((bn, P), lambda i: (i, 0)),
             pl.BlockSpec((bn, P), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bn, 5), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, 5), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((N + rem, 5), jnp.float32),
         interpret=interpret,
-    )(values.astype(jnp.float32), mask.astype(jnp.int32))
+    )(values, mask)
+    return out[:N]

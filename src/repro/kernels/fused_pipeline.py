@@ -1,0 +1,187 @@
+"""Fused extract+infer Pallas kernel — the single-launch serving hot path.
+
+The unfused pipeline runs two device launches per micro-batch: the XLA
+extraction executable materializes the ``(N, F)`` feature matrix in HBM,
+then the `tree_infer` Pallas kernel reads it back. This kernel fuses both
+stages (DESIGN.md §7): the grid tiles the flow axis, each step loads one
+``(bn, P)`` tile of every packet tensor into VMEM, computes the selected
+feature columns *in registers* via the shared emitter
+(`repro.traffic.extraction.emit_feature_columns`, specialized on the static
+stats plan — the paper's conditional compilation, now inside Pallas), and
+immediately runs the dense level-order forest traversal on the in-register
+feature tile. The feature matrix never touches HBM.
+
+Bit-parity with the unfused path is by construction, not luck:
+
+- feature columns come from the *same* emitter tracing the *same* static
+  plan, so the op graphs are identical;
+- the traversal unrolls tree blocks of `block_t` and accumulates
+  ``votes.sum(axis=1) / n_trees_padded`` per block in the same order as the
+  `tree_infer` kernel's grid reduction, with the same pass-through tree
+  padding and the same post-hoc vote-mean rescale.
+
+`fused_forest_infer` is the jit'd public entry; the packet tensors are
+donated (``donate_argnums``) so XLA can reuse their device buffers across
+micro-batches — together with the dispatcher's staging arenas this makes a
+flush allocation-free on the host and reuse-friendly on the device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_forest_infer", "fused_pipeline_call"]
+
+
+def _fused_kernel(
+    ts_ref, size_ref, dir_ref, ttl_ref, win_ref, flags_ref, meta_ref,
+    f_ref, t_ref, l_ref, o_ref,
+    *, plan, depth: int, forest_depth: int, n_trees: int, block_t: int,
+    rescale: float,
+):
+    from repro.traffic.extraction import emit_feature_columns
+
+    ts = ts_ref[...]            # (bn, P) float32
+    meta = meta_ref[...]        # (bn, 4) float32: flow_len, proto, s/d_port
+    cols = emit_feature_columns(
+        plan,
+        ts=ts, size=size_ref[...], direction=dir_ref[...], ttl=ttl_ref[...],
+        winsize=win_ref[...], flags=flags_ref[...], flow_len=meta[:, 0],
+        proto=meta[:, 1], s_port=meta[:, 2], d_port=meta[:, 3], depth=depth,
+    )
+    x = jnp.stack(cols, axis=1)                 # (bn, F) — in VMEM only
+
+    feat = f_ref[...]                           # (T, NI)
+    thr = t_ref[...]
+    leaf = l_ref[...]                           # (T, NL, K)
+    bn = x.shape[0]
+    K = leaf.shape[2]
+
+    acc = jnp.zeros((bn, K), jnp.float32)
+    for j0 in range(0, n_trees, block_t):
+        fj = feat[j0:j0 + block_t]              # static slices: (bt, NI)
+        tj = thr[j0:j0 + block_t]
+        lj = leaf[j0:j0 + block_t]
+        bt = fj.shape[0]
+        node = jnp.zeros((bn, bt), jnp.int32)
+        for _ in range(forest_depth):
+            f = jnp.take_along_axis(
+                jnp.broadcast_to(fj[None], (bn, bt, fj.shape[1])),
+                node[:, :, None], axis=2,
+            )[..., 0]
+            th = jnp.take_along_axis(
+                jnp.broadcast_to(tj[None], (bn, bt, tj.shape[1])),
+                node[:, :, None], axis=2,
+            )[..., 0]
+            xv = jnp.take_along_axis(
+                jnp.broadcast_to(x[:, None, :], (bn, bt, x.shape[1])),
+                f.astype(jnp.int32)[:, :, None], axis=2,
+            )[..., 0]
+            node = 2 * node + 1 + (xv > th).astype(jnp.int32)
+        leaf_idx = node - (2 ** forest_depth - 1)
+        votes = jnp.take_along_axis(
+            jnp.broadcast_to(lj[None], (bn,) + lj.shape),
+            leaf_idx[:, :, None, None], axis=2,
+        )[:, :, 0, :]                           # (bn, bt, K)
+        acc = acc + votes.sum(axis=1) / n_trees
+    o_ref[...] = acc * rescale
+
+
+def fused_pipeline_call(
+    ts, size, direction, ttl, winsize, flags, meta,
+    feature, threshold, leaf,
+    *, plan, depth: int, forest_depth: int,
+    block_n: int = 256, block_t: int = 8, interpret: bool = False,
+):
+    """Raw pallas_call: one launch over flow tiles, features never hit HBM.
+
+    Expects float32 packet tensors, int32 `direction`, float32 `flags`
+    ``(N, P, 8)``, and ``meta = [flow_len, proto, s_port, d_port]`` as
+    ``(N, 4)`` float32. Pads the flow axis to the block multiple (padding
+    rows have flow_len 0: every mask is empty) and the tree axis with
+    pass-through trees, mirroring `ops.forest_infer` exactly.
+    """
+    N, P = ts.shape
+    T, NI = feature.shape
+    NL, K = leaf.shape[1], leaf.shape[2]
+    bn = min(block_n, N)
+    bt = min(block_t, T)
+
+    rem_n = (-N) % bn
+    if rem_n:
+        pad2 = lambda a: jnp.pad(a, ((0, rem_n), (0, 0)))
+        ts, size, direction, ttl, winsize, meta = map(
+            pad2, (ts, size, direction, ttl, winsize, meta))
+        flags = jnp.pad(flags, ((0, rem_n), (0, 0), (0, 0)))
+    # same pass-through padding + rescale recipe as the unfused tree kernel
+    # (shared helper: the bit-parity contract depends on it)
+    from .tree_infer import pad_forest_blocks
+
+    feature, threshold, leaf, rem_t = pad_forest_blocks(
+        feature, threshold, leaf, bt)
+    rescale = (T + rem_t) / T if rem_t else 1.0
+
+    kern = functools.partial(
+        _fused_kernel, plan=plan, depth=depth, forest_depth=forest_depth,
+        n_trees=T + rem_t, block_t=bt, rescale=rescale,
+    )
+    tile = lambda i: (i, 0)
+    whole = lambda i: (0, 0)
+    out = pl.pallas_call(
+        kern,
+        grid=((N + rem_n) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, P), tile),            # ts
+            pl.BlockSpec((bn, P), tile),            # size
+            pl.BlockSpec((bn, P), tile),            # direction
+            pl.BlockSpec((bn, P), tile),            # ttl
+            pl.BlockSpec((bn, P), tile),            # winsize
+            pl.BlockSpec((bn, P, 8), lambda i: (i, 0, 0)),  # flags
+            pl.BlockSpec((bn, 4), tile),            # meta
+            pl.BlockSpec((T + rem_t, NI), whole),   # forest: resident
+            pl.BlockSpec((T + rem_t, NI), whole),
+            pl.BlockSpec((T + rem_t, NL, K), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, K), tile),
+        out_shape=jax.ShapeDtypeStruct((N + rem_n, K), jnp.float32),
+        interpret=interpret,
+    )(ts, size, direction, ttl, winsize, flags, meta, feature, threshold, leaf)
+    return out[:N]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "depth", "forest_depth", "block_n", "block_t",
+                     "interpret"),
+    donate_argnums=(0, 1, 2, 3, 4, 5),
+)
+def fused_forest_infer(
+    ts, size, direction, ttl, winsize, flags,
+    flow_len, proto, s_port, d_port,
+    feature, threshold, leaf,
+    *, plan, depth: int, forest_depth: int,
+    block_n: int = 256, block_t: int = 8, interpret: bool | None = None,
+):
+    """Jit'd fused pipeline entry: packets -> class probabilities, one launch.
+
+    The packet tensors (args 0-5) are donated: each micro-batch's device
+    buffers are released back to XLA as soon as the launch consumes them,
+    so steady-state serving reuses a fixed set of device allocations.
+    Accepts uint8 `direction`/`flags` (converted on device, keeping the
+    host staging arena copy-free); `plan` comes from
+    `repro.traffic.extraction.stats_plan`.
+    """
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    meta = jnp.stack(
+        [flow_len.astype(jnp.float32), proto, s_port, d_port], axis=1)
+    return fused_pipeline_call(
+        ts, size, direction.astype(jnp.float32), ttl, winsize,
+        flags.astype(jnp.float32), meta, feature, threshold, leaf,
+        plan=plan, depth=depth, forest_depth=forest_depth,
+        block_n=block_n, block_t=block_t, interpret=interpret,
+    )

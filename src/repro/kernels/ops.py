@@ -12,7 +12,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ref
 from .decode_attention import decode_attention_kernel_call
@@ -88,35 +87,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *, scale=None, block_s=256,
 @functools.partial(jax.jit, static_argnames=("depth", "block_n", "block_t", "interpret"))
 def forest_infer(x, feature, threshold, leaf, depth, *, block_n=256, block_t=8,
                  interpret=None):
+    # flow/tree padding, pass-through trees, and the vote-mean rescale all
+    # live in the kernel call (shared with the fused pipeline via
+    # tree_infer.pad_forest_blocks — the bit-parity contract)
     interpret = default_interpret() if interpret is None else interpret
-    bn = min(block_n, x.shape[0])
-    bt = min(block_t, feature.shape[0])
-    x_p, n0 = _pad_to(x, 0, bn)
-    T = feature.shape[0]
-    rem_t = (-T) % bt
-    if rem_t:
-        # pad with pass-through trees voting zeros
-        feature = jnp.pad(feature, ((0, rem_t), (0, 0)))
-        threshold = jnp.pad(threshold, ((0, rem_t), (0, 0)), constant_values=np.inf)
-        leaf = jnp.pad(leaf, ((0, rem_t), (0, 0), (0, 0)))
-    out = forest_infer_kernel_call(
-        x_p, feature, threshold, leaf, depth,
-        block_n=bn, block_t=bt, interpret=interpret,
+    return forest_infer_kernel_call(
+        x, feature, threshold, leaf, depth,
+        block_n=block_n, block_t=block_t, interpret=interpret,
     )
-    if rem_t:
-        # kernel divides by padded tree count; rescale to true mean
-        out = out * ((T + rem_t) / T)
-    return out[:n0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def flow_stats(values, mask, *, block_n=512, interpret=None):
     interpret = default_interpret() if interpret is None else interpret
-    bn = min(block_n, values.shape[0])
-    v_p, n0 = _pad_to(values, 0, bn)
-    m_p, _ = _pad_to(mask.astype(jnp.int32), 0, bn)
-    out = flow_stats_kernel_call(v_p, m_p, block_n=bn, interpret=interpret)
-    return out[:n0]
+    return flow_stats_kernel_call(
+        values, mask, block_n=block_n, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -22,7 +22,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["forest_infer_kernel_call"]
+__all__ = ["forest_infer_kernel_call", "pad_forest_blocks"]
+
+
+def pad_forest_blocks(feature, threshold, leaf, block_t: int):
+    """Pad the tree axis to a `block_t` multiple with pass-through trees.
+
+    Padding trees have +inf thresholds (every comparison goes left) and
+    all-zero leaves, so they contribute nothing to the vote sum; callers
+    divide by the padded count and rescale by ``(T + rem) / T`` afterwards.
+    The single source of this recipe: `forest_infer_kernel_call` and the
+    fused pipeline kernel must pad identically or their bit-parity breaks.
+    Returns ``(feature, threshold, leaf, rem_t)``.
+    """
+    T = feature.shape[0]
+    rem_t = (-T) % block_t
+    if rem_t:
+        feature = jnp.pad(feature, ((0, rem_t), (0, 0)))
+        threshold = jnp.pad(threshold, ((0, rem_t), (0, 0)),
+                            constant_values=jnp.inf)
+        leaf = jnp.pad(leaf, ((0, rem_t), (0, 0), (0, 0)))
+    return feature, threshold, leaf, rem_t
 
 
 def _tree_kernel(x_ref, f_ref, t_ref, l_ref, o_ref, *, depth: int, n_trees: int):
@@ -81,12 +101,21 @@ def forest_infer_kernel_call(
     NL, K = leaf.shape[1], leaf.shape[2]
     bn = min(block_n, N)
     bt = min(block_t, T)
-    assert N % bn == 0 and T % bt == 0, (N, bn, T, bt)
+    # pad both grid axes up to their block multiples so arbitrary batch and
+    # forest sizes work (and the path has no asserts to lose under -O):
+    # padded flows are zero rows whose output is sliced off; padded trees
+    # are pass-through (+inf threshold, zero leaves) and the vote mean is
+    # rescaled back to the true tree count afterwards.
+    rem_n = (-N) % bn
+    if rem_n:
+        x = jnp.pad(x, ((0, rem_n), (0, 0)))
+    feature, threshold, leaf, rem_t = pad_forest_blocks(
+        feature, threshold, leaf, bt)
 
-    kern = functools.partial(_tree_kernel, depth=depth, n_trees=T)
-    return pl.pallas_call(
+    kern = functools.partial(_tree_kernel, depth=depth, n_trees=T + rem_t)
+    out = pl.pallas_call(
         kern,
-        grid=(N // bn, T // bt),
+        grid=((N + rem_n) // bn, (T + rem_t) // bt),
         in_specs=[
             pl.BlockSpec((bn, F), lambda i, j: (i, 0)),
             pl.BlockSpec((bt, NI), lambda i, j: (j, 0)),
@@ -94,6 +123,10 @@ def forest_infer_kernel_call(
             pl.BlockSpec((bt, NL, K), lambda i, j: (j, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bn, K), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, K), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((N + rem_n, K), jnp.float32),
         interpret=interpret,
     )(x, feature, threshold, leaf)
+    if rem_t:
+        # the kernel averaged over the padded tree count; restore true mean
+        out = out * ((T + rem_t) / T)
+    return out[:N]

@@ -5,10 +5,12 @@ Two serving stacks live here:
 - LM serving steps (`serve_step`): prefill (full-sequence forward) and
   per-token decode against the KV cache — consumed by `launch.specs` when
   assembling decode-shape cells.
-- the streaming traffic runtime (`runtime/`): online flow table,
-  micro-batched shape-bucketed dispatch, and offered-load replay with
+- the streaming traffic runtime (`runtime/`): online flow table with
+  vectorized block ingest (`observe_batch`), micro-batched shape-bucketed
+  dispatch staged in preallocated arenas, and offered-load replay with
   zero-loss throughput measurement — the continuous-serving layer over the
-  jit-specialized CATO pipelines (DESIGN.md §6).
+  jit-specialized CATO pipelines, fused single-launch by default
+  (DESIGN.md §6, §7).
 
 The runtime re-exports resolve lazily (PEP 562): `from repro.serve import
 make_serve_step` must not drag in the traffic/extraction stack, and the

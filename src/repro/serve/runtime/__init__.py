@@ -3,11 +3,15 @@ offered-load replay, and zero-loss throughput measurement (DESIGN.md §6).
 
 Turns the batch `ServingPipeline` into a continuous online service:
 
-    packets -> FlowTable -> MicroBatchDispatcher -> jit pipeline -> labels
+    packet blocks -> FlowTable.observe_batch -> MicroBatchDispatcher
+                  -> staging arenas -> fused Pallas pipeline -> labels
 
-with `replay`/`find_zero_loss_rate` reproducing the paper's Fig. 5c
-zero-loss throughput as a measurement over live packet streams rather than
-a modeled drain rate.
+Ingest is vectorized (`StreamingRuntime.ingest_packets` drives whole
+delivery-ordered blocks through numpy fast paths, bit-equivalent to the
+scalar cadence — DESIGN.md §7), dispatch stages batches in preallocated
+per-bucket arenas, and `replay`/`find_zero_loss_rate` reproduce the
+paper's Fig. 5c zero-loss throughput as a measurement over live packet
+streams rather than a modeled drain rate.
 """
 from .dispatch import BatchRecord, MicroBatchDispatcher, StreamingRuntime, next_bucket
 from .flow_table import FlowStatus, FlowTable, tuple_hash64

@@ -23,6 +23,15 @@ Two policies matter here:
   *k+1* — the ingest thread never waits for the accelerator unless it is
   more than a full batch ahead.
 
+The flush hot path is allocation-free (DESIGN.md §7): the ready queue is an
+array-backed FIFO drained by slicing (no per-item popleft), and each shape
+bucket owns ``max_pending + 1`` preallocated **staging arenas** —
+`TrafficDataset`s whose tensors are reused round-robin across flushes
+(flags staged as float32, so the extraction engine never converts on the
+hot path). The rotation depth is the donation-safety contract: the XLA CPU
+client may alias host buffers zero-copy at submit, so an arena is only
+reused once its batch has provably left the pending window.
+
 Flushes trigger on depth (``max_batch`` flows ready), on timeout (oldest
 ready flow waited ``flush_timeout_s``), or on drain.
 """
@@ -51,6 +60,89 @@ def next_bucket(n: int, min_bucket: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
+def _timeout_boundary(t: np.ndarray, lo: int, hi: int, ref: float,
+                      timeout: float) -> int:
+    """First index k in [lo, hi) where the scalar flush predicate
+    ``t[k] - ref >= timeout`` holds, or hi if none.
+
+    searchsorted locates ~the threshold, then two nudges land on the exact
+    float boundary of the *subtraction* form the per-packet cadence
+    evaluates (which can differ from ``t >= ref + timeout`` by one ulp).
+    The single source of this boundary: both the flush scan and the
+    sub-block bound must agree on it or block ingest loses bit-exactness.
+    """
+    k = lo + int(np.searchsorted(t[lo:hi], ref + timeout, side="left"))
+    while k > lo and t[k - 1] - ref >= timeout:
+        k -= 1
+    while k < hi and t[k] - ref < timeout:
+        k += 1
+    return k
+
+
+class _ReadyQueue:
+    """Array-backed FIFO of (slot, ready_ts): bulk push, sliced drain.
+
+    Replaces the deque of tuples: a flush drains n entries with two slice
+    copies instead of n poplefts, and enqueue accepts whole blocks. The
+    backing arrays grow geometrically and compact in place when the live
+    span has drifted to the tail.
+    """
+
+    __slots__ = ("_slot", "_ready", "_head", "_tail")
+
+    def __init__(self, cap: int = 1024):
+        self._slot = np.empty(cap, np.int64)
+        self._ready = np.empty(cap, np.float64)
+        self._head = 0
+        self._tail = 0
+
+    def __len__(self) -> int:
+        return self._tail - self._head
+
+    def head_ready(self) -> float:
+        return float(self._ready[self._head])
+
+    def _reserve(self, k: int) -> None:
+        cap = self._slot.size
+        n = self._tail - self._head
+        if self._tail + k <= cap:
+            return
+        if n + k <= cap // 2:  # plenty of room once compacted
+            new_cap = cap
+        else:
+            new_cap = cap
+            while new_cap < 2 * (n + k):
+                new_cap *= 2
+        slot = np.empty(new_cap, np.int64)
+        ready = np.empty(new_cap, np.float64)
+        slot[:n] = self._slot[self._head:self._tail]
+        ready[:n] = self._ready[self._head:self._tail]
+        self._slot, self._ready = slot, ready
+        self._head, self._tail = 0, n
+
+    def push(self, slot: int, ready_ts: float) -> None:
+        self._reserve(1)
+        self._slot[self._tail] = slot
+        self._ready[self._tail] = ready_ts
+        self._tail += 1
+
+    def push_many(self, slots: np.ndarray, ready_ts: np.ndarray) -> None:
+        k = len(slots)
+        self._reserve(k)
+        self._slot[self._tail:self._tail + k] = slots
+        self._ready[self._tail:self._tail + k] = ready_ts
+        self._tail += k
+
+    def pop_many(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        h = self._head
+        slots = self._slot[h:h + k].copy()
+        ready = self._ready[h:h + k].copy()
+        self._head = h + k
+        if self._head == self._tail:
+            self._head = self._tail = 0
+        return slots, ready
+
+
 @dataclasses.dataclass
 class BatchRecord:
     """One flushed micro-batch; `preds` is filled when the batch resolves."""
@@ -61,6 +153,7 @@ class BatchRecord:
     bucket: int                # padded batch size actually submitted
     n_real: int
     reason: str                # "full" | "timeout" | "drain"
+    flush_idx: int = -1        # triggering packet index within an ingest block
     probs: Optional[object] = None   # in-flight device array
     preds: Optional[np.ndarray] = None
 
@@ -88,28 +181,69 @@ class MicroBatchDispatcher:
         self.max_pending = max_pending
         self.execute = execute
         self.metrics = metrics if metrics is not None else table.metrics
-        self._queue: deque[tuple[int, float]] = deque()  # (slot, ready_ts)
+        self._queue = _ReadyQueue()
         self._pending: deque[BatchRecord] = deque()
+        self._arenas: dict[int, list[TrafficDataset]] = {}
+        self._arena_turn: dict[int, int] = {}
+        self._flag_scratch: dict[int, np.ndarray] = {}
         self.results: dict[int, object] = {}  # flow_id -> predicted class
         self.records: list[BatchRecord] = []
 
     # -- queue ---------------------------------------------------------------
 
     def enqueue(self, slot: int, ready_ts: float) -> None:
-        self._queue.append((slot, ready_ts))
+        self._queue.push(slot, ready_ts)
 
     def maybe_flush(self, now: float) -> list[BatchRecord]:
         """Flush every full batch, then at most one timeout batch."""
         out = []
         while len(self._queue) >= self.max_batch:
             out.append(self._flush(now, "full"))
-        if self._queue and now - self._queue[0][1] >= self.flush_timeout_s:
+        if len(self._queue) and now - self._queue.head_ready() >= self.flush_timeout_s:
             out.append(self._flush(now, "timeout"))
         return out
 
+    def ingest_ready(
+        self, statuses: np.ndarray, slots: np.ndarray, t: np.ndarray
+    ) -> list[BatchRecord]:
+        """Bulk equivalent of per-packet enqueue + `maybe_flush` over an
+        ingest block: enqueues READY flows at their packet times and fires
+        exactly the flushes (same order, reasons, and `now` values) the
+        scalar cadence would. `t` must be nondecreasing (delivery order);
+        each record carries `flush_idx`, the in-block index of the packet
+        whose arrival triggered it (the replay clock charges the submit
+        there)."""
+        recs: list[BatchRecord] = []
+        ready = (statuses == int(FlowStatus.READY)) | (
+            statuses == int(FlowStatus.READY_EOF))
+        lo = 0
+        for j in np.flatnonzero(ready):
+            j = int(j)
+            self._timeout_scan(t, lo, j, recs)
+            self._queue.push(int(slots[j]), float(t[j]))
+            tj = float(t[j])
+            while len(self._queue) >= self.max_batch:
+                recs.append(self._flush(tj, "full", flush_idx=j))
+            if len(self._queue) and tj - self._queue.head_ready() >= self.flush_timeout_s:
+                recs.append(self._flush(tj, "timeout", flush_idx=j))
+            lo = j + 1
+        self._timeout_scan(t, lo, len(t), recs)
+        return recs
+
+    def _timeout_scan(self, t, lo: int, hi: int, recs: list) -> None:
+        """Fire the timeout flushes that packets [lo, hi) would trigger:
+        per packet, at most one flush of the oldest-ready batch."""
+        while lo < hi and len(self._queue):
+            k = _timeout_boundary(t, lo, hi, self._queue.head_ready(),
+                                  self.flush_timeout_s)
+            if k >= hi:
+                return
+            recs.append(self._flush(float(t[k]), "timeout", flush_idx=k))
+            lo = k + 1
+
     def drain(self, now: float) -> list[BatchRecord]:
         out = []
-        while self._queue:
+        while len(self._queue):
             out.append(self._flush(now, "drain"))
         while self._pending:
             self._resolve(self._pending.popleft())
@@ -117,12 +251,9 @@ class MicroBatchDispatcher:
 
     # -- flush mechanics -----------------------------------------------------
 
-    def _flush(self, now: float, reason: str) -> BatchRecord:
+    def _flush(self, now: float, reason: str, flush_idx: int = -1) -> BatchRecord:
         n = min(len(self._queue), self.max_batch)
-        slots = np.empty(n, dtype=np.int64)
-        ready = np.empty(n, dtype=np.float64)
-        for i in range(n):
-            slots[i], ready[i] = self._queue.popleft()
+        slots, ready = self._queue.pop_many(n)
         bucket = next_bucket(n, self.min_bucket, self.max_batch)
 
         m = self.metrics
@@ -144,6 +275,7 @@ class MicroBatchDispatcher:
             bucket=bucket,
             n_real=n,
             reason=reason,
+            flush_idx=flush_idx,
         )
         if self.execute:
             ds = self.gather(slots, bucket)
@@ -159,34 +291,71 @@ class MicroBatchDispatcher:
         self.records.append(rec)
         return rec
 
+    def _arena(self, bucket: int) -> TrafficDataset:
+        """Preallocated staging batch for this shape bucket, reused across
+        flushes. Flags are staged as float32 so `extraction_fn` skips its
+        per-batch convert.
+
+        ``max_pending + 1`` arenas rotate per bucket: the XLA CPU client may
+        alias host numpy buffers zero-copy instead of copying at submit, so
+        a single arena could be overwritten while its batch is still in
+        flight. An arena comes up for reuse only after `max_pending` further
+        submissions, by which point the dispatcher has necessarily resolved
+        (blocked on) its batch — no live computation can still read it."""
+        ring = self._arenas.get(bucket)
+        if ring is None:
+            P = self.table.pkt_depth
+            ring = [
+                TrafficDataset(
+                    ts=np.zeros((bucket, P), np.float32),
+                    size=np.zeros((bucket, P), np.float32),
+                    direction=np.zeros((bucket, P), np.uint8),
+                    ttl=np.zeros((bucket, P), np.float32),
+                    winsize=np.zeros((bucket, P), np.float32),
+                    flags=np.zeros((bucket, P, 8), np.float32),
+                    flow_len=np.zeros(bucket, np.int32),
+                    proto=np.zeros(bucket, np.float32),
+                    s_port=np.zeros(bucket, np.float32),
+                    d_port=np.zeros(bucket, np.float32),
+                    label=np.zeros(bucket, np.int32),
+                    name="stream-arena",
+                )
+                for _ in range(self.max_pending + 1)
+            ]
+            self._arenas[bucket] = ring
+            self._arena_turn[bucket] = 0
+        turn = self._arena_turn[bucket]
+        self._arena_turn[bucket] = (turn + 1) % len(ring)
+        return ring[turn]
+
     def gather(self, slots: np.ndarray, bucket: int) -> TrafficDataset:
-        """Copy table rows into a padded, dense TrafficDataset batch."""
+        """Fill this bucket's staging arena from table rows (allocation-free:
+        every destination, including the uint8 flags scratch the float32
+        cast reads through, is preallocated per bucket)."""
         t = self.table
         n = len(slots)
-        P = t.pkt_depth
-
-        def pad2(a, dtype):
-            out = np.zeros((bucket, P), dtype=dtype)
-            out[:n] = a[slots]
-            return out
-
-        flags = np.zeros((bucket, P, 8), dtype=np.uint8)
-        flags[:n] = t.flags[slots]
-        meta = lambda a: np.pad(a[slots].astype(np.float32), (0, bucket - n))
-        return TrafficDataset(
-            ts=pad2(t.ts, np.float32),
-            size=pad2(t.size, np.float32),
-            direction=pad2(t.direction, np.uint8),
-            ttl=pad2(t.ttl, np.float32),
-            winsize=pad2(t.winsize, np.float32),
-            flags=flags,
-            flow_len=np.pad(t.ctrl["count"][slots], (0, bucket - n)).astype(np.int32),
-            proto=meta(t.proto),
-            s_port=meta(t.s_port),
-            d_port=meta(t.d_port),
-            label=np.zeros(bucket, dtype=np.int32),
-            name="stream-batch",
-        )
+        ds = self._arena(bucket)
+        for dst, src in (
+            (ds.ts, t.ts), (ds.size, t.size), (ds.direction, t.direction),
+            (ds.ttl, t.ttl), (ds.winsize, t.winsize),
+        ):
+            np.take(src, slots, axis=0, out=dst[:n])
+            dst[n:] = 0
+        scratch = self._flag_scratch.get(bucket)
+        if scratch is None:
+            scratch = np.zeros((bucket, t.pkt_depth, 8), np.uint8)
+            self._flag_scratch[bucket] = scratch
+        np.take(t.flags, slots, axis=0, out=scratch[:n])
+        ds.flags[:n] = scratch[:n]     # casting copy into the staged float32
+        ds.flags[n:] = 0
+        ds.flow_len[:n] = t.ctrl["count"][slots]
+        ds.flow_len[n:] = 0
+        for dst, src in (
+            (ds.proto, t.proto), (ds.s_port, t.s_port), (ds.d_port, t.d_port),
+        ):
+            np.take(src, slots, out=dst[:n])
+            dst[n:] = 0
+        return ds
 
     def _resolve(self, rec: BatchRecord) -> None:
         preds = self.pipeline.finalize(rec.probs)[: rec.n_real]
@@ -203,7 +372,12 @@ class MicroBatchDispatcher:
 
 
 class StreamingRuntime:
-    """Facade: flow table + dispatcher behind a per-packet ingest call.
+    """Facade: flow table + dispatcher behind block and per-packet ingest.
+
+    `ingest_packets` is the primary API: it feeds a delivery-ordered packet
+    block through `FlowTable.observe_batch` and fires exactly the flushes
+    the per-packet cadence would. `ingest_packet` is the scalar
+    compatibility wrapper over the same queue/flush machinery.
 
     Owns no clock — callers pass `now` (wall time in live use, virtual time
     under the replay driver), which is what makes zero-loss search
@@ -243,6 +417,63 @@ class StreamingRuntime:
     @property
     def results(self) -> dict:
         return self.dispatcher.results
+
+    def _sub_block_end(self, now: np.ndarray, lo: int) -> int:
+        """Largest `hi` such that no flush can trigger before packet hi-1.
+
+        A full flush needs the ready queue to reach `max_batch`, which takes
+        at least (max_batch - len(queue)) READY packets; a timeout flush
+        needs an arrival past head_ready + flush_timeout_s (head cannot get
+        older mid-block, and a flow enqueued at t[p] >= t[lo] cannot time
+        out before t[lo] + timeout does). Bounding sub-blocks this way pins
+        every flush — and its table side effects (`mark_predicted`
+        recycling) — to a sub-block's final packet, which is exactly where
+        the per-packet cadence applies them."""
+        disp = self.dispatcher
+        B = len(now)
+        hi = min(B, lo + (disp.max_batch - len(disp._queue)))
+        ref = disp._queue.head_ready() if len(disp._queue) else float(now[lo])
+        k = _timeout_boundary(now, lo, B, ref, disp.flush_timeout_s)
+        return max(lo + 1, min(hi, k + 1))
+
+    def ingest_packets(
+        self, key, now, rel_ts, size, direction, ttl, winsize, flags_byte,
+        proto, s_port, d_port, flow_id, fin,
+    ) -> tuple[np.ndarray, np.ndarray, list[BatchRecord]]:
+        """Ingest a delivery-ordered packet block (arrays of equal length).
+
+        The block is processed in sub-blocks bounded so that a flush can
+        only fire at a sub-block's final packet (`_sub_block_end`): flush
+        side effects — PREDICTED marking and the slot recycling of closed
+        flows — are therefore applied before any later packet is observed,
+        keeping block ingest exact-equivalent to the per-packet cadence
+        even under table pressure and same-block re-tenancy.
+
+        Returns ``(statuses, accumulated, records)``: per-packet
+        `FlowStatus` values, the per-packet payload/tracker cost class, and
+        the micro-batches flushed while the block streamed in (each stamped
+        with the triggering in-block packet index)."""
+        now = np.asarray(now, np.float64)
+        B = len(now)
+        statuses = np.full(B, int(FlowStatus.TRACKED), np.uint8)
+        accumulated = np.zeros(B, bool)
+        recs: list[BatchRecord] = []
+        lo = 0
+        while lo < B:
+            hi = self._sub_block_end(now, lo)
+            st, slots, acc = self.table.observe_batch(
+                key[lo:hi], now[lo:hi], rel_ts[lo:hi], size[lo:hi],
+                direction[lo:hi], ttl[lo:hi], winsize[lo:hi],
+                flags_byte[lo:hi], proto[lo:hi], s_port[lo:hi],
+                d_port[lo:hi], flow_id[lo:hi], fin[lo:hi],
+            )
+            statuses[lo:hi] = st
+            accumulated[lo:hi] = acc
+            for rec in self.dispatcher.ingest_ready(st, slots, now[lo:hi]):
+                rec.flush_idx += lo
+                recs.append(rec)
+            lo = hi
+        return statuses, accumulated, recs
 
     def ingest_packet(
         self, key, now, rel_ts, size, direction, ttl, winsize, flags_byte,

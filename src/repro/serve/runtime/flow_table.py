@@ -134,6 +134,32 @@ class FlowTable:
 
     # -- hash index ----------------------------------------------------------
 
+    def _probe_many(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized read-only probe: slot per key, -1 on miss.
+
+        Replicates `_probe`'s traversal (linear probing, stored-key
+        verification, tombstones skipped) with one numpy step per probe
+        distance across all still-unresolved keys.
+        """
+        U = len(keys)
+        res = np.full(U, -1, np.int64)
+        if U == 0:
+            return res
+        b = (keys & np.uint64(self._mask)).astype(np.int64)
+        pending = np.arange(U)
+        while pending.size:
+            s = self._buckets[b[pending]]
+            empty = s == _EMPTY
+            live = s >= 0
+            match = np.zeros(pending.size, bool)
+            if live.any():
+                match[live] = self.ctrl["key"][s[live]] == keys[pending[live]]
+            res[pending[match]] = s[match]
+            keep = ~(empty | match)  # tombstone / live mismatch: probe on
+            pending = pending[keep]
+            b[pending] = (b[pending] + 1) & self._mask
+        return res
+
     def _probe(self, key: int) -> tuple[int, int]:
         """Return (slot, first_usable_bucket). slot is -1 on miss."""
         b = key & self._mask
@@ -236,8 +262,19 @@ class FlowTable:
         fin: bool,
     ) -> tuple[FlowStatus, int]:
         """Account one packet; returns (status, slot) — slot is -1 on drop."""
+        self.metrics.pkts_total += 1
+        return self._observe1(
+            key, t, rel_ts, size, direction, ttl, winsize, flags_byte,
+            proto, s_port, d_port, flow_id, fin,
+        )
+
+    def _observe1(
+        self, key, t, rel_ts, size, direction, ttl, winsize, flags_byte,
+        proto, s_port, d_port, flow_id, fin,
+    ) -> tuple[FlowStatus, int]:
+        """`observe` body without the pkts_total bump (observe_batch adds
+        the whole block's count up front)."""
         m = self.metrics
-        m.pkts_total += 1
         slot, bucket = self._probe(key)
         if slot < 0:
             if not self._free:
@@ -286,6 +323,172 @@ class FlowTable:
             self.recycle(slot)
             return FlowStatus.CLOSED, slot
         return FlowStatus.TRACKED, slot
+
+    def observe_batch(
+        self,
+        key: np.ndarray,        # (B,) uint64
+        t: np.ndarray,          # (B,) float64 arrival clock
+        rel_ts: np.ndarray,     # (B,) float32 payload timestamp
+        size: np.ndarray,
+        direction: np.ndarray,
+        ttl: np.ndarray,
+        winsize: np.ndarray,
+        flags_byte: np.ndarray,
+        proto: np.ndarray,
+        s_port: np.ndarray,
+        d_port: np.ndarray,
+        flow_id: np.ndarray,
+        fin: np.ndarray,        # (B,) bool
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized `observe` over a packet block, exact-equivalent to the
+        scalar loop in delivery order (DESIGN.md §7).
+
+        Packets are partitioned per 5-tuple key into three phases that
+        reproduce the scalar interleaving exactly:
+
+        1. **Vector prefix** — resident keys with a FIN later in the block
+           apply their pre-FIN payload writes in bulk (no structural effect,
+           and within the key they precede the FIN suffix).
+        2. **Ordered scalar pass** — everything structural runs through
+           `_observe1` per packet in original order: the *first* packet of
+           each new key (allocation order decides slot identity and drops),
+           every packet from a key's first FIN onward (close accounting,
+           PREDICTED recycling, re-tenancy), all packets of new keys that
+           also FIN in the block, and all new-key packets when the free
+           list could run out (allocation vs. recycle order then matters).
+        3. **Vector bulk** — all remaining packets: resident FIN-free keys
+           in full, plus new keys' packets after their (already allocated)
+           first. Per-direction payload writes, seen/last_ts, and READY
+           transitions are numpy fancy-indexing over the whole block;
+           within a key they follow its scalar-phase packets and ordering
+           across keys is immaterial (disjoint slots).
+
+        Returns ``(statuses, slots, accumulated)`` — per-packet FlowStatus
+        values, slot ids (-1 on drop), and whether the packet landed in the
+        dense payload (the replay clock's per-packet cost class).
+        """
+        key = np.asarray(key, np.uint64)
+        B = len(key)
+        m = self.metrics
+        m.pkts_total += B
+        statuses = np.full(B, int(FlowStatus.TRACKED), np.uint8)
+        slots_out = np.full(B, -1, np.int64)
+        accumulated = np.zeros(B, bool)
+        if B == 0:
+            return statuses, slots_out, accumulated
+
+        uk, firstpos, inv = np.unique(key, return_index=True,
+                                      return_inverse=True)
+        U = len(uk)
+        uslot = self._probe_many(uk)
+        # first FIN position per key (B = no FIN in this block); fidx is
+        # ascending, so unique's first occurrence is the minimum position
+        finpos = np.full(U, B, np.int64)
+        fidx = np.flatnonzero(fin)
+        if fidx.size:
+            uf, ufirst = np.unique(inv[fidx], return_index=True)
+            finpos[uf] = fidx[ufirst]
+
+        new_u = uslot < 0
+        has_fin_u = finpos < B
+        # conservative: if allocations could exhaust the free list, the
+        # alloc/recycle interleaving decides slots and drops — keep every
+        # new-key packet in the ordered scalar pass
+        tight = len(self._free) < int(new_u.sum())
+        scalar_all_u = new_u & (has_fin_u | tight)
+
+        pos = np.arange(B)
+        pinv = inv  # per-packet key index
+        # phase-2 membership per packet
+        in_scalar = scalar_all_u[pinv] \
+            | (has_fin_u[pinv] & (pos >= finpos[pinv])) \
+            | (new_u[pinv] & (pos == firstpos[pinv]))
+        # phase-1 membership: resident FIN-key packets before the first FIN
+        in_prefix = (~new_u[pinv]) & has_fin_u[pinv] & (pos < finpos[pinv])
+
+        def fast_apply(fsel: np.ndarray, slot_of_key: np.ndarray) -> None:
+            """Vectorized observe for packets with no structural effects.
+
+            `fsel` holds block positions (ascending); `slot_of_key` maps
+            unique-key index -> resolved slot."""
+            if not fsel.size:
+                return
+            order = np.argsort(pinv[fsel], kind="stable")
+            fs = fsel[order]
+            g = pinv[fs]
+            uniq_g, start = np.unique(g, return_index=True)
+            counts = np.diff(np.append(start, g.size))
+            slots_g = slot_of_key[uniq_g]
+            rank = np.arange(g.size) - np.repeat(start, counts)
+            slots_out[fs] = np.repeat(slots_g, counts)
+
+            # tracker touch: every packet updates seen/last_ts
+            self.ctrl["seen"][slots_g] += counts
+            self.ctrl["last_ts"][slots_g] = t[fs[start + counts - 1]]
+
+            # ACTIVE flows accumulate their first (pkt_depth - count) packets
+            c0 = self.ctrl["count"][slots_g].astype(np.int64)
+            active = self.ctrl["state"][slots_g] == 1
+            n_acc = np.where(active, np.minimum(counts, self.pkt_depth - c0), 0)
+            acc_mask = rank < np.repeat(n_acc, counts)
+            apk = fs[acc_mask]
+            rows = np.repeat(slots_g, n_acc)
+            cols = np.repeat(c0, n_acc) + rank[acc_mask]
+            self.ts[rows, cols] = rel_ts[apk]
+            self.size[rows, cols] = size[apk]
+            self.direction[rows, cols] = direction[apk]
+            self.ttl[rows, cols] = ttl[apk]
+            self.winsize[rows, cols] = winsize[apk]
+            self.flags[rows, cols] = _FLAG_LUT[flags_byte[apk]]
+            self.ctrl["count"][slots_g] = c0 + n_acc
+            accumulated[apk] = True
+            m.pkts_accumulated += int(n_acc.sum())
+            m.pkts_tracked += int(fs.size - n_acc.sum())
+
+            # depth reached inside the block -> READY at the triggering pkt
+            now_ready = np.flatnonzero(active & (c0 + n_acc == self.pkt_depth))
+            if now_ready.size:
+                rdy_slots = slots_g[now_ready]
+                trig = fs[start[now_ready] + n_acc[now_ready] - 1]
+                self.ctrl["state"][rdy_slots] = 2
+                self.ctrl["ready_ts"][rdy_slots] = t[trig]
+                statuses[trig] = int(FlowStatus.READY)
+
+        # phase 1: pre-FIN prefixes of resident FIN-bearing keys
+        fast_apply(np.flatnonzero(in_prefix), uslot)
+
+        # phase 2: structural events in original packet order (bulk-convert
+        # the scalar subset to python values once — ~10x cheaper than
+        # per-field numpy scalar conversion inside the loop)
+        sc = np.flatnonzero(in_scalar)
+        if sc.size:
+            obs = self._observe1
+            for i, k_, t_, rts, sz, dr, tl, ws, fb, pr, sp_, dp_, fl, fn in zip(
+                sc.tolist(), key[sc].tolist(), t[sc].tolist(),
+                rel_ts[sc].tolist(), size[sc].tolist(),
+                direction[sc].tolist(), ttl[sc].tolist(),
+                winsize[sc].tolist(), flags_byte[sc].tolist(),
+                proto[sc].tolist(), s_port[sc].tolist(), d_port[sc].tolist(),
+                flow_id[sc].tolist(), fin[sc].tolist(),
+            ):
+                a0 = m.pkts_accumulated
+                st, sl = obs(k_, t_, rts, sz, dr, tl, ws, fb, pr, sp_, dp_,
+                             fl, bool(fn))
+                statuses[i] = int(st)
+                slots_out[i] = sl
+                accumulated[i] = m.pkts_accumulated > a0
+
+        # phase 3: the fin-free bulk (now-allocated new keys re-resolved)
+        bulk = ~(in_scalar | in_prefix)
+        if bulk.any():
+            slot_of_key = uslot
+            if new_u.any() and not tight:
+                nk = np.flatnonzero(new_u & ~scalar_all_u)
+                if nk.size:
+                    slot_of_key = uslot.copy()
+                    slot_of_key[nk] = self._probe_many(uk[nk])
+            fast_apply(np.flatnonzero(bulk), slot_of_key)
+        return statuses, slots_out, accumulated
 
     # -- maintenance ---------------------------------------------------------
 

@@ -222,27 +222,33 @@ class ServiceModel:
         runtime: StreamingRuntime,
         stream: PacketStream,
         *,
-        n_pkt_sample: int = 4000,
+        n_pkt_sample: int = 8000,
         reps: int = 3,
+        ingest_chunk: int = 128,
     ) -> "ServiceModel":
         """Calibrate from wall-clock timings of the real code paths."""
-        # -- ingest cost: run the actual observe() loop on a scratch table
+        # -- ingest cost: run the actual vectorized observe_batch path
+        # (the path the replay drives) on a scratch table, block by block.
+        # The default block matches the flush-bounded sub-blocks
+        # (~max_batch) the runtime actually feeds it at measured rates.
         table = FlowTable(
             runtime.table.capacity, runtime.table.pkt_depth,
             metrics=RuntimeMetrics(),
         )
         n = min(n_pkt_sample, stream.n_events)
-        fid, pidx = stream.fid[:n], stream.pidx[:n]
+        fid = stream.fid[:n]
+        keys = stream.key[fid]
+        proto, s_port, d_port = (
+            stream.proto[fid], stream.s_port[fid], stream.d_port[fid])
         t0 = time.perf_counter()
-        for i in range(n):
-            f = int(fid[i])
-            table.observe(
-                int(stream.key[f]), float(stream.base_t[i]),
-                float(stream.rel_ts32[i]), float(stream.size[i]),
-                int(stream.direction[i]), float(stream.ttl[i]),
-                float(stream.winsize[i]), int(stream.flags_byte[i]),
-                float(stream.proto[f]), float(stream.s_port[f]),
-                float(stream.d_port[f]), f, bool(stream.fin[i]),
+        for c0 in range(0, n, ingest_chunk):
+            c1 = min(c0 + ingest_chunk, n)
+            table.observe_batch(
+                keys[c0:c1], stream.base_t[c0:c1], stream.rel_ts32[c0:c1],
+                stream.size[c0:c1], stream.direction[c0:c1],
+                stream.ttl[c0:c1], stream.winsize[c0:c1],
+                stream.flags_byte[c0:c1], proto[c0:c1], s_port[c0:c1],
+                d_port[c0:c1], fid[c0:c1], stream.fin[c0:c1],
             )
         pkt_ns = (time.perf_counter() - t0) / n * 1e9
 
@@ -265,6 +271,7 @@ class ServiceModel:
         gather_ns = []
         for b in buckets:
             sl = slots[: min(len(slots), b)]
+            disp_s.gather(sl, b)  # warm: allocates this bucket's arena
             t0 = time.perf_counter()
             ds = disp_s.gather(sl, b)
             gather_ns.append((time.perf_counter() - t0) / max(len(sl), 1) * 1e9)
@@ -314,6 +321,16 @@ class ReplayStats:
         }
 
 
+def _lindley(t: np.ndarray, s: np.ndarray, busy: float) -> np.ndarray:
+    """Vectorized single-server queue recurrence b_i = max(t_i, b_{i-1}) + s_i.
+
+    Standard Lindley unrolling: with S_i = cumsum(s) inclusive,
+    b_i = S_i + max(busy, max_{j<=i}(t_j - S_{j-1})).
+    """
+    cs = np.cumsum(s)
+    return cs + np.maximum(np.maximum.accumulate(t - (cs - s)), busy)
+
+
 def replay(
     stream: PacketStream,
     make_runtime: Callable[[], StreamingRuntime],
@@ -323,20 +340,40 @@ def replay(
     ring_capacity: int = 4096,
     evict_every: int = 512,
 ) -> ReplayStats:
-    """Replay `stream` at `offered_pps` through a fresh runtime."""
+    """Replay `stream` at `offered_pps` through a fresh runtime.
+
+    Packets are driven in blocks of `evict_every` through the vectorized
+    `StreamingRuntime.ingest_packets` path whenever a conservative
+    admission bound proves the ingest ring cannot overflow inside the
+    block (service charged at the worst per-packet rate plus the whole
+    block's possible flush-submit cost). Blocks that might drop fall back
+    to the per-packet loop, whose admission decisions are order-exact; the
+    clock model (ingest lane Lindley recurrence, bounded ring, serialized
+    inference lane) is identical either way — see DESIGN.md §6.3/§7.
+    """
     rt = make_runtime()
     m = rt.metrics
     # tcpreplay-style clock compression: one factor scales delivery times
     t_e = stream.base_t * (stream.base_pps / offered_pps)
+    E = stream.n_events
+
+    s_acc = service.pkt_accum_ns * 1e-9
+    s_trk = service.pkt_track_ns * 1e-9
+    s_max = max(s_acc, s_trk)
+    sub_flow = service.gather_ns_per_flow * 1e-9
 
     busy_ingest = 0.0
     busy_infer = 0.0
-    ring: deque[float] = deque()  # completion times of queued/in-service pkts
+    ring = np.empty(0, np.float64)  # outstanding completion times (sorted)
 
-    def on_batches(recs: list[BatchRecord]) -> None:
+    def on_batches(recs: list[BatchRecord], charge_submit: bool = True) -> None:
+        """Inference-lane accounting; optionally charge the ingest-lane
+        submit cost (the vectorized path charges it inside the recurrence
+        at the triggering packet instead)."""
         nonlocal busy_ingest, busy_infer
         for rec in recs:
-            busy_ingest += service.submit_ns(rec.n_real) * 1e-9
+            if charge_submit:
+                busy_ingest += service.submit_ns(rec.n_real) * 1e-9
             done = max(rec.flush_ts, busy_infer) + service.batch_ns(rec.bucket) * 1e-9
             busy_infer = done
             m.latency.record_many(done - rec.ready_ts)
@@ -347,31 +384,81 @@ def replay(
     win_a, flg_a, fin_a = stream.winsize, stream.flags_byte, stream.fin
     key_a, proto_a = stream.key, stream.proto
     sp_a, dp_a = stream.s_port, stream.d_port
-    ingest = rt.ingest_packet
 
     t = 0.0
-    for i in range(stream.n_events):
-        t = t_e[i]
-        while ring and ring[0] <= t:
-            ring.popleft()
-        if len(ring) >= ring_capacity:
-            m.pkts_total += 1
-            m.drops_ring += 1
-            continue
-        f = int(fid_a[i])
-        acc0 = m.pkts_accumulated
-        _, recs = ingest(
-            int(key_a[f]), t, float(rel32[i]), float(size_a[i]), int(dir_a[i]),
-            float(ttl_a[i]), float(win_a[i]), int(flg_a[i]), float(proto_a[f]),
-            float(sp_a[f]), float(dp_a[f]), f, bool(fin_a[i]),
-        )
-        start_srv = max(t, busy_ingest)
-        busy_ingest = start_srv + service.packet_ns(m.pkts_accumulated > acc0) * 1e-9
-        ring.append(busy_ingest)
-        if recs:
-            on_batches(recs)
-        if (i + 1) % evict_every == 0:
-            on_batches(rt.poll(t))
+    pos = 0
+    while pos < E:
+        hi = min(pos + evict_every, E)
+        tc = t_e[pos:hi]
+        n = hi - pos
+        # retire completed service (the scalar loop's per-arrival popleft)
+        ring = ring[np.searchsorted(ring, tc[0], side="right"):]
+
+        # conservative no-drop proof for this block: every packet at the
+        # slowest service class, all possible flush submits front-loaded
+        b_w = _lindley(tc, np.full(n, s_max), busy_ingest) \
+            + sub_flow * (len(rt.dispatcher._queue) + n)
+        carry = ring.size - np.searchsorted(ring, tc, side="right")
+        own = np.arange(n) - np.searchsorted(b_w, tc, side="right")
+        if int((carry + own).max()) < ring_capacity:
+            # -- vectorized block: admission proven, ingest in one call
+            fid_c = fid_a[pos:hi]
+            _, accumulated, recs = rt.ingest_packets(
+                key_a[fid_c], tc, rel32[pos:hi], size_a[pos:hi],
+                dir_a[pos:hi], ttl_a[pos:hi], win_a[pos:hi], flg_a[pos:hi],
+                proto_a[fid_c], sp_a[fid_c], dp_a[fid_c], fid_c,
+                fin_a[pos:hi],
+            )
+            s_i = np.where(accumulated, s_acc, s_trk)
+            # exact lane recurrence, segmented at flush submits
+            b = np.empty(n)
+            seg_lo = 0
+            for rec in recs:
+                k = rec.flush_idx
+                if k >= seg_lo:
+                    b[seg_lo:k + 1] = _lindley(
+                        tc[seg_lo:k + 1], s_i[seg_lo:k + 1], busy_ingest)
+                    busy_ingest = b[k]
+                    seg_lo = k + 1
+                busy_ingest += service.submit_ns(rec.n_real) * 1e-9
+            if seg_lo < n:
+                b[seg_lo:] = _lindley(tc[seg_lo:], s_i[seg_lo:], busy_ingest)
+                busy_ingest = b[n - 1]
+            ring = np.concatenate([ring, b])
+            on_batches(recs, charge_submit=False)
+            t = tc[-1]
+            if n == evict_every:
+                on_batches(rt.poll(t))
+        else:
+            # -- fallback: per-packet loop, order-exact admission
+            rq: deque[float] = deque(ring.tolist())
+            ingest = rt.ingest_packet
+            for i in range(pos, hi):
+                t = t_e[i]
+                while rq and rq[0] <= t:
+                    rq.popleft()
+                if len(rq) >= ring_capacity:
+                    m.pkts_total += 1
+                    m.drops_ring += 1
+                    continue
+                f = int(fid_a[i])
+                acc0 = m.pkts_accumulated
+                _, recs = ingest(
+                    int(key_a[f]), t, float(rel32[i]), float(size_a[i]),
+                    int(dir_a[i]), float(ttl_a[i]), float(win_a[i]),
+                    int(flg_a[i]), float(proto_a[f]), float(sp_a[f]),
+                    float(dp_a[f]), f, bool(fin_a[i]),
+                )
+                start_srv = max(t, busy_ingest)
+                busy_ingest = start_srv + service.packet_ns(
+                    m.pkts_accumulated > acc0) * 1e-9
+                rq.append(busy_ingest)
+                if recs:
+                    on_batches(recs)
+                if (i + 1) % evict_every == 0:
+                    on_batches(rt.poll(t))
+            ring = np.asarray(rq, np.float64)
+        pos = hi
 
     # stop the clock one flush-timeout after the last packet: flows still
     # queued would have flushed by then anyway, flows short of depth n get

@@ -9,6 +9,14 @@ sub-expressions (direction masks, parsed fields, packet-count denominators)
 are emitted once and CSE'd, and everything else is dead-code-eliminated from
 the compiled executable. ``extract_features`` is the public entry point.
 
+A feature tuple lowers first to a **static stats plan** (`stats_plan`): a
+tuple of per-feature op descriptors that is hashable and order-preserving.
+The plan is the unit of specialization shared by both execution paths —
+`_extract` (the standalone XLA extraction stage) and the fused Pallas
+pipeline kernel (`repro.kernels.fused_pipeline`) trace the *same* emitter
+(`emit_feature_columns`) over it, which is what makes the fused path
+bit-identical to the unfused one (DESIGN.md §7).
+
 All statistics are masked segmented reductions over dense
 ``(flows, max_pkts)`` tensors — the layout the Pallas `feature_extract`
 kernel mirrors for the TPU hot path.
@@ -24,9 +32,16 @@ import numpy as np
 
 from .synth import FLAG_NAMES, TrafficDataset
 
-__all__ = ["extract_features", "extraction_fn"]
+__all__ = [
+    "extract_features",
+    "extraction_fn",
+    "stats_plan",
+    "emit_feature_columns",
+]
 
-_BIG = jnp.float32(3.4e38)
+# python float, not a jnp scalar: weak-typed promotion lands on the same
+# float32 value, and the fused Pallas kernel cannot capture array constants
+_BIG = 3.4e38
 
 
 def _masked_sum(v, m):
@@ -81,12 +96,56 @@ _STATS = {
 _FLAG_IDX = {n: i for i, n in enumerate(FLAG_NAMES)}
 
 
-@functools.partial(jax.jit, static_argnames=("names", "depth", "max_pkts"))
-def _extract(
+# ---------------------------------------------------------------------------
+# static stats plan
+# ---------------------------------------------------------------------------
+
+def stats_plan(names: Sequence[str]) -> tuple[tuple, ...]:
+    """Lower a feature tuple to a static per-feature op plan.
+
+    Each entry is a small hashable descriptor naming the op family and its
+    static parameters; `emit_feature_columns` interprets it at trace time.
+    Because the plan is a pure function of the feature names, both the
+    standalone `_extract` jit and the fused Pallas kernel specialize on the
+    same plan and therefore emit the same op graph (jit-as-conditional-
+    compilation, now inside Pallas too).
+    """
+    plan: list[tuple] = []
+    for name in names:
+        if name == "dur":
+            plan.append(("dur",))
+        elif name in ("proto", "s_port", "d_port"):
+            plan.append(("meta", name))
+        elif name in ("s_load", "d_load"):
+            plan.append(("load", name[0]))
+        elif name in ("s_pkt_cnt", "d_pkt_cnt"):
+            plan.append(("pkt_cnt", name[0]))
+        elif name in ("tcp_rtt", "syn_ack", "ack_dat"):
+            plan.append(("handshake", name))
+        elif name.endswith("_cnt") and name[:-4] in _FLAG_IDX:
+            plan.append(("flag_cnt", _FLAG_IDX[name[:-4]]))
+        else:
+            d, fam, stat = name.split("_")
+            if d not in ("s", "d") or fam not in ("bytes", "iat", "winsize",
+                                                  "ttl") or stat not in _STATS:
+                raise ValueError(f"unknown feature {name!r}")
+            plan.append(("stat", d, fam, stat))
+    return tuple(plan)
+
+
+def emit_feature_columns(
+    plan: tuple[tuple, ...],
+    *,
     ts, size, direction, ttl, winsize, flags, flow_len, proto, s_port, d_port,
-    *, names: tuple[str, ...], depth: int, max_pkts: int,
+    depth: int,
 ):
-    P = max_pkts
+    """Trace the plan's feature columns over (rows, P) packet tensors.
+
+    The single source of op emission for both execution paths: `_extract`
+    calls it on full-batch tensors, the fused pipeline kernel on per-block
+    VMEM tiles. Returns a list of float32 (rows,) columns in plan order.
+    """
+    P = ts.shape[1]
     idx = jnp.arange(P)[None, :]
     valid = (idx < flow_len[:, None]) & (idx < depth)
 
@@ -109,6 +168,7 @@ def _extract(
         return iat, m & has_prev
 
     fields = {"bytes": size, "winsize": winsize, "ttl": ttl}
+    meta = {"proto": proto, "s_port": s_port, "d_port": d_port}
 
     def first_ts(cond):
         any_ = jnp.any(cond, axis=1)
@@ -116,45 +176,57 @@ def _extract(
         return jnp.where(any_, jnp.take_along_axis(ts, i[:, None], axis=1)[:, 0], 0.0)
 
     cols = []
-    for name in names:
-        if name == "dur":
+    for entry in plan:
+        kind = entry[0]
+        if kind == "dur":
             c = _masked_max(ts, valid) - _masked_min(ts, valid)
-        elif name == "proto":
-            c = proto
-        elif name == "s_port":
-            c = s_port
-        elif name == "d_port":
-            c = d_port
-        elif name in ("s_load", "d_load"):
-            d = name[0]
+        elif kind == "meta":
+            c = meta[entry[1]]
+        elif kind == "load":
+            d = entry[1]
             dur = _masked_max(ts, valid) - _masked_min(ts, valid)
             byt = _masked_sum(size, dir_mask[d])
             c = jnp.where(dur > 0, byt * 8.0 / jnp.maximum(dur, 1e-9), 0.0)
-        elif name in ("s_pkt_cnt", "d_pkt_cnt"):
-            c = jnp.sum(dir_mask[name[0]], axis=1).astype(jnp.float32)
-        elif name in ("tcp_rtt", "syn_ack", "ack_dat"):
+        elif kind == "pkt_cnt":
+            c = jnp.sum(dir_mask[entry[1]], axis=1).astype(jnp.float32)
+        elif kind == "handshake":
             syn = flags[:, :, _FLAG_IDX["syn"]] > 0
             ack = flags[:, :, _FLAG_IDX["ack"]] > 0
             t_syn = first_ts(valid & syn & ~ack)
             t_synack = first_ts(valid & syn & ack)
             t_ack = first_ts(valid & ack & ~syn)
-            if name == "tcp_rtt":
+            if entry[1] == "tcp_rtt":
                 c = jnp.maximum(t_ack - t_syn, 0.0)
-            elif name == "syn_ack":
+            elif entry[1] == "syn_ack":
                 c = jnp.maximum(t_synack - t_syn, 0.0)
             else:
                 c = jnp.maximum(t_ack - t_synack, 0.0)
-        elif name.endswith("_cnt") and name[:-4] in _FLAG_IDX:
-            f = _FLAG_IDX[name[:-4]]
-            c = jnp.sum(jnp.where(valid, flags[:, :, f], 0), axis=1).astype(jnp.float32)
-        else:
-            d, fam, stat = name.split("_")
+        elif kind == "flag_cnt":
+            c = jnp.sum(
+                jnp.where(valid, flags[:, :, entry[1]], 0), axis=1
+            ).astype(jnp.float32)
+        else:  # ("stat", dir, family, stat)
+            _, d, fam, stat = entry
             if fam == "iat":
                 v, m = dir_iat(dir_mask[d])
             else:
                 v, m = fields[fam], dir_mask[d]
             c = _STATS[stat](v, m)
         cols.append(c.astype(jnp.float32))
+    return cols
+
+
+@functools.partial(jax.jit, static_argnames=("names", "depth", "max_pkts"))
+def _extract(
+    ts, size, direction, ttl, winsize, flags, flow_len, proto, s_port, d_port,
+    *, names: tuple[str, ...], depth: int, max_pkts: int,
+):
+    cols = emit_feature_columns(
+        stats_plan(names),
+        ts=ts, size=size, direction=direction, ttl=ttl, winsize=winsize,
+        flags=flags, flow_len=flow_len, proto=proto, s_port=s_port,
+        d_port=d_port, depth=depth,
+    )
     return jnp.stack(cols, axis=1)
 
 
@@ -167,9 +239,13 @@ def extraction_fn(names: Sequence[str], depth: int, max_pkts: int):
     names = tuple(names)
 
     def run(ds: TrafficDataset):
+        # the streaming dispatcher's staging arenas store flags as float32
+        # already (DESIGN.md §7); only batch-path uint8 flags pay the convert
+        flags = ds.flags if ds.flags.dtype == np.float32 \
+            else ds.flags.astype(np.float32)
         return _extract(
             ds.ts, ds.size, ds.direction, ds.ttl, ds.winsize,
-            ds.flags.astype(np.float32), ds.flow_len, ds.proto, ds.s_port,
+            flags, ds.flow_len, ds.proto, ds.s_port,
             ds.d_port, names=names, depth=int(depth), max_pkts=max_pkts,
         )
 

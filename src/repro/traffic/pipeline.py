@@ -7,12 +7,25 @@ the Optimizer plus its trained model and returns a single compiled callable
 
 containing exactly the extraction ops for (F, n) (jit specialization ==
 conditional compilation, DESIGN.md §3) fused with the dense-forest inference
-stage (the `tree_infer` Pallas kernel on TPU; interpret mode here). This is
-the deployable artifact — `examples/deploy_pipeline.py` drives it.
+stage. Two fusion levels exist:
+
+- ``fused=False`` (two launches): the jit-specialized XLA extraction
+  executable materializes the ``(N, F)`` feature matrix, then the
+  `tree_infer` Pallas kernel (``use_kernel=True``) or the jnp reference
+  consumes it.
+- ``fused=True`` (one launch): the `fused_pipeline` Pallas kernel computes
+  the feature columns from the static stats plan *inside* the flow tile and
+  runs the forest traversal on the in-register features — no HBM
+  materialization, donated input buffers (DESIGN.md §7). Bit-identical to
+  the unfused path: both trace the same column emitter and the same
+  traversal/vote order.
+
+This is the deployable artifact — `examples/deploy_pipeline.py` drives it.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -23,7 +36,7 @@ from repro.core.forest import DenseForest
 from repro.core.search_space import FeatureRep
 from repro.kernels import ops
 
-from .extraction import extraction_fn
+from .extraction import extraction_fn, stats_plan
 from .synth import TrafficDataset
 
 __all__ = ["ServingPipeline", "build_pipeline"]
@@ -34,6 +47,7 @@ class ServingPipeline:
     rep: FeatureRep
     forest: DenseForest
     _fn: Callable
+    fused: bool = False
 
     def __call__(self, ds: TrafficDataset) -> np.ndarray:
         """Predicted class ids for every flow in the batch."""
@@ -45,6 +59,12 @@ class ServingPipeline:
         JAX dispatch is asynchronous: the caller can keep accumulating the
         next micro-batch while this one runs, and only block in `finalize`.
         The streaming runtime's double-buffered dispatch relies on this.
+
+        Buffer lifetime: the XLA CPU client may alias host numpy buffers
+        zero-copy instead of copying at submit, so the caller must NOT
+        overwrite `ds`'s arrays until this batch has been finalized — the
+        dispatcher guarantees it by rotating `max_pending + 1` staging
+        arenas per bucket (DESIGN.md §7.3).
         """
         return self._fn(ds)
 
@@ -65,12 +85,36 @@ def build_pipeline(
     max_pkts: int,
     *,
     use_kernel: bool = True,
+    fused: bool = False,
 ) -> ServingPipeline:
-    extract = extraction_fn(rep.features, rep.depth, max_pkts)
     feat_t = jnp.asarray(forest.feature)
     thr_t = jnp.asarray(forest.threshold)
     leaf_t = jnp.asarray(forest.leaf)
     depth = forest.depth
+
+    if fused:
+        from repro.kernels.fused_pipeline import fused_forest_infer
+
+        plan = stats_plan(rep.features)
+        conn_depth = int(rep.depth)
+
+        def run(ds: TrafficDataset):
+            with warnings.catch_warnings():
+                # donation cannot engage on the CPU backend (no aliasable
+                # output buffer) and XLA warns once per compile — expected;
+                # scoped here so other code's donation warnings survive
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return fused_forest_infer(
+                    ds.ts, ds.size, ds.direction, ds.ttl, ds.winsize,
+                    ds.flags, ds.flow_len, ds.proto, ds.s_port, ds.d_port,
+                    feat_t, thr_t, leaf_t,
+                    plan=plan, depth=conn_depth, forest_depth=depth,
+                )
+
+        return ServingPipeline(rep, forest, run, fused=True)
+
+    extract = extraction_fn(rep.features, rep.depth, max_pkts)
 
     def run(ds: TrafficDataset):
         x = extract(ds)

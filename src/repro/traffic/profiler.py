@@ -195,12 +195,14 @@ class TrafficProfiler:
         ring_capacity: Optional[int] = None,
         bisect_iters: int = 10,
         verbose: bool = False,
+        fused: bool = True,
     ):
         """Zero-loss throughput measured through the streaming runtime.
 
         Replays the held-out split as an offered-load packet stream through
         `repro.serve.runtime` (flow table -> bucketed micro-batch dispatch
-        -> this representation's jit pipeline) and bisects the highest rate
+        -> this representation's pipeline — by default the single-launch
+        fused Pallas kernel, DESIGN.md §7) and bisects the highest rate
         with zero drops. cost_mode selects the replay clock's constants:
         measured (wall-clock calibration on this machine) or modeled
         (feature-op DAG). Returns (gbps, ReplayStats).
@@ -211,7 +213,8 @@ class TrafficProfiler:
         from .pipeline import build_pipeline
 
         t0 = time.perf_counter()
-        pipe = build_pipeline(x, forest, max_pkts=x.depth, use_kernel=False)
+        pipe = build_pipeline(x, forest, max_pkts=x.depth, fused=fused,
+                              use_kernel=False)
         if self._stream_cache is None:
             self._stream_cache = PacketStream.from_dataset(self.test_ds, seed=self.seed)
         stream = self._stream_cache

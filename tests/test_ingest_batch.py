@@ -1,0 +1,423 @@
+"""Vectorized ingest contracts: observe_batch ≡ observe, block flush timing
+≡ per-packet flush timing, chunked replay ≡ the per-packet reference loop,
+and staging-arena/donation safety under double-buffered dispatch.
+
+These are the DESIGN.md §7 exactness guarantees: the fast path is a
+performance rewrite, not a semantics change, so every comparison below is
+equality (bitwise for table state and predictions), with latency allowed
+float tolerance only where the vectorized Lindley recurrence reassociates
+the scalar max-chain.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve.runtime import (
+    FlowStatus,
+    FlowTable,
+    PacketStream,
+    RuntimeMetrics,
+    ServiceModel,
+    StreamingRuntime,
+    replay,
+)
+from repro.traffic import extract_features, make_dataset
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+
+DEPTH = 6
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("app-class", n_flows=300, max_pkts=24, seed=9)
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=1)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    rep = FeatureRep(
+        ("dur", "s_load", "s_bytes_mean", "d_iat_std", "ack_cnt"), depth=DEPTH)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="rf-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, fused=True)
+
+
+def _pkt_arrays(stream, lo, hi):
+    fid = stream.fid[lo:hi]
+    return dict(
+        key=stream.key[fid], now=stream.base_t[lo:hi],
+        rel_ts=stream.rel_ts32[lo:hi], size=stream.size[lo:hi],
+        direction=stream.direction[lo:hi], ttl=stream.ttl[lo:hi],
+        winsize=stream.winsize[lo:hi], flags_byte=stream.flags_byte[lo:hi],
+        proto=stream.proto[fid], s_port=stream.s_port[fid],
+        d_port=stream.d_port[fid], flow_id=fid, fin=stream.fin[lo:hi],
+    )
+
+
+def _drive_table(stream, *, capacity, pkt_depth, chunk, evict_at=()):
+    """Feed the whole stream through a fresh table; chunk=0 -> scalar path."""
+    ft = FlowTable(capacity, pkt_depth, idle_timeout_s=5.0,
+                   metrics=RuntimeMetrics())
+    E = stream.n_events
+    evict_at = set(evict_at)
+    if chunk == 0:
+        for i in range(E):
+            a = _pkt_arrays(stream, i, i + 1)
+            ft.observe(int(a["key"][0]), float(a["now"][0]),
+                       float(a["rel_ts"][0]), float(a["size"][0]),
+                       int(a["direction"][0]), float(a["ttl"][0]),
+                       float(a["winsize"][0]), int(a["flags_byte"][0]),
+                       float(a["proto"][0]), float(a["s_port"][0]),
+                       float(a["d_port"][0]), int(a["flow_id"][0]),
+                       bool(a["fin"][0]))
+            if i + 1 in evict_at:
+                ft.evict_idle(float(a["now"][0]))
+    else:
+        for lo in range(0, E, chunk):
+            hi = min(lo + chunk, E)
+            a = _pkt_arrays(stream, lo, hi)
+            ft.observe_batch(
+                a["key"], a["now"], a["rel_ts"], a["size"], a["direction"],
+                a["ttl"], a["winsize"], a["flags_byte"], a["proto"],
+                a["s_port"], a["d_port"], a["flow_id"], a["fin"])
+            for j in range(lo + 1, hi + 1):
+                if j in evict_at:
+                    ft.evict_idle(float(stream.base_t[j - 1]))
+        # chunked eviction points must land on block boundaries to compare
+    return ft
+
+
+def _assert_tables_equal(a: FlowTable, b: FlowTable):
+    assert (a.ctrl == b.ctrl).all()
+    for f in ("ts", "size", "direction", "ttl", "winsize", "flags",
+              "proto", "s_port", "d_port"):
+        assert (getattr(a, f) == getattr(b, f)).all(), f
+    assert a._free == b._free
+    assert (a._buckets == b._buckets).all()
+    assert a.metrics.summary() == b.metrics.summary()
+
+
+@pytest.mark.parametrize("chunk", [1, 17, 256])
+def test_observe_batch_state_equivalence(stream, chunk):
+    """Full-stream table state is bitwise identical to the scalar loop for
+    any chunking — payload, control block, hash index, free-list order,
+    and metrics."""
+    scalar = _drive_table(stream, capacity=512, pkt_depth=DEPTH, chunk=0)
+    batch = _drive_table(stream, capacity=512, pkt_depth=DEPTH, chunk=chunk)
+    _assert_tables_equal(scalar, batch)
+
+
+def test_observe_batch_equivalence_under_overflow(stream):
+    """A undersized table sheds flows; drop decisions (allocation order vs
+    free-list state) must sequence exactly as the scalar path."""
+    scalar = _drive_table(stream, capacity=24, pkt_depth=DEPTH, chunk=0)
+    batch = _drive_table(stream, capacity=24, pkt_depth=DEPTH, chunk=64)
+    assert scalar.metrics.drops_table > 0
+    _assert_tables_equal(scalar, batch)
+
+
+def test_observe_batch_equivalence_with_eviction(stream):
+    """Idle eviction interleaved at chunk boundaries stays equivalent
+    (evicted ACTIVE flows -> READY; PREDICTED reclaim; re-tenancy after)."""
+    pts = (512, 1024, 2048)
+    scalar = _drive_table(stream, capacity=256, pkt_depth=DEPTH, chunk=0,
+                          evict_at=pts)
+    batch = _drive_table(stream, capacity=256, pkt_depth=DEPTH, chunk=256,
+                         evict_at=pts)
+    _assert_tables_equal(scalar, batch)
+
+
+def test_observe_batch_fin_close_and_retenancy_in_one_block():
+    """The adversarial slow-path block: a flow completes, is marked
+    PREDICTED, then within a single observe_batch block receives its
+    bidirectional FIN close AND a re-tenancy of the same 5-tuple — the
+    scalar interleaving (recycle before re-alloc) must be preserved."""
+    def build(batch: bool):
+        ft = FlowTable(4, pkt_depth=2, metrics=RuntimeMetrics())
+        # fill to depth -> READY -> PREDICTED
+        for i, t in enumerate((0.0, 0.1)):
+            ft.observe(7, t, t, 100.0, i % 2, 64.0, 1000.0, 0x10,
+                       6.0, 1.0, 2.0, 0, False)
+        slot = ft._probe(7)[0]
+        ft.mark_predicted(np.array([slot]))
+        # block: FIN fwd, FIN rev (-> CLOSED, recycle), then the same key
+        # returns (re-tenancy: must allocate a fresh tenancy, new flow_id)
+        k = np.full(3, 7, np.uint64)
+        t = np.array([0.2, 0.3, 0.4])
+        dirn = np.array([0, 1, 0], np.uint8)
+        fin = np.array([True, True, False])
+        fids = np.array([0, 0, 1])
+        args = (k, t, t.astype(np.float32), np.full(3, 99.0, np.float32),
+                dirn, np.full(3, 64.0, np.float32),
+                np.full(3, 1000.0, np.float32), np.full(3, 0x11, np.uint8),
+                np.full(3, 6.0, np.float32), np.full(3, 1.0, np.float32),
+                np.full(3, 2.0, np.float32), fids, fin)
+        if batch:
+            st, sl, acc = ft.observe_batch(*args)
+        else:
+            st = np.empty(3, np.uint8)
+            sl = np.empty(3, np.int64)
+            for i in range(3):
+                s, q = ft.observe(int(k[i]), float(t[i]), float(t[i]), 99.0,
+                                  int(dirn[i]), 64.0, 1000.0, 0x11, 6.0, 1.0,
+                                  2.0, int(fids[i]), bool(fin[i]))
+                st[i], sl[i] = int(s), q
+        return ft, st, sl
+
+    ft_s, st_s, sl_s = build(batch=False)
+    ft_b, st_b, sl_b = build(batch=True)
+    assert (st_s == st_b).all() and (sl_s == sl_b).all()
+    _assert_tables_equal(ft_s, ft_b)
+    assert st_s[1] == int(FlowStatus.CLOSED)          # bidirectional close
+    assert st_s[2] == int(FlowStatus.TRACKED)          # fresh tenancy
+    assert ft_b.ctrl["flow_id"][sl_b[2]] == 1
+
+
+def test_ingest_packets_flush_timing_equivalence(pipeline, stream):
+    """Block ingest fires the same flushes (order, reason, now, members)
+    as the per-packet cadence, including timeout flushes triggered by
+    packets that enqueue nothing."""
+    def run(block: int):
+        rt = StreamingRuntime(pipeline, capacity=1024, max_batch=32,
+                              min_bucket=8, flush_timeout_s=0.02,
+                              execute=False)
+        E = stream.n_events
+        if block == 0:
+            for i in range(E):
+                a = _pkt_arrays(stream, i, i + 1)
+                rt.ingest_packet(
+                    int(a["key"][0]), float(a["now"][0]), float(a["rel_ts"][0]),
+                    float(a["size"][0]), int(a["direction"][0]),
+                    float(a["ttl"][0]), float(a["winsize"][0]),
+                    int(a["flags_byte"][0]), float(a["proto"][0]),
+                    float(a["s_port"][0]), float(a["d_port"][0]),
+                    int(a["flow_id"][0]), bool(a["fin"][0]))
+        else:
+            for lo in range(0, E, block):
+                hi = min(lo + block, E)
+                a = _pkt_arrays(stream, lo, hi)
+                rt.ingest_packets(
+                    a["key"], a["now"], a["rel_ts"], a["size"],
+                    a["direction"], a["ttl"], a["winsize"], a["flags_byte"],
+                    a["proto"], a["s_port"], a["d_port"], a["flow_id"],
+                    a["fin"])
+        rt.drain(float(stream.base_t[-1]) + 1.0)
+        return rt.dispatcher.records
+
+    want = run(0)
+    got = run(200)
+    assert len(want) == len(got)
+    for w, g in zip(want, got):
+        assert (w.bucket, w.n_real, w.reason, w.flush_ts) == \
+            (g.bucket, g.n_real, g.reason, g.flush_ts)
+        assert (w.flow_ids == g.flow_ids).all()
+        assert (w.ready_ts == g.ready_ts).all()
+
+
+def test_ingest_packets_equivalent_under_table_pressure(pipeline, stream):
+    """Flush side effects land mid-block: with a tiny table and small
+    max_batch, full flushes recycle closed flows' slots while the block is
+    still streaming in — drop accounting and re-tenancy must still match
+    the per-packet cadence exactly (the sub-block bound pins every flush
+    to the packet that triggered it)."""
+    def run(block: int):
+        rt = StreamingRuntime(pipeline, capacity=16, max_batch=8,
+                              min_bucket=8, flush_timeout_s=0.02,
+                              execute=False)
+        E = stream.n_events
+        step = block if block else 1
+        for lo in range(0, E, step):
+            hi = min(lo + step, E)
+            a = _pkt_arrays(stream, lo, hi)
+            if block:
+                rt.ingest_packets(
+                    a["key"], a["now"], a["rel_ts"], a["size"],
+                    a["direction"], a["ttl"], a["winsize"], a["flags_byte"],
+                    a["proto"], a["s_port"], a["d_port"], a["flow_id"],
+                    a["fin"])
+            else:
+                rt.ingest_packet(
+                    int(a["key"][0]), float(a["now"][0]), float(a["rel_ts"][0]),
+                    float(a["size"][0]), int(a["direction"][0]),
+                    float(a["ttl"][0]), float(a["winsize"][0]),
+                    int(a["flags_byte"][0]), float(a["proto"][0]),
+                    float(a["s_port"][0]), float(a["d_port"][0]),
+                    int(a["flow_id"][0]), bool(a["fin"][0]))
+        rt.drain(float(stream.base_t[-1]) + 1.0)
+        return rt
+
+    want = run(0)
+    got = run(256)
+    assert want.metrics.drops_table > 0          # pressure actually happened
+    assert want.metrics.summary() == got.metrics.summary()
+    wrec, grec = want.dispatcher.records, got.dispatcher.records
+    assert len(wrec) == len(grec)
+    for w, g in zip(wrec, grec):
+        assert (w.bucket, w.n_real, w.reason, w.flush_ts) == \
+            (g.bucket, g.n_real, g.reason, g.flush_ts)
+        assert (w.flow_ids == g.flow_ids).all()
+    _assert_tables_equal(want.table, got.table)
+
+
+def test_mid_block_flush_recycling_frees_slots_for_later_packets(pipeline):
+    """The adversarial case for deferred flush side effects: flows close
+    (bidirectional FIN) *before* the full flush that retires them, so
+    `mark_predicted` recycles their slots mid-block — and later packets of
+    the same block need those slots. Block ingest must admit exactly the
+    flows the per-packet cadence admits."""
+    depth = DEPTH  # pipeline pkt_depth
+
+    def seq():
+        pkts = []  # (key, fid, direction, fin)
+        for f in range(4):          # flows A..D: depth pkts, then 2 FINs
+            for p in range(depth):
+                pkts.append((100 + f, f, p % 2, False))
+            if f < 3:               # A,B,C close before the flush fires
+                pkts.append((100 + f, f, 0, True))
+                pkts.append((100 + f, f, 1, True))
+        # D's depth-th packet above made the queue hit max_batch=4 -> full
+        # flush; A,B,C had fin_mask==3, so their slots recycle there.
+        for f in range(4, 7):       # E,F,G need the freed slots
+            pkts.append((200 + f, f, 0, False))
+        return pkts
+
+    def run(block: bool):
+        rt = StreamingRuntime(pipeline, capacity=4, max_batch=4,
+                              min_bucket=4, flush_timeout_s=10.0,
+                              execute=False)
+        pkts = seq()
+        n = len(pkts)
+        key = np.array([p[0] for p in pkts], np.uint64)
+        t = np.arange(n, dtype=np.float64) * 1e-4
+        dirn = np.array([p[2] for p in pkts], np.uint8)
+        fin = np.array([p[3] for p in pkts])
+        fid = np.array([p[1] for p in pkts], np.int64)
+        ones = np.ones(n, np.float32)
+        if block:
+            rt.ingest_packets(key, t, t.astype(np.float32), ones * 99, dirn,
+                              ones * 64, ones * 1000,
+                              np.full(n, 0x10, np.uint8), ones * 6, ones,
+                              ones * 2, fid, fin)
+        else:
+            for i in range(n):
+                rt.ingest_packet(int(key[i]), float(t[i]), float(t[i]), 99.0,
+                                 int(dirn[i]), 64.0, 1000.0, 0x10, 6.0, 1.0,
+                                 2.0, int(fid[i]), bool(fin[i]))
+        return rt
+
+    want = run(False)
+    got = run(True)
+    assert want.metrics.drops_table == 0     # scalar cadence admits E,F,G
+    assert want.metrics.flows_seen == 7
+    assert got.metrics.summary() == want.metrics.summary()
+    _assert_tables_equal(want.table, got.table)
+
+
+def test_chunked_replay_matches_per_packet_reference(pipeline, stream):
+    """The production replay (vectorized admission + Lindley recurrence)
+    reproduces a straight per-packet reference loop: same drops, same
+    batches, same predictions, latency equal to float tolerance."""
+    from collections import deque
+
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    mk = lambda execute=True: StreamingRuntime(
+        pipeline, capacity=1024, max_batch=64, execute=execute)
+
+    stats = replay(stream, mk, stream.base_pps, svc)
+
+    # reference: the scalar driver (pre-vectorization semantics)
+    rt = mk(True)
+    m = rt.metrics
+    busy_ingest = busy_infer = 0.0
+    ring = deque()
+    lat = []
+    t_e = stream.base_t * 1.0  # offered = base rate -> no compression
+
+    def on_batches(recs):
+        nonlocal busy_ingest, busy_infer
+        for rec in recs:
+            busy_ingest += svc.submit_ns(rec.n_real) * 1e-9
+            done = max(rec.flush_ts, busy_infer) + svc.batch_ns(rec.bucket) * 1e-9
+            busy_infer = done
+            lat.extend(done - rec.ready_ts)
+
+    t = 0.0
+    for i in range(stream.n_events):
+        t = t_e[i]
+        while ring and ring[0] <= t:
+            ring.popleft()
+        if len(ring) >= 4096:
+            m.pkts_total += 1
+            m.drops_ring += 1
+            continue
+        f = int(stream.fid[i])
+        a0 = m.pkts_accumulated
+        _, recs = rt.ingest_packet(
+            int(stream.key[f]), t, float(stream.rel_ts32[i]),
+            float(stream.size[i]), int(stream.direction[i]),
+            float(stream.ttl[i]), float(stream.winsize[i]),
+            int(stream.flags_byte[i]), float(stream.proto[f]),
+            float(stream.s_port[f]), float(stream.d_port[f]), f,
+            bool(stream.fin[i]))
+        busy_ingest = max(t, busy_ingest) + svc.packet_ns(
+            m.pkts_accumulated > a0) * 1e-9
+        ring.append(busy_ingest)
+        on_batches(recs)
+        if (i + 1) % 512 == 0:
+            on_batches(rt.poll(t))
+    on_batches(rt.drain(t + rt.dispatcher.flush_timeout_s))
+
+    assert stats.drops == m.drops
+    assert stats.metrics.batches == m.batches
+    assert stats.metrics.flows_predicted == m.flows_predicted
+    assert stats.predictions == dict(rt.results)
+    assert stats.latency_p99_s == pytest.approx(
+        float(np.percentile(lat, 99)), rel=1e-9)
+
+
+def test_replay_fallback_path_on_saturation(pipeline, stream):
+    """Above saturation the admission bound fails, the per-packet fallback
+    engages, and drops are counted — the bisection's upper bracket."""
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    mk = lambda execute=True: StreamingRuntime(
+        pipeline, capacity=512, max_batch=64, execute=execute)
+    # drive far past the ingest lane's modeled service rate so the ring
+    # must overflow regardless of the calibrated constants
+    sat_pps = 4e9 / max(svc.pkt_track_ns, 1e-3)
+    hot = replay(stream, lambda: mk(False), max(sat_pps, stream.base_pps), svc,
+                 ring_capacity=256)
+    assert hot.drops > 0
+    cool = replay(stream, lambda: mk(False), stream.base_pps, svc,
+                  ring_capacity=256)
+    assert cool.drops == 0
+
+
+def test_arena_rotation_protects_pending_batches(pipeline, stream, ds):
+    """Donation/zero-copy safety: with double-buffered dispatch the staging
+    arenas rotate max_pending+1 deep, so overwriting the next batch cannot
+    corrupt an in-flight one — streaming predictions stay bit-identical to
+    the batch pipeline."""
+    disp = StreamingRuntime(pipeline, capacity=64, max_batch=16).dispatcher
+    arenas = [disp.gather(np.arange(4), 16) for _ in range(4)]
+    ids = [id(a.ts) for a in arenas]
+    assert len(set(ids[:3])) == 3          # max_pending+1 distinct arenas
+    assert ids[3] == ids[0]                # then the rotation wraps
+
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    stats = replay(
+        stream,
+        lambda execute=True: StreamingRuntime(
+            pipeline, capacity=1024, max_batch=32, max_pending=2,
+            execute=execute),
+        stream.base_pps, svc)
+    assert stats.drops == 0
+    batch_preds = pipeline(ds.truncate(DEPTH))
+    stream_preds = np.array([stats.predictions[i] for i in range(ds.n_flows)])
+    assert (stream_preds == batch_preds).all()
