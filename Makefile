@@ -1,15 +1,33 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench-runtime bench-compare example-stream
+.PHONY: test lint format bench-smoke bench-smoke-sharded bench-runtime \
+	bench-compare example-stream
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
 
+# lint gate (ruff config in pyproject.toml). `ruff check` is repo-wide;
+# format parity is enforced on the sharded-runtime layer and grows
+# file-by-file as modules get normalized.
+lint:
+	ruff check .
+	ruff format --check src/repro/serve/runtime/shard.py tests/test_shard.py
+
+format:
+	ruff format src/repro/serve/runtime/shard.py tests/test_shard.py
+
 # fast perf datapoint: measured zero-loss throughput -> BENCH_runtime.json
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke
+
+# sharded smoke: 4 RSS-steered workers, gated >= 2x the committed 1-shard
+# median (acceptance floor; measured speedups land nearer n/imbalance)
+bench-smoke-sharded:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --shards 4 \
+		--out results/BENCH_runtime_sharded.json \
+		--single BENCH_runtime.json --min-speedup 2.0
 
 # full runtime benchmark (Fig. 5c, measured) — separate output so it never
 # clobbers the smoke baseline the bench-compare gate diffs against

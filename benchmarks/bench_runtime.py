@@ -6,21 +6,43 @@ ALL/MI10/RFE10 baselines, each measured by offered-load replay through
 records the result as a machine-readable `BENCH_runtime.json` datapoint at
 the repo root so the perf trajectory is tracked across PRs.
 
-    python -m benchmarks.bench_runtime --smoke    # CI-sized, ~a minute
-    python -m benchmarks.bench_runtime            # full figure
+With `--shards N` every point is measured against an RSS-steered
+`ShardedRuntime` (DESIGN.md §8): rows carry a `shard` column — "agg" for
+the aggregate zero-loss rate, 0..N-1 for the per-worker breakdown — and
+`--min-speedup R --single PATH` gates the aggregate median against a
+1-shard datapoint measured with the same config (the CI bench job uses
+this to enforce that 4 workers actually buy >= 2x).
+
+    python -m benchmarks.bench_runtime --smoke              # CI-sized
+    python -m benchmarks.bench_runtime --smoke --shards 4   # sharded
+    python -m benchmarks.bench_runtime                      # full figure
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import statistics
+import sys
 import time
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
 
+def median_agg_pps(doc: dict, method: str = "CATO") -> float:
+    """Median aggregate zero_loss_pps of a method's rows.
+
+    Rows predating the `shard` column count as aggregates (a single
+    worker's only row *is* its aggregate)."""
+    vals = [r["zero_loss_pps"] for r in doc["rows"]
+            if r["method"] == method and r.get("shard", "agg") == "agg"]
+    if not vals:
+        raise SystemExit(f"no {method} aggregate rows in benchmark document")
+    return statistics.median(vals)
+
+
 def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
-        out_path: pathlib.Path | None = None):
+        out_path: pathlib.Path | None = None, shards: int = 1):
     from .fig5_serving_perf import REPLAYED_HEADER as HEADER, run_replayed
 
     out_path = BENCH_PATH if out_path is None else pathlib.Path(out_path)
@@ -31,6 +53,7 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
         max_pkts=32 if smoke else 48,
         bisect_iters=7 if smoke else 10,
         cost_mode="measured",
+        shards=shards,
         verbose=verbose,
     )
     t0 = time.perf_counter()
@@ -38,11 +61,12 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
     wall_s = time.perf_counter() - t0
 
     recs = [dict(zip(HEADER, r)) for r in rows]
-    cato_best = max((r["zero_loss_gbps"] for r in recs if r["method"] == "CATO"),
+    agg = [r for r in recs if r.get("shard", "agg") == "agg"]
+    cato_best = max((r["zero_loss_gbps"] for r in agg if r["method"] == "CATO"),
                     default=0.0)
     gains = {
         r["method"]: round(cato_best / r["zero_loss_gbps"], 3)
-        for r in recs
+        for r in agg
         if r["method"] != "CATO" and r["zero_loss_gbps"] > 0
     }
     out = {
@@ -53,8 +77,9 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
         "rows": recs,
         "cato_best_gbps": cato_best,
         "gain_vs_baseline": gains,
-        "zero_drops_at_reported_rate": all(r["drops"] == 0 for r in recs),
+        "zero_drops_at_reported_rate": all(r["drops"] == 0 for r in agg),
     }
+    out_path.parent.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(out, indent=2) + "\n")
     if verbose:
         print(f"# wrote {out_path} (wall {wall_s:.1f}s, "
@@ -62,11 +87,47 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
     return out
 
 
+def check_speedup(sharded: dict, single_path: pathlib.Path,
+                  min_speedup: float) -> int:
+    """Gate: sharded aggregate median vs a same-config 1-shard datapoint."""
+    single = json.loads(single_path.read_text())
+    cfg_s = {k: v for k, v in sharded["config"].items() if k != "shards"}
+    cfg_1 = {k: v for k, v in single["config"].items() if k != "shards"}
+    if cfg_s != cfg_1:
+        print("config mismatch: sharded and single runs are not comparable\n"
+              f"  sharded: {cfg_s}\n  single:  {cfg_1}", file=sys.stderr)
+        return 2
+    base = median_agg_pps(single)
+    now = median_agg_pps(sharded)
+    speedup = now / base
+    n = sharded["config"].get("shards", 1)
+    print(f"1-shard median CATO zero_loss_pps: {base:,.0f}")
+    print(f"{n}-shard median CATO zero_loss_pps: {now:,.0f}  "
+          f"(speedup {speedup:.2f}x, floor {min_speedup:.2f}x)")
+    if speedup < min_speedup:
+        print(f"FAIL: {n}-shard speedup {speedup:.2f}x < {min_speedup:.2f}x",
+              file=sys.stderr)
+        return 1
+    print("OK: sharded speedup above floor")
+    return 0
+
+
 if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI-sized run")
     p.add_argument("--use-case", default="app", choices=("app", "iot"))
+    p.add_argument("--shards", type=int, default=1,
+                   help="worker count (RSS-steered ShardedRuntime when > 1)")
     p.add_argument("--out", default=None, help="output path (default: repo "
                    "root BENCH_runtime.json)")
+    p.add_argument("--single", default=None,
+                   help="1-shard datapoint to compute sharded speedup against")
+    p.add_argument("--min-speedup", type=float, default=0.0,
+                   help="fail if sharded median speedup vs --single is below "
+                   "this (0 disables)")
     args = p.parse_args()
-    run(smoke=args.smoke, use_case=args.use_case, out_path=args.out)
+    doc = run(smoke=args.smoke, use_case=args.use_case, out_path=args.out,
+              shards=args.shards)
+    if args.single is not None:
+        raise SystemExit(
+            check_speedup(doc, pathlib.Path(args.single), args.min_speedup))

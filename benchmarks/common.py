@@ -9,8 +9,7 @@ import numpy as np
 
 from repro.core import FeatureRep, SearchSpace, build_priors
 from repro.traffic import (
-    FEATURE_NAMES, MINI_FEATURE_NAMES, TrafficProfiler, extract_features,
-    make_dataset,
+    FEATURE_NAMES, MINI_FEATURE_NAMES, TrafficProfiler, make_dataset,
 )
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"

@@ -1,30 +1,61 @@
-"""Perf gate: fresh `--smoke` run vs the committed BENCH_runtime.json.
+"""Perf gate: fresh `--smoke` run vs a baseline BENCH_runtime.json.
 
 Runs the smoke-sized zero-loss benchmark into a scratch file, compares its
-median CATO zero_loss_pps against the committed datapoint, and exits
+median CATO zero_loss_pps against a baseline datapoint, and exits
 non-zero on a regression beyond the threshold (default 20%). Driven by
 ``make bench-compare``; the committed file is only ever rewritten by an
 explicit ``make bench-smoke``.
 
+The baseline defaults to the committed repo-root ``BENCH_runtime.json``
+— meaningful when it was measured on the same machine (the local
+workflow). Measured constants scale with host speed, so cross-machine
+comparisons need one of:
+
+- ``--baseline PATH``: compare against a datapoint measured on *this*
+  machine (CI measures the PR base ref and head on the same runner);
+- ``--relative``: gate the CATO/baseline-methods ratio instead of raw
+  pps — host speed multiplies every method together, so the ratio
+  partially cancels it (coarser: per-row calibration noise remains).
+
     python -m benchmarks.compare_runtime [--threshold 0.2] [--fresh path]
+                                         [--baseline path] [--relative]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import statistics
 import sys
 import tempfile
-import pathlib
 
-from .bench_runtime import BENCH_PATH, run
+from .bench_runtime import BENCH_PATH, median_agg_pps, run
 
 
 def median_cato_pps(doc: dict) -> float:
-    vals = [r["zero_loss_pps"] for r in doc["rows"] if r["method"] == "CATO"]
-    if not vals:
-        raise SystemExit("no CATO rows in benchmark document")
-    return statistics.median(vals)
+    """Median aggregate CATO rate (per-shard breakdown rows excluded)."""
+    return median_agg_pps(doc, "CATO")
+
+
+def relative_cato(doc: dict) -> float:
+    """CATO median over the same-run non-CATO baseline median.
+
+    Host speed multiplies every method's measured service constants, so
+    it cancels in this ratio — comparable across machines."""
+    base = [r["zero_loss_pps"] for r in doc["rows"]
+            if r["method"] != "CATO" and r.get("shard", "agg") == "agg"]
+    if not base:
+        raise SystemExit("no baseline rows to normalize against")
+    return median_cato_pps(doc) / statistics.median(base)
+
+
+def comparable_config(doc: dict) -> dict:
+    """Config key for apples-to-apples checks: a 1-shard run predating
+    the `shards` field equals a modern `shards: 1` run."""
+    cfg = dict(doc.get("config") or {})
+    if cfg.get("shards") == 1:
+        del cfg["shards"]
+    return cfg
 
 
 def main(argv=None) -> int:
@@ -33,12 +64,19 @@ def main(argv=None) -> int:
                    help="max tolerated fractional regression (default 0.20)")
     p.add_argument("--fresh", default=None,
                    help="reuse an existing fresh result instead of re-running")
+    p.add_argument("--baseline", default=None,
+                   help="baseline datapoint to diff against (default: the "
+                   "committed repo-root BENCH_runtime.json)")
+    p.add_argument("--relative", action="store_true",
+                   help="gate CATO/baseline-methods ratio instead of raw "
+                   "pps (partially machine-independent)")
     args = p.parse_args(argv)
 
-    if not BENCH_PATH.exists():
-        print(f"no committed baseline at {BENCH_PATH}", file=sys.stderr)
+    base_path = pathlib.Path(args.baseline) if args.baseline else BENCH_PATH
+    if not base_path.exists():
+        print(f"no baseline at {base_path}", file=sys.stderr)
         return 2
-    committed = json.loads(BENCH_PATH.read_text())
+    committed = json.loads(base_path.read_text())
 
     if args.fresh:
         fresh = json.loads(pathlib.Path(args.fresh).read_text())
@@ -50,19 +88,26 @@ def main(argv=None) -> int:
         finally:
             scratch.unlink(missing_ok=True)
 
-    if not committed.get("smoke") or committed.get("config") != fresh.get("config"):
-        print("config mismatch: committed baseline is not a smoke run with "
+    if (not committed.get("smoke")
+            or comparable_config(committed) != comparable_config(fresh)):
+        print("config mismatch: baseline is not a smoke run with "
               "the current config — refusing an apples-to-oranges diff.\n"
-              f"  committed: smoke={committed.get('smoke')} {committed.get('config')}\n"
-              f"  fresh:     smoke={fresh.get('smoke')} {fresh.get('config')}",
+              f"  baseline: smoke={committed.get('smoke')} {committed.get('config')}\n"
+              f"  fresh:    smoke={fresh.get('smoke')} {fresh.get('config')}",
               file=sys.stderr)
         return 2
 
-    base = median_cato_pps(committed)
-    now = median_cato_pps(fresh)
+    if args.relative:
+        base = relative_cato(committed)
+        now = relative_cato(fresh)
+        what = "CATO/baseline zero_loss ratio"
+    else:
+        base = median_cato_pps(committed)
+        now = median_cato_pps(fresh)
+        what = "median CATO zero_loss_pps"
     ratio = now / base
-    print(f"committed median CATO zero_loss_pps: {base:,.0f}")
-    print(f"fresh     median CATO zero_loss_pps: {now:,.0f}  "
+    print(f"baseline {what}: {base:,.3f}")
+    print(f"fresh    {what}: {now:,.3f}  "
           f"({(ratio - 1) * 100:+.1f}%)")
     if ratio < 1.0 - args.threshold:
         print(f"FAIL: regression beyond {args.threshold:.0%}", file=sys.stderr)

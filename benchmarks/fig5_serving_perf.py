@@ -11,9 +11,7 @@ offered-load replay through the streaming runtime (`repro.serve.runtime`)
 — flow table, bucketed micro-batch dispatch, bisection to the highest
 zero-drop rate. `benchmarks/bench_runtime.py` drives it standalone.
 """
-import numpy as np
-
-from repro.core import CatoOptimizer, FeatureRep, SearchSpace
+from repro.core import CatoOptimizer, SearchSpace
 from repro.traffic import FEATURE_NAMES, TrafficProfiler, make_dataset
 
 from .common import app_setup, emit, iot_setup, priors_for
@@ -22,7 +20,7 @@ from .common import app_setup, emit, iot_setup, priors_for
 def _baselines(space, prof, depths):
     from repro.core.baselines import select_all, select_mi_topk, select_rfe_topk
 
-    Xfull = prof.matrices_at_depth(space.max_depth)[0]
+    prof.matrices_at_depth(space.max_depth)  # warm the full-depth cache
     y = prof.train_ds.label
     out = {}
     for n in depths:
@@ -68,7 +66,8 @@ def space_cap(space, ds):
 
 
 REPLAYED_HEADER = ("method", "depth", "n_features", "f1", "zero_loss_gbps",
-                   "zero_loss_pps", "p50_s", "p99_s", "drops", "compiles")
+                   "zero_loss_pps", "p50_s", "p99_s", "drops", "compiles",
+                   "shard")
 
 
 def run_replayed(
@@ -82,6 +81,7 @@ def run_replayed(
     model="tree-fast",
     verbose=True,
     seed=1,
+    shards=1,
 ):
     """Fig. 5c, measured: zero-loss throughput via streaming-runtime replay.
 
@@ -89,6 +89,12 @@ def run_replayed(
     the resulting Pareto points and the ALL/MI10/RFE10 baselines are then
     each measured end-to-end: train the model, generate the pipeline, and
     bisect the highest offered load the runtime sustains with zero drops.
+
+    With `shards > 1` every measurement runs against an RSS-steered
+    `ShardedRuntime`: the headline row per method (shard="agg") reports
+    the aggregate zero-loss rate, followed by one row per worker
+    (shard=0..n-1) carrying that shard's steered share, drops, and
+    latency tail. Single-worker runs emit only the "agg" row.
     """
     name = "app-class" if use_case == "app" else "iot-class"
     ds = make_dataset(name, n_flows=n_flows, max_pkts=max_pkts, seed=seed)
@@ -105,24 +111,37 @@ def run_replayed(
     def measure(label, rep):
         f1, forest = prof.perf_f1(rep)
         gbps, stats = prof.replayed_throughput_gbps(
-            rep, forest, bisect_iters=bisect_iters)
-        row = (label, rep.depth, len(rep.features), round(f1, 4),
-               round(gbps, 4), round(stats.offered_pps, 1),
-               round(stats.latency_p50_s, 6), round(stats.latency_p99_s, 6),
-               stats.drops, stats.metrics.compile_count())
+            rep, forest, bisect_iters=bisect_iters, n_shards=shards)
+        out = [(label, rep.depth, len(rep.features), round(f1, 4),
+                round(gbps, 4), round(stats.offered_pps, 1),
+                round(stats.latency_p50_s, 6), round(stats.latency_p99_s, 6),
+                stats.drops, stats.metrics.compile_count(), "agg")]
+        for p in stats.per_shard:
+            share = p["pkts_total"] / max(stats.metrics.pkts_total, 1)
+            out.append((label, rep.depth, len(rep.features), round(f1, 4),
+                        round(gbps * share, 4), round(p["offered_pps"], 1),
+                        round(p["latency_p50_s"], 6),
+                        round(p["latency_p99_s"], 6),
+                        p["drops_ring"] + p["drops_table"],
+                        stats.metrics.compile_count(), p["shard"]))
         if verbose:
+            extra = (f" shards={stats.n_shards} "
+                     f"imb={stats.load_imbalance:.2f}"
+                     if stats.n_shards > 1 else "")
             print(f"fig5r {use_case} {label:9s} f1={f1:.3f} "
                   f"zero-loss={gbps:.3f} Gbps p99={stats.latency_p99_s:.4g}s "
-                  f"drops={stats.drops}")
-        return row
+                  f"drops={stats.drops}{extra}")
+        return out
 
     rows = []
     # CATO: the Pareto knee points found by the optimizer
     for o in res.pareto_observations():
-        rows.append(measure("CATO", o.x))
+        rows.extend(measure("CATO", o.x))
     for label, rep in _baselines(space_cap(space, ds), prof, depths).items():
-        rows.append(measure(label, rep))
-    emit(rows, REPLAYED_HEADER, f"fig5_{use_case}_throughput_replayed")
+        rows.extend(measure(label, rep))
+    suffix = "" if shards == 1 else f"_shards{shards}"
+    emit(rows, REPLAYED_HEADER,
+         f"fig5_{use_case}_throughput_replayed{suffix}")
     return rows
 
 

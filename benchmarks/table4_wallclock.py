@@ -17,7 +17,7 @@ def run(iters=15, verbose=True):
 
     t0 = time.perf_counter()
     opt = CatoOptimizer(space, prof, pri, seed=0)
-    res = opt.run(iters)
+    opt.run(iters)
     total = time.perf_counter() - t0
     w = prof.wallclock
     bo_sample = total - sum(w.values())

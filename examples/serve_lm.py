@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import forward, init_cache, init_params
+from repro.models import init_cache, init_params
 from repro.serve import make_serve_step
 
 

@@ -8,8 +8,18 @@ throughput point (highest offered load with zero drops, Fig. 5c), and
 checks that the streaming path's predictions are bit-identical to the
 batch `ServingPipeline` on the same flows.
 
+With `--shards N` the pipeline is replicated across N workers behind
+RSS-style symmetric flow steering (`ShardedRuntime`, DESIGN.md §8): the
+zero-loss bisection runs over the aggregate offered load (a drop on any
+shard fails a trial), per-shard steering shares and drop counters are
+printed, and the prediction-parity check still holds bit-exactly —
+sharding only permutes which worker serves a flow.
+
     PYTHONPATH=src python examples/serve_stream.py
+    PYTHONPATH=src python examples/serve_stream.py --shards 4
 """
+import argparse
+
 import numpy as np
 
 from repro.core import FeatureRep
@@ -17,12 +27,13 @@ from repro.traffic import extract_features, make_dataset
 from repro.traffic.models import macro_f1, train_traffic_model
 from repro.traffic.pipeline import build_pipeline
 from repro.serve.runtime import (
-    PacketStream, ServiceModel, StreamingRuntime, find_zero_loss_rate,
+    PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
+    find_zero_loss_rate,
 )
 
 
-def main():
-    print("== streaming serving runtime: app-class ==")
+def main(n_shards: int = 1):
+    print(f"== streaming serving runtime: app-class ({n_shards} worker(s)) ==")
     ds = make_dataset("app-class", n_flows=1200, max_pkts=48, seed=7)
     train_ds, test_ds = ds.split(test_frac=0.5, seed=0)
 
@@ -41,7 +52,17 @@ def main():
     print(f"trace: {stream.n_flows} flows, {stream.n_events} packets, "
           f"{stream.total_bytes / 1e6:.1f} MB")
 
-    def make_runtime(execute: bool = True) -> StreamingRuntime:
+    # hardware-RSS buffer provisioning: every worker queue owns a
+    # full-size descriptor ring (DESIGN.md §8.3)
+    ring_capacity = max(64, min(4096, stream.n_events // 8))
+
+    def make_runtime(execute: bool = True):
+        if n_shards > 1:
+            return ShardedRuntime(
+                pipeline, n_shards=n_shards, capacity=2048, max_batch=128,
+                min_bucket=8, flush_timeout_s=0.05, idle_timeout_s=60.0,
+                execute=execute,
+            )
         return StreamingRuntime(
             pipeline, capacity=2048, max_batch=128, min_bucket=8,
             flush_timeout_s=0.05, idle_timeout_s=60.0, execute=execute,
@@ -54,15 +75,25 @@ def main():
           f"batch-64 {service.bucket_ns.get(64, 0) / 1e3:,.1f} us")
 
     rate_pps, stats = find_zero_loss_rate(
-        stream, make_runtime, service, iters=10, verbose=False,
+        stream, make_runtime, service, iters=10,
+        ring_capacity=ring_capacity, verbose=False,
     )
     m = stats.metrics
     print(f"\nzero-loss throughput: {stats.offered_gbps:.4f} Gbit/s "
-          f"({rate_pps:,.0f} pkts/s offered)")
+          f"({rate_pps:,.0f} pkts/s offered, aggregate)")
     print(f"  drops at reported rate: {stats.drops} "
           f"(ring {stats.drops_ring}, table {stats.drops_table})")
     print(f"  flow latency p50 {stats.latency_p50_s * 1e3:.3f} ms, "
           f"p99 {stats.latency_p99_s * 1e3:.3f} ms (enqueue -> prediction)")
+    if stats.n_shards > 1:
+        print(f"  load imbalance {stats.load_imbalance:.3f} "
+              f"(max shard share / mean share)")
+        for p in stats.per_shard:
+            share = p["pkts_total"] / max(m.pkts_total, 1)
+            print(f"    shard {p['shard']}: {share * 100:5.1f}% of packets, "
+                  f"{p['batches']} batches, drops {p['drops_ring']}+"
+                  f"{p['drops_table']}, p99 "
+                  f"{p['latency_p99_s'] * 1e3:.3f} ms")
     print("  latency histogram:")
     for lo, hi, n in m.latency.rows():
         print(f"    [{lo * 1e3:9.3f}, {hi * 1e3:9.3f}) ms  {'#' * min(n, 60)} {n}")
@@ -87,4 +118,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="RSS-steered worker count (1 = single runtime)")
+    main(n_shards=ap.parse_args().shards)

@@ -38,15 +38,14 @@ def hvi_contribution(
     F = np.asarray(front, dtype=np.float64)
     F = F[pareto_mask(F)]
     F = F[np.argsort(F[:, 0])]
-    k = F.shape[0]
-    # intervals over x: [l_j, r_j) with staircase height bound_j
-    l = np.concatenate([[-np.inf], F[:, 0]])            # (k+1,)
+    # intervals over x: [lo_j, r_j) with staircase height bound_j
+    lo = np.concatenate([[-np.inf], F[:, 0]])           # (k+1,)
     r = np.concatenate([F[:, 0], [rx]])                 # (k+1,)
     bound = np.concatenate([[ry], F[:, 1]])             # (k+1,)
 
     a = pts[:, 0:1]  # (M,1)
     b = pts[:, 1:2]
-    width = np.minimum(r[None, :], rx) - np.maximum(l[None, :], a)
+    width = np.minimum(r[None, :], rx) - np.maximum(lo[None, :], a)
     height = np.minimum(bound[None, :], ry) - b
     area = np.maximum(width, 0.0) * np.maximum(height, 0.0)
     return area.sum(axis=1)

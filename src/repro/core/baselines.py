@@ -12,7 +12,7 @@ Point-solution selectors compared in §5.2 (Fig. 5), each at a fixed depth:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Sequence
+from typing import Callable
 
 import numpy as np
 

@@ -224,7 +224,6 @@ def _grow_tree(
     # leaves: final node at depth max_depth
     full = node  # every sample ends at depth == number of completed levels
     # If loop broke early, propagate remaining levels as pass-through (left).
-    done_levels = max_depth
     leaf_idx = full
     cnt = np.bincount(leaf_idx, minlength=n_leaves).astype(np.float64)
     for k in range(K):

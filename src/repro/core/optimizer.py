@@ -22,14 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from .acquisition import apply_pibo, ehvi, scalarized_ei
 from .pareto import normalize_objectives, pareto_mask
 from .priors import CatoPriors
-from .search_space import FeatureRep, SearchSpace
+from .search_space import SearchSpace
 from .surrogate import RFSurrogate
 
 __all__ = ["Observation", "CatoResult", "CatoOptimizer"]

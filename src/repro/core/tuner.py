@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
 
 import numpy as np
 

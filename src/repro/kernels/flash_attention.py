@@ -76,8 +76,8 @@ def _fa_kernel(
 
     @pl.when(ik == nk - 1)
     def _finalize():
-        l = l_ref[...]
-        o_ref[0, 0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+        lse = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(lse > 0, lse, 1.0)).astype(o_ref.dtype)
 
 
 def flash_attention_kernel_call(

@@ -112,7 +112,9 @@ def fused_pipeline_call(
 
     rem_n = (-N) % bn
     if rem_n:
-        pad2 = lambda a: jnp.pad(a, ((0, rem_n), (0, 0)))
+        def pad2(a):
+            return jnp.pad(a, ((0, rem_n), (0, 0)))
+
         ts, size, direction, ttl, winsize, meta = map(
             pad2, (ts, size, direction, ttl, winsize, meta))
         flags = jnp.pad(flags, ((0, rem_n), (0, 0), (0, 0)))
@@ -128,8 +130,12 @@ def fused_pipeline_call(
         _fused_kernel, plan=plan, depth=depth, forest_depth=forest_depth,
         n_trees=T + rem_t, block_t=bt, rescale=rescale,
     )
-    tile = lambda i: (i, 0)
-    whole = lambda i: (0, 0)
+    def tile(i):
+        return (i, 0)
+
+    def whole(i):
+        return (0, 0)
+
     out = pl.pallas_call(
         kern,
         grid=((N + rem_n) // bn,),

@@ -13,7 +13,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
 from .decode_attention import decode_attention_kernel_call
 from .feature_extract import flow_stats_kernel_call
 from .flash_attention import flash_attention_kernel_call

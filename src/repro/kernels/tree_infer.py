@@ -47,7 +47,6 @@ def pad_forest_blocks(feature, threshold, leaf, block_t: int):
 
 def _tree_kernel(x_ref, f_ref, t_ref, l_ref, o_ref, *, depth: int, n_trees: int):
     j = pl.program_id(1)
-    nj = pl.num_programs(1)
 
     @pl.when(j == 0)
     def _init():

@@ -18,12 +18,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import init_cache, init_params
-from repro.models.config import ModelConfig, SHAPES, ShapeSpec
-from repro.parallel import ParallelCtx, current_ctx, maybe_axis, param_pspecs, parallel_ctx
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.parallel import ParallelCtx, maybe_axis, param_pspecs, parallel_ctx
 from repro.parallel.sharding import default_rules
 from repro.train import AdamW, make_train_step
 from repro.serve import make_prefill, make_serve_step
@@ -52,8 +51,12 @@ def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
 def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
     """Abstract batch for train/prefill shapes ({tokens, targets, ...})."""
     B, T = shape.global_batch, shape.seq_len
-    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
-    emb = lambda *s: jax.ShapeDtypeStruct(s, _DT[cfg.dtype])
+    def tok(*s):
+        return jax.ShapeDtypeStruct(s, jnp.int32)
+
+    def emb(*s):
+        return jax.ShapeDtypeStruct(s, _DT[cfg.dtype])
+
     if cfg.family == "audio":
         Te = Td = T // 2
         batch = {"frames": emb(B, Te, cfg.d_model), "tokens": tok(B, Td)}

@@ -17,14 +17,10 @@ observability + the counter in the final report).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import pathlib
 import signal
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.launch.mesh import make_local_mesh
@@ -70,10 +66,12 @@ def main(argv=None):
         p_specs = param_pspecs(state["params"], ctx)
         opt_specs = opt.opt_state_pspecs(p_specs, state["params"])
         from jax.sharding import NamedSharding
-        to_sh = lambda specs: jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), specs,
-            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
-        )
+        def to_sh(specs):
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+
         state_sh = {"params": to_sh(p_specs), "opt": to_sh(opt_specs)}
         state = jax.tree_util.tree_map(jax.device_put, state, state_sh)
 

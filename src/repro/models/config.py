@@ -7,7 +7,6 @@ published dimensions plus a `reduced()` variant for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES"]
 

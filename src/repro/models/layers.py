@@ -12,10 +12,6 @@ tensor — peak temp is (B, H, chunk, T). On TPU the fused Pallas kernel
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -24,9 +24,6 @@ block lowers to fixed-shape matmuls + two all_to_alls — no dynamic shapes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -145,7 +142,6 @@ def moe_sharded(
 
     E, k, cf = cfg.expert_slots, cfg.experts_per_tok, cfg.capacity_factor
     G = int(np.prod([mesh.shape[a] for a in ep_axes]))   # EP group count
-    tp = mesh.shape[tp_axis]
     assert E % G == 0, (E, G, "pad n_expert_slots to a multiple of EP size")
     E_loc = E // G
     d = x.shape[-1]

@@ -14,9 +14,6 @@ sLSTM is a per-unit scalar recurrence scanned over time.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -214,7 +211,6 @@ def mamba2_decode_step(x: jax.Array, state: dict, p: dict, cfg):
 # ---------------------------------------------------------------------------
 
 def init_mlstm(key, d: int, n_heads: int, dtype=jnp.bfloat16) -> dict:
-    hd = d // n_heads
     ks = jax.random.split(key, 6)
     return {
         "w_q": init_dense(ks[0], d, d, dtype),

@@ -8,9 +8,6 @@ remat. Activation sharding hints come from `repro.parallel.constrain`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

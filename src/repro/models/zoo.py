@@ -13,9 +13,6 @@ assignment: frames/patches arrive as precomputed embeddings.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,7 +24,7 @@ from .layers import init_dense, init_norm, rms_norm
 from .moe import moe_ref
 from .ssm import (
     init_mamba2, init_mlstm, init_slstm,
-    mamba2_decode_step, mamba2_forward, mamba2_init_state,
+    mamba2_decode_step, mamba2_forward,
     mlstm_decode_step, mlstm_forward,
     slstm_decode_step, slstm_forward,
 )
@@ -110,7 +107,9 @@ def forward(params, batch: dict, cfg: ModelConfig):
     fam = cfg.family
     if fam in ("dense", "moe"):
         x = _embed(params, batch["tokens"], cfg)
-        body = lambda h, pl, i: block_forward(h, pl, cfg)
+        def body(h, pl, i):
+            return block_forward(h, pl, cfg)
+
         x = scan_layers(x, params["blocks"], body, cfg.remat, unroll=cfg.probe)
         return _head(params, x, cfg)
 
@@ -118,17 +117,23 @@ def forward(params, batch: dict, cfg: ModelConfig):
         x_txt = _embed(params, batch["tokens"], cfg)
         x = jnp.concatenate([batch["patches"].astype(x_txt.dtype), x_txt], axis=1)
         x = constrain(x, "dp", None, "tp")
-        body = lambda h, pl, i: block_forward(h, pl, cfg)
+        def body(h, pl, i):
+            return block_forward(h, pl, cfg)
+
         x = scan_layers(x, params["blocks"], body, cfg.remat, unroll=cfg.probe)
         return _head(params, x, cfg)
 
     if fam == "audio":
         enc = constrain(batch["frames"].astype(_DT[cfg.dtype]), "dp", None, "tp")
-        enc_body = lambda h, pl, i: block_forward(h, pl, cfg, causal=False)
+        def enc_body(h, pl, i):
+            return block_forward(h, pl, cfg, causal=False)
+
         enc = scan_layers(enc, params["enc_blocks"], enc_body, cfg.remat, unroll=cfg.probe)
         enc = rms_norm(enc, params["ln_enc"])
         x = _embed(params, batch["tokens"], cfg)
-        dec_body = lambda h, pl, i: block_forward(h, pl, cfg, memory=enc)
+        def dec_body(h, pl, i):
+            return block_forward(h, pl, cfg, memory=enc)
+
         x = scan_layers(x, params["dec_blocks"], dec_body, cfg.remat, unroll=cfg.probe)
         return _head(params, x, cfg)
 
@@ -232,7 +237,6 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
     """One decode step. tokens (B,) int32 -> (logits (B, V), new cache)."""
-    dt = _DT[cfg.dtype]
     fam = cfg.family
     pos = cache["pos"]
     x = jnp.take(params["tok_emb"], tokens, axis=0)  # (B, d)

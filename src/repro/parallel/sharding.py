@@ -19,7 +19,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import numpy as np
@@ -105,7 +105,7 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     if not ctx.active:
         return x
     assert len(logical) == x.ndim, (logical, x.shape)
-    spec = P(*[maybe_axis(ctx, l, d) for l, d in zip(logical, x.shape)])
+    spec = P(*[maybe_axis(ctx, ax, d) for ax, d in zip(logical, x.shape)])
     return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
 
 
@@ -170,6 +170,6 @@ def param_pspecs(params_tree, ctx: Optional[ParallelCtx] = None):
         ndim = len(shape)
         k = len(rule)
         logical = (None,) * (ndim - k) + tuple(rule) if ndim >= k else rule[-ndim:]
-        return P(*[maybe_axis(ctx, l, d) for l, d in zip(logical, shape)])
+        return P(*[maybe_axis(ctx, ax, d) for ax, d in zip(logical, shape)])
 
     return jax.tree_util.tree_map_with_path(spec_for, params_tree)

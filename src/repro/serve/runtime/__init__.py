@@ -12,10 +12,17 @@ scalar cadence — DESIGN.md §7), dispatch stages batches in preallocated
 per-bucket arenas, and `replay`/`find_zero_loss_rate` reproduce the
 paper's Fig. 5c zero-loss throughput as a measurement over live packet
 streams rather than a modeled drain rate.
+
+Horizontal scale is `ShardedRuntime` (DESIGN.md §8): n independent
+workers behind RSS-style symmetric 5-tuple steering, per-shard
+tables/dispatch/metrics with an aggregate view, and sharded zero-loss
+replay where a drop on any shard fails the trial — bit-identical
+predictions to the single-worker path by construction.
 """
 from .dispatch import BatchRecord, MicroBatchDispatcher, StreamingRuntime, next_bucket
-from .flow_table import FlowStatus, FlowTable, tuple_hash64
+from .flow_table import FlowStatus, FlowTable, symmetric_tuple_hash64, tuple_hash64
 from .metrics import LatencyHistogram, RuntimeMetrics
+from .shard import AggregateMetrics, ShardedRuntime
 from .replay import (
     PacketStream,
     ReplayStats,
@@ -25,6 +32,7 @@ from .replay import (
 )
 
 __all__ = [
+    "AggregateMetrics",
     "BatchRecord",
     "FlowStatus",
     "FlowTable",
@@ -34,9 +42,11 @@ __all__ = [
     "ReplayStats",
     "RuntimeMetrics",
     "ServiceModel",
+    "ShardedRuntime",
     "StreamingRuntime",
     "find_zero_loss_rate",
     "next_bucket",
     "replay",
+    "symmetric_tuple_hash64",
     "tuple_hash64",
 ]

@@ -154,6 +154,7 @@ class BatchRecord:
     n_real: int
     reason: str                # "full" | "timeout" | "drain"
     flush_idx: int = -1        # triggering packet index within an ingest block
+    shard: int = 0             # owning worker under a ShardedRuntime
     probs: Optional[object] = None   # in-flight device array
     preds: Optional[np.ndarray] = None
 
@@ -396,12 +397,17 @@ class StreamingRuntime:
         max_pending: int = 2,
         execute: bool = True,
         pkt_depth: Optional[int] = None,
+        load_factor: float = 0.5,
+        rebuild_tombstone_frac: float = 0.25,
     ):
         self.pipeline = pipeline
         depth = pkt_depth if pkt_depth is not None else pipeline.rep.depth
         self.metrics = RuntimeMetrics()
         self.table = FlowTable(
-            capacity, depth, idle_timeout_s=idle_timeout_s, metrics=self.metrics
+            capacity, depth, idle_timeout_s=idle_timeout_s,
+            load_factor=load_factor,
+            rebuild_tombstone_frac=rebuild_tombstone_frac,
+            metrics=self.metrics,
         )
         self.dispatcher = MicroBatchDispatcher(
             self.table,
@@ -417,6 +423,10 @@ class StreamingRuntime:
     @property
     def results(self) -> dict:
         return self.dispatcher.results
+
+    @property
+    def flush_timeout_s(self) -> float:
+        return self.dispatcher.flush_timeout_s
 
     def _sub_block_end(self, now: np.ndarray, lo: int) -> int:
         """Largest `hi` such that no flush can trigger before packet hi-1.

@@ -32,7 +32,12 @@ import numpy as np
 
 from repro.serve.runtime.metrics import RuntimeMetrics
 
-__all__ = ["FlowStatus", "FlowTable", "tuple_hash64"]
+__all__ = [
+    "FlowStatus",
+    "FlowTable",
+    "symmetric_tuple_hash64",
+    "tuple_hash64",
+]
 
 
 _CTRL_DTYPE = np.dtype([
@@ -87,6 +92,49 @@ def tuple_hash64(s_ip: int, d_ip: int, s_port: int, d_port: int, proto: int) -> 
     return h or 1  # 0 is reserved for "empty bucket"
 
 
+def _splitmix64_np(x: np.ndarray) -> np.ndarray:
+    """Vectorized `_splitmix64` over uint64 arrays (wrapping arithmetic)."""
+    with np.errstate(over="ignore"):  # mod-2^64 wrap is the algorithm
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+def symmetric_tuple_hash64(
+    s_ip, d_ip, s_port, d_port, proto
+) -> np.ndarray:
+    """Direction-invariant 5-tuple hash: RSS-style symmetric steering key.
+
+    The two endpoints are sorted (ip, then port) before packing, so the
+    forward and reverse directions of a flow hash identically — the
+    property NIC symmetric-RSS needs so both halves of a connection land
+    on the same queue/worker. Accepts scalars or equal-length arrays;
+    always returns a uint64 ndarray. Distinct from `tuple_hash64`, which
+    is intentionally asymmetric (it is the flow-table identity key and
+    must separate A->B from B->A when both are tracked)."""
+    s_ip = np.asarray(s_ip, np.uint64)
+    d_ip = np.asarray(d_ip, np.uint64)
+    s_port = np.asarray(s_port, np.uint64)
+    d_port = np.asarray(d_port, np.uint64)
+    proto = np.asarray(proto, np.uint64)
+    swap = (s_ip > d_ip) | ((s_ip == d_ip) & (s_port > d_port))
+    lo_ip = np.where(swap, d_ip, s_ip)
+    hi_ip = np.where(swap, s_ip, d_ip)
+    lo_port = np.where(swap, d_port, s_port)
+    hi_port = np.where(swap, s_port, d_port)
+    w1 = ((lo_ip & np.uint64(0xFFFFFFFF)) << np.uint64(32)) | (
+        hi_ip & np.uint64(0xFFFFFFFF)
+    )
+    w2 = (
+        ((proto & np.uint64(0xFF)) << np.uint64(32))
+        | ((lo_port & np.uint64(0xFFFF)) << np.uint64(16))
+        | (hi_port & np.uint64(0xFFFF))
+    )
+    h = _splitmix64_np(_splitmix64_np(w1) ^ w2)
+    return np.where(h == 0, np.uint64(1), h)
+
+
 _EMPTY = -1      # bucket sentinel: never used
 _TOMBSTONE = -2  # bucket sentinel: deleted, keep probing
 
@@ -100,13 +148,30 @@ class FlowTable:
         pkt_depth: int,
         *,
         idle_timeout_s: float = 60.0,
+        load_factor: float = 0.5,
+        rebuild_tombstone_frac: float = 0.25,
         metrics: RuntimeMetrics | None = None,
     ):
         if capacity <= 0 or pkt_depth <= 0:
             raise ValueError("capacity and pkt_depth must be positive")
+        if not 0.0 < load_factor < 1.0:
+            raise ValueError("load_factor must be in (0, 1)")
+        if rebuild_tombstone_frac < 0.0:
+            raise ValueError("rebuild_tombstone_frac must be >= 0")
+        if load_factor + rebuild_tombstone_frac >= 1.0:
+            # probe termination proof: live slots (<= n_buckets *
+            # load_factor) plus un-rebuilt tombstones (<= n_buckets *
+            # rebuild_tombstone_frac) must leave at least one EMPTY
+            # bucket, or a probe miss on a full table never terminates
+            raise ValueError(
+                "load_factor + rebuild_tombstone_frac must be < 1.0 "
+                "(open addressing needs a guaranteed empty bucket)"
+            )
         self.capacity = capacity
         self.pkt_depth = pkt_depth
         self.idle_timeout_s = idle_timeout_s
+        self.load_factor = load_factor
+        self.rebuild_tombstone_frac = rebuild_tombstone_frac
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
 
         self.ctrl = np.zeros(capacity, dtype=_CTRL_DTYPE)
@@ -121,14 +186,16 @@ class FlowTable:
         self.s_port = np.zeros(capacity, dtype=np.float32)
         self.d_port = np.zeros(capacity, dtype=np.float32)
 
-        # open-addressed index: power-of-two bucket array at load <= 0.5
+        # open-addressed index: power-of-two bucket array sized so a full
+        # table stays at load <= load_factor (default 0.5)
         n_buckets = 1
-        while n_buckets < 2 * capacity:
+        while n_buckets * load_factor < capacity:
             n_buckets *= 2
         self._n_buckets = n_buckets
         self._mask = n_buckets - 1
         self._buckets = np.full(n_buckets, _EMPTY, dtype=np.int64)
         self._tombstones = 0
+        self._rebuild_at = int(n_buckets * rebuild_tombstone_frac)
 
         self._free = list(range(capacity - 1, -1, -1))  # pop() -> slot 0 first
 
@@ -189,7 +256,7 @@ class FlowTable:
             if s >= 0 and self.ctrl["key"][s] == key:
                 self._buckets[b] = _TOMBSTONE
                 self._tombstones += 1
-                if self._tombstones > self._n_buckets // 4:
+                if self._tombstones > self._rebuild_at:
                     self._rebuild_index()
                 return
             b = (b + 1) & self._mask

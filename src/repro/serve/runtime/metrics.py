@@ -103,6 +103,30 @@ class RuntimeMetrics:
         """All loss sources combined — the zero-loss criterion counts both."""
         return self.drops_ring + self.drops_table
 
+    @classmethod
+    def merged(cls, parts: "list[RuntimeMetrics]") -> "RuntimeMetrics":
+        """Aggregate view over per-shard metric blocks (DESIGN.md §8).
+
+        Counters sum (every int field, by introspection, so counters
+        added later are aggregated automatically), occupancy samples
+        concatenate (in shard order — the aggregate cares about the
+        distribution, not the interleaving), shape sets union (the jit
+        cache is shared across shards, so the union *is* the compile
+        bound), and latency samples merge into one histogram. The parts
+        are copied out, not aliased: mutating the merged block never
+        writes back into a shard."""
+        agg = cls()
+        counter_names = [
+            f.name for f in dataclasses.fields(cls) if f.type in (int, "int")
+        ]
+        for p in parts:
+            for name in counter_names:
+                setattr(agg, name, getattr(agg, name) + getattr(p, name))
+            agg.batch_occupancy.extend(p.batch_occupancy)
+            agg.shapes_seen |= p.shapes_seen
+            agg.latency._samples.extend(p.latency._samples)
+        return agg
+
     def compile_count(self) -> int:
         """Distinct dispatch shapes == upper bound on new XLA executables."""
         return len(self.shapes_seen)

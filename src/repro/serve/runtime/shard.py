@@ -1,0 +1,313 @@
+"""Sharded multi-worker runtime: RSS-style flow steering (DESIGN.md §8).
+
+Real deployments do not scale a traffic pipeline by making one core
+faster — they replicate the per-core pipeline and let NIC receive-side
+scaling (RSS) spread flows across queues. This module is that layer:
+
+- `symmetric_tuple_hash64` (flow_table) gives the steering key: both
+  directions of a connection hash identically, so a flow's entire packet
+  history lands on exactly one worker;
+- a 128-entry **indirection table** maps hash -> shard, exactly like the
+  NIC's RETA: steering policy is a table rewrite, not a rehash;
+- `ShardedRuntime` owns `n_shards` fully independent `StreamingRuntime`
+  workers — per-shard `FlowTable`, dispatcher, staging arenas, and
+  metrics block — behind the same block-ingest facade, with per-shard
+  table sizing (`capacity` is the *aggregate* budget unless
+  `capacity_per_shard` overrides it);
+- `AggregateMetrics` is the operator view: summed drop/evict counters,
+  per-shard occupancy, and the load-imbalance factor (max shard packet
+  share over the mean — 1.0 is a perfectly balanced hash).
+
+Sharding only permutes *which* worker serves a flow, never what it
+predicts: flows are independent in extraction and inference, so the
+sharded runtime is bit-identical to a single worker fed the same
+packets (asserted by tests/test_shard.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.traffic.pipeline import ServingPipeline
+
+from .dispatch import BatchRecord, StreamingRuntime
+from .flow_table import symmetric_tuple_hash64
+from .metrics import RuntimeMetrics
+
+__all__ = [
+    "AggregateMetrics",
+    "ShardedRuntime",
+    "INDIRECTION_SIZE",
+    "steer_flows",
+]
+
+
+# RETA size: NICs commonly expose 128 indirection entries. Steering is
+# `table[sym_hash & 127]`, so rebalancing = rewriting table entries.
+INDIRECTION_SIZE = 128
+
+
+def steer_flows(stream, n_shards: int, indirection=None) -> np.ndarray:
+    """Per-flow shard assignment for a `PacketStream` — the pure steering
+    function (no runtime needed; callers sizing per-queue buffers use it
+    to find the hottest shard before building anything).
+
+    Uses the stream's recorded 5-tuple endpoints when present; streams
+    predating the endpoint fields fall back to steering on the
+    flow-identity hash (stable, but not direction-symmetric).
+    """
+    if indirection is None:
+        indirection = np.arange(INDIRECTION_SIZE, dtype=np.int64) % n_shards
+    if getattr(stream, "s_ip", None) is not None:
+        sym = symmetric_tuple_hash64(
+            stream.s_ip,
+            stream.d_ip,
+            stream.s_port.astype(np.int64),
+            stream.d_port.astype(np.int64),
+            stream.proto.astype(np.int64),
+        )
+    else:
+        sym = np.asarray(stream.key, np.uint64)
+    return indirection[sym & np.uint64(INDIRECTION_SIZE - 1)]
+
+
+class AggregateMetrics:
+    """Cross-shard metrics view: per-shard blocks + merged aggregate.
+
+    The per-shard `RuntimeMetrics` stay the single source of truth (the
+    hot paths keep mutating plain ints); this object derives the summed
+    aggregate and the balance statistics on demand.
+    """
+
+    def __init__(self, parts: list[RuntimeMetrics]):
+        self.parts = parts
+
+    def merged(self) -> RuntimeMetrics:
+        return RuntimeMetrics.merged(self.parts)
+
+    @property
+    def drops(self) -> int:
+        return sum(p.drops for p in self.parts)
+
+    @property
+    def drops_ring(self) -> int:
+        return sum(p.drops_ring for p in self.parts)
+
+    @property
+    def drops_table(self) -> int:
+        return sum(p.drops_table for p in self.parts)
+
+    @property
+    def flows_evicted_idle(self) -> int:
+        return sum(p.flows_evicted_idle for p in self.parts)
+
+    def per_shard_occupancy(self) -> list[dict]:
+        return [p.occupancy_stats() for p in self.parts]
+
+    def load_imbalance(self) -> float:
+        """Max shard packet share over the mean share (>= 1.0).
+
+        1.0 means the steering hash split the offered load perfectly;
+        the aggregate zero-loss rate degrades by roughly this factor
+        because the hottest shard saturates first.
+        """
+        pkts = np.array([p.pkts_total for p in self.parts], np.float64)
+        if pkts.sum() == 0:
+            return 1.0
+        return float(pkts.max() / pkts.mean())
+
+    def summary(self) -> dict:
+        return {
+            "n_shards": len(self.parts),
+            "load_imbalance": self.load_imbalance(),
+            "aggregate": self.merged().summary(),
+            "per_shard": [
+                {
+                    "pkts_total": p.pkts_total,
+                    "drops_ring": p.drops_ring,
+                    "drops_table": p.drops_table,
+                    "flows_seen": p.flows_seen,
+                    "flows_predicted": p.flows_predicted,
+                    "flows_evicted_idle": p.flows_evicted_idle,
+                    "batches": p.batches,
+                    "occupancy": p.occupancy_stats(),
+                }
+                for p in self.parts
+            ],
+        }
+
+
+class ShardedRuntime:
+    """`n_shards` independent streaming workers behind one ingest facade.
+
+    Steering is the only coupling between shards: a packet's shard is a
+    pure function of its symmetric 5-tuple hash, so per-shard state
+    (flow table, ready queue, staging arenas, pending window) never
+    synchronizes. The pipeline object is shared — jit executables are
+    compiled once per shape bucket for the whole fleet, and per-shard
+    arenas keep the zero-copy submit lifecycle private to each worker.
+    """
+
+    def __init__(
+        self,
+        pipeline: ServingPipeline,
+        *,
+        n_shards: int,
+        capacity: int = 2048,
+        capacity_per_shard: Optional[int] = None,
+        max_batch: int = 256,
+        min_bucket: int = 8,
+        flush_timeout_s: float = 0.05,
+        idle_timeout_s: float = 60.0,
+        max_pending: int = 2,
+        execute: bool = True,
+        pkt_depth: Optional[int] = None,
+        load_factor: float = 0.5,
+        rebuild_tombstone_frac: float = 0.25,
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.pipeline = pipeline
+        # aggregate table budget split evenly unless sized explicitly
+        per_shard = (
+            capacity_per_shard
+            if capacity_per_shard is not None
+            else -(-capacity // n_shards)
+        )
+        self.capacity_per_shard = per_shard
+        self.flush_timeout_s = flush_timeout_s
+        self.shards = [
+            StreamingRuntime(
+                pipeline,
+                capacity=per_shard,
+                max_batch=max_batch,
+                min_bucket=min_bucket,
+                flush_timeout_s=flush_timeout_s,
+                idle_timeout_s=idle_timeout_s,
+                max_pending=max_pending,
+                execute=execute,
+                pkt_depth=pkt_depth,
+                load_factor=load_factor,
+                rebuild_tombstone_frac=rebuild_tombstone_frac,
+            )
+            for _ in range(n_shards)
+        ]
+        # RSS indirection table (RETA): round-robin fill spreads the
+        # hash space evenly; rebalancing rewrites entries, not the hash
+        self.indirection = np.arange(INDIRECTION_SIZE, dtype=np.int64) % n_shards
+
+    # -- steering ------------------------------------------------------------
+
+    def steer_hash(self, sym_key) -> np.ndarray:
+        """Symmetric hash -> shard id via the indirection table."""
+        sym_key = np.asarray(sym_key, np.uint64)
+        return self.indirection[sym_key & np.uint64(INDIRECTION_SIZE - 1)]
+
+    def steer(self, s_ip, d_ip, s_port, d_port, proto) -> np.ndarray:
+        """5-tuple -> shard id; invariant under direction reversal."""
+        return self.steer_hash(
+            symmetric_tuple_hash64(s_ip, d_ip, s_port, d_port, proto)
+        )
+
+    def steer_stream(self, stream) -> np.ndarray:
+        """Per-flow shard assignment for a `PacketStream` under this
+        fleet's indirection table (see module-level `steer_flows`)."""
+        return steer_flows(stream, self.n_shards, self.indirection)
+
+    # -- facade --------------------------------------------------------------
+
+    @property
+    def results(self) -> dict:
+        """Merged flow_id -> prediction map. Shards partition the flow
+        space, so the union is collision-free by construction."""
+        out: dict = {}
+        for rt in self.shards:
+            out.update(rt.results)
+        return out
+
+    @property
+    def metrics(self) -> AggregateMetrics:
+        return AggregateMetrics([rt.metrics for rt in self.shards])
+
+    def ingest_packets(
+        self,
+        key,
+        now,
+        rel_ts,
+        size,
+        direction,
+        ttl,
+        winsize,
+        flags_byte,
+        proto,
+        s_port,
+        d_port,
+        flow_id,
+        fin,
+        *,
+        shard: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, list[BatchRecord]]:
+        """Steered block ingest: split a delivery-ordered packet block by
+        `shard` (per-packet shard ids, e.g. `steer_stream(...)[fid]`) and
+        drive each sub-block through its worker.
+
+        Within a shard, delivery order is preserved (stable partition),
+        which is all correctness needs — packets of one flow never cross
+        shards. Returned records carry `shard` and block-global
+        `flush_idx`; records are grouped by shard, not interleaved in
+        global time (the shards are independent clocks).
+        """
+        shard = np.asarray(shard)
+        now = np.asarray(now, np.float64)
+        B = len(now)
+        statuses = np.zeros(B, np.uint8)
+        accumulated = np.zeros(B, bool)
+        recs: list[BatchRecord] = []
+        for i, rt in enumerate(self.shards):
+            idx = np.flatnonzero(shard == i)
+            if not idx.size:
+                continue
+            st, acc, sub = rt.ingest_packets(
+                np.asarray(key)[idx],
+                now[idx],
+                np.asarray(rel_ts)[idx],
+                np.asarray(size)[idx],
+                np.asarray(direction)[idx],
+                np.asarray(ttl)[idx],
+                np.asarray(winsize)[idx],
+                np.asarray(flags_byte)[idx],
+                np.asarray(proto)[idx],
+                np.asarray(s_port)[idx],
+                np.asarray(d_port)[idx],
+                np.asarray(flow_id)[idx],
+                np.asarray(fin)[idx],
+            )
+            statuses[idx] = st
+            accumulated[idx] = acc
+            for rec in sub:
+                rec.shard = i
+                if rec.flush_idx >= 0:
+                    rec.flush_idx = int(idx[rec.flush_idx])
+                recs.append(rec)
+        return statuses, accumulated, recs
+
+    def poll(self, now: float) -> list[BatchRecord]:
+        """Periodic maintenance on every shard (idle eviction, timeouts)."""
+        recs: list[BatchRecord] = []
+        for i, rt in enumerate(self.shards):
+            for rec in rt.poll(now):
+                rec.shard = i
+                recs.append(rec)
+        return recs
+
+    def drain(self, now: float) -> list[BatchRecord]:
+        """End of stream: drain every shard's table and pending window."""
+        recs: list[BatchRecord] = []
+        for i, rt in enumerate(self.shards):
+            for rec in rt.drain(now):
+                rec.shard = i
+                recs.append(rec)
+        return recs

@@ -7,7 +7,6 @@ prefill_32k lowers this, decode shapes lower `serve_step`.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -12,8 +12,6 @@ EXPERIMENTS.md §Adaptations).
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import numpy as np
 
 from repro.core.forest import DenseForest, train_forest

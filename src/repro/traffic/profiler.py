@@ -17,7 +17,12 @@ Profiler (paper §3.4):
                      the test split as a packet stream through the online
                      serving runtime (`repro.serve.runtime`) and bisecting
                      the highest offered load with zero drops (Fig. 5c as
-                     a measurement rather than a model).
+                     a measurement rather than a model),
+       throughput_replayed_sharded — the same measurement against an
+                     `n_shards`-worker `ShardedRuntime` with RSS-style
+                     symmetric flow steering: the bisection is over the
+                     aggregate offered load, and a drop on any shard
+                     fails the trial (DESIGN.md §8).
 
 Cost modes:
   measured — wall-clock the compiled extraction + inference on this machine
@@ -46,14 +51,12 @@ from repro.core.forest import (
     forest_predict_class,
 )
 from repro.core.mutual_info import mi_scores
-from repro.core.search_space import FeatureRep, SearchSpace
+from repro.core.search_space import FeatureRep
 
 from .extraction import extract_features, extraction_fn
 from .features import (
     FEATURE_NAMES,
-    FEATURES,
     modeled_extraction_cost_ns,
-    per_packet_ops,
 )
 from .models import macro_f1, train_traffic_model
 from .synth import TrafficDataset
@@ -80,7 +83,9 @@ class TrafficProfiler:
         model: str = "rf",
         cost_metric: str = "exec_time",   # exec_time | latency | throughput
                                           # | throughput_replayed
+                                          # | throughput_replayed_sharded
         cost_mode: str = "modeled",       # modeled | measured
+        n_shards: int = 2,                # worker count for the sharded metric
         test_frac: float = 0.2,
         seed: int = 0,
         cache: bool = True,
@@ -90,6 +95,7 @@ class TrafficProfiler:
         self.model = model
         self.cost_metric = cost_metric
         self.cost_mode = cost_mode
+        self.n_shards = n_shards
         self.seed = seed
         self.train_ds, self.test_ds = dataset.split(test_frac, seed)
         self._stream_cache = None
@@ -196,6 +202,7 @@ class TrafficProfiler:
         bisect_iters: int = 10,
         verbose: bool = False,
         fused: bool = True,
+        n_shards: int = 1,
     ):
         """Zero-loss throughput measured through the streaming runtime.
 
@@ -206,9 +213,20 @@ class TrafficProfiler:
         with zero drops. cost_mode selects the replay clock's constants:
         measured (wall-clock calibration on this machine) or modeled
         (feature-op DAG). Returns (gbps, ReplayStats).
+
+        With `n_shards > 1` the DUT is a `ShardedRuntime`: RSS-style
+        symmetric steering splits the offered load across workers, and the
+        bisection runs over the *aggregate* rate (a drop on any shard
+        fails the trial). Each worker queue gets a full-size ring — the
+        hardware-RSS provisioning, where every queue owns its own
+        descriptor ring — clamped below the hottest shard's sub-trace so
+        saturation stays reachable (DESIGN.md §8.3, incl. the buffering
+        caveat this implies for aggregate numbers). The flow table budget
+        (`capacity`) is split per shard.
         """
         from repro.serve.runtime import (
-            PacketStream, ServiceModel, StreamingRuntime, find_zero_loss_rate,
+            PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
+            find_zero_loss_rate,
         )
         from .pipeline import build_pipeline
 
@@ -219,12 +237,36 @@ class TrafficProfiler:
             self._stream_cache = PacketStream.from_dataset(self.test_ds, seed=self.seed)
         stream = self._stream_cache
         if ring_capacity is None:
-            # the DUT buffer must be small vs the trace or loss cannot occur
+            # the DUT buffer must be small vs the trace or loss cannot
+            # occur. Per-queue ring: every worker queue gets the full
+            # ring, exactly as NIC RSS provisions descriptor rings per
+            # queue (DESIGN.md §8.3); the binding clamp is the *hottest
+            # shard's* steered sub-trace — its queue must not be able to
+            # absorb its whole offered load (the same trace-size clamp
+            # the single-worker path applies — see the tiny-split
+            # regression tests). Explicit ring_capacity values are
+            # honored verbatim; find_zero_loss_rate raises loudly if
+            # they make saturation unreachable.
             ring_capacity = max(64, min(4096, stream.n_events // 8))
-            ring_capacity = min(ring_capacity, max(1, stream.n_events - 1))
+            if n_shards > 1:
+                from repro.serve.runtime.shard import steer_flows
+
+                counts = np.bincount(
+                    steer_flows(stream, n_shards)[stream.fid],
+                    minlength=n_shards)
+                events_bound = int(counts.max())
+            else:
+                events_bound = stream.n_events
+            ring_capacity = min(ring_capacity, max(1, events_bound - 1))
         self.wallclock["pipeline_gen"] += time.perf_counter() - t0
 
         def make_runtime(execute: bool) -> StreamingRuntime:
+            if n_shards > 1:
+                return ShardedRuntime(
+                    pipe, n_shards=n_shards, capacity=capacity,
+                    max_batch=max_batch, flush_timeout_s=0.05,
+                    idle_timeout_s=60.0, execute=execute,
+                )
             return StreamingRuntime(
                 pipe, capacity=capacity, max_batch=max_batch,
                 flush_timeout_s=0.05, idle_timeout_s=60.0, execute=execute,
@@ -280,6 +322,9 @@ class TrafficProfiler:
                 cost = -self.throughput_gbps(x, forest)
             elif metric == "throughput_replayed":
                 cost = -self.replayed_throughput_gbps(x, forest)[0]
+            elif metric == "throughput_replayed_sharded":
+                cost = -self.replayed_throughput_gbps(
+                    x, forest, n_shards=self.n_shards)[0]
             elif metric == "naive_cost":
                 cost = self.naive_cost_us(x, forest)
             elif metric == "model_inf_cost":
@@ -306,6 +351,9 @@ class TrafficProfiler:
             cost = -self.throughput_gbps(x, forest)
         elif self.cost_metric == "throughput_replayed":
             cost = -self.replayed_throughput_gbps(x, forest)[0]
+        elif self.cost_metric == "throughput_replayed_sharded":
+            cost = -self.replayed_throughput_gbps(
+                x, forest, n_shards=self.n_shards)[0]
         else:
             cost = self.exec_time_us(x, forest)
         return ProfileResult(cost=float(cost), perf=float(f1))

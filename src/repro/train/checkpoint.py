@@ -126,7 +126,7 @@ class Checkpointer:
         self.wait()
         # device_get on the caller thread (consistent snapshot), IO off-thread
         leaves, treedef = _flatten(tree)
-        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        host = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
         snapshot = jax.tree_util.tree_unflatten(treedef, host)
 
         def work():

@@ -16,7 +16,6 @@ interface).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 __all__ = ["plan_remesh", "StragglerMonitor"]

@@ -16,7 +16,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.parallel import ParallelCtx, current_ctx
 
@@ -39,7 +39,6 @@ def zero1_pspecs(param_specs, params_shapes, ctx: Optional[ParallelCtx] = None):
     dp = ctx.axes("dp") if ctx.mesh is not None else None
     if not dp:
         return param_specs
-    dp_size = int(np.prod([ctx.mesh.shape[a] for a in dp]))
 
     def extend(spec: P, leaf):
         shape = leaf.shape
@@ -81,7 +80,9 @@ class AdamW:
         return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
 
     def init(self, params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {
             "m": jax.tree_util.tree_map(zeros, params),
             "v": jax.tree_util.tree_map(zeros, params),

@@ -9,10 +9,6 @@ trick; the dry-run HLO shows the interleaving).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -50,12 +46,12 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, microbatches: int = 1):
             mbs = _split_mb(batch, microbatches)
 
             def body(acc, mb):
-                l, g = jax.value_and_grad(loss_fn)(params, mb, cfg)
+                mb_loss, g = jax.value_and_grad(loss_fn)(params, mb, cfg)
                 acc_l, acc_g = acc
                 acc_g = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), acc_g, g
                 )
-                return (acc_l + l, acc_g), None
+                return (acc_l + mb_loss, acc_g), None
 
             zero_g = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params

@@ -1,11 +1,8 @@
 """Checkpointing: atomic commit, resume, async writer, elastic restore."""
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.checkpoint import Checkpointer, latest_step, restore, save
 
@@ -73,7 +70,7 @@ def test_train_resume_continues_losses(tmp_path):
     args = ["--arch", "qwen3-8b", "--reduced", "--steps", "6", "--batch", "4",
             "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "3",
             "--lr", "1e-3"]
-    losses1 = train_main(args)
+    train_main(args)
     # simulate preemption: second run resumes from step 6's checkpoint dir
     losses2 = train_main(args + ["--steps", "8"])
     assert latest_step(tmp_path) is not None

@@ -4,7 +4,6 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 from repro.core.tuner import ConfigSpace, PipelineTuner, ServingConfig
 from repro.train.elastic import StragglerMonitor, plan_remesh

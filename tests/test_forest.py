@@ -1,6 +1,5 @@
 """Histogram forest trainer: correctness + hypothesis property tests."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -8,7 +7,7 @@ except ImportError:  # seeded-sampling fallback, see tests/_hypothesis_shim.py
     from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.forest import (
-    DenseForest, forest_apply_np, forest_predict_class, forest_predict_value,
+    forest_apply_np, forest_predict_class, forest_predict_value,
     train_forest, train_tree,
 )
 

@@ -1,5 +1,4 @@
 """HLO text analyzer unit tests (pure parsing — no compilation needed)."""
-import numpy as np
 
 from repro.launch.hlo_stats import hlo_stats
 

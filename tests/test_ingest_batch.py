@@ -8,7 +8,6 @@ equality (bitwise for table state and predictions), with latency allowed
 float tolerance only where the vectorized Lindley recurrence reassociates
 the scalar max-chain.
 """
-import math
 
 import numpy as np
 import pytest
@@ -327,8 +326,10 @@ def test_chunked_replay_matches_per_packet_reference(pipeline, stream):
     from collections import deque
 
     svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
-    mk = lambda execute=True: StreamingRuntime(
-        pipeline, capacity=1024, max_batch=64, execute=execute)
+    def mk(execute=True):
+        return StreamingRuntime(
+            pipeline, capacity=1024, max_batch=64, execute=execute)
+
 
     stats = replay(stream, mk, stream.base_pps, svc)
 
@@ -386,8 +387,10 @@ def test_replay_fallback_path_on_saturation(pipeline, stream):
     """Above saturation the admission bound fails, the per-packet fallback
     engages, and drops are counted — the bisection's upper bracket."""
     svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
-    mk = lambda execute=True: StreamingRuntime(
-        pipeline, capacity=512, max_batch=64, execute=execute)
+    def mk(execute=True):
+        return StreamingRuntime(
+            pipeline, capacity=512, max_batch=64, execute=execute)
+
     # drive far past the ingest lane's modeled service rate so the ring
     # must overflow regardless of the calibrated constants
     sat_pps = 4e9 / max(svc.pkt_track_ns, 1e-3)

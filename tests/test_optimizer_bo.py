@@ -4,7 +4,6 @@ import pytest
 
 from repro.core import (
     CatoOptimizer, FeatureRep, SearchSpace, build_priors, hvi_ratio,
-    pareto_front,
 )
 from repro.core.baselines import (
     run_iterate_all, run_random_search, run_simulated_annealing,

@@ -8,7 +8,7 @@ except ImportError:  # seeded-sampling fallback, see tests/_hypothesis_shim.py
     from _hypothesis_shim import given, hnp, settings, strategies as st
 
 from repro.core.pareto import (
-    hvi_ratio, hypervolume_2d, normalize_objectives, pareto_front, pareto_mask,
+    hvi_ratio, hypervolume_2d, normalize_objectives, pareto_front,
 )
 
 pts = hnp.arrays(

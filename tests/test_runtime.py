@@ -15,7 +15,6 @@ from repro.serve.runtime import (
     FlowStatus,
     FlowTable,
     PacketStream,
-    RuntimeMetrics,
     ServiceModel,
     StreamingRuntime,
     find_zero_loss_rate,

@@ -1,0 +1,332 @@
+"""Sharded runtime invariants (DESIGN.md §8).
+
+The contracts the sharded layer promises:
+
+- steering is *symmetric*: both directions of a 5-tuple land on the same
+  shard (the RSS property that keeps a connection on one worker);
+- sharding is *transparent*: predictions are bit-identical to a single
+  worker fed the same packets — steering permutes workers, never output;
+- the aggregate metrics view accounts exactly: per-shard counters sum to
+  the fleet totals under overflow and idle eviction;
+- `FlowTable` sizing knobs are constructor-injectable (no module
+  constants to monkeypatch) so per-shard sizing is plain arguments.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve.runtime import (
+    FlowTable,
+    PacketStream,
+    ServiceModel,
+    ShardedRuntime,
+    StreamingRuntime,
+    find_zero_loss_rate,
+    replay,
+    symmetric_tuple_hash64,
+)
+from repro.traffic import extract_features, make_dataset
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+
+DEPTH = 8
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("app-class", n_flows=300, max_pkts=32, seed=5)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    rep = FeatureRep(
+        ("dur", "s_load", "s_bytes_mean", "s_iat_mean", "ack_cnt"),
+        depth=DEPTH,
+    )
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="rf-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# steering
+# ---------------------------------------------------------------------------
+
+
+def test_symmetric_hash_direction_invariant():
+    rng = np.random.default_rng(0)
+    n = 4096
+    s_ip = rng.integers(0, 2**32, n)
+    d_ip = rng.integers(0, 2**32, n)
+    s_port = rng.integers(0, 2**16, n)
+    d_port = rng.integers(0, 2**16, n)
+    proto = rng.choice([6, 17], n)
+    fwd = symmetric_tuple_hash64(s_ip, d_ip, s_port, d_port, proto)
+    rev = symmetric_tuple_hash64(d_ip, s_ip, d_port, s_port, proto)
+    assert (fwd == rev).all()
+    # still a hash: distinct tuples separate, zero is never produced
+    assert len(np.unique(fwd)) == n
+    assert (fwd != 0).all()
+
+
+def test_scalar_and_array_hash_agree():
+    one = symmetric_tuple_hash64(10, 20, 1000, 443, 6)
+    many = symmetric_tuple_hash64([10], [20], [1000], [443], [6])
+    assert int(one) == int(many[0])
+
+
+def test_steering_both_directions_same_shard(pipeline):
+    rt = ShardedRuntime(pipeline, n_shards=4, execute=False)
+    rng = np.random.default_rng(1)
+    n = 2048
+    s_ip = rng.integers(0, 2**32, n)
+    d_ip = rng.integers(0, 2**32, n)
+    s_port = rng.integers(0, 2**16, n)
+    d_port = rng.integers(0, 2**16, n)
+    proto = np.full(n, 6)
+    fwd = rt.steer(s_ip, d_ip, s_port, d_port, proto)
+    rev = rt.steer(d_ip, s_ip, d_port, s_port, proto)
+    assert (fwd == rev).all()
+    assert fwd.min() >= 0 and fwd.max() < 4
+    # the indirection spread is roughly even over random tuples
+    counts = np.bincount(fwd, minlength=4)
+    assert counts.max() / counts.mean() < 1.3
+
+
+def test_capacity_budget_split_per_shard(pipeline):
+    rt = ShardedRuntime(pipeline, n_shards=4, capacity=2048, execute=False)
+    assert rt.capacity_per_shard == 512
+    assert all(s.table.capacity == 512 for s in rt.shards)
+    explicit = ShardedRuntime(
+        pipeline, n_shards=4, capacity=2048, capacity_per_shard=128, execute=False
+    )
+    assert all(s.table.capacity == 128 for s in explicit.shards)
+
+
+# ---------------------------------------------------------------------------
+# transparency: sharded == single, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def single_run(pipeline, stream):
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    return replay(
+        stream,
+        lambda: StreamingRuntime(pipeline, capacity=1024, max_batch=64),
+        stream.base_pps,
+        svc,
+    )
+
+
+@pytest.fixture(scope="module")
+def sharded_run(pipeline, stream):
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    return replay(
+        stream,
+        lambda: ShardedRuntime(pipeline, n_shards=3, capacity=1024, max_batch=64),
+        stream.base_pps,
+        svc,
+    )
+
+
+def test_sharded_predictions_bitwise_equal_single(ds, single_run, sharded_run):
+    assert single_run.drops == 0 and sharded_run.drops == 0
+    assert len(sharded_run.predictions) == ds.n_flows
+    assert sharded_run.predictions.keys() == single_run.predictions.keys()
+    for fid, pred in single_run.predictions.items():
+        assert sharded_run.predictions[fid] == pred
+
+
+def test_sharded_predictions_bitwise_equal_batch(ds, pipeline, sharded_run):
+    batch_preds = pipeline(ds.truncate(DEPTH))
+    stream_preds = np.array([sharded_run.predictions[i] for i in range(ds.n_flows)])
+    assert (stream_preds == batch_preds).all()
+
+
+def test_live_ingest_facade_matches_replay(pipeline, stream, single_run):
+    """Feeding interleaved delivery-order blocks through the facade's own
+    steering reproduces the single worker's predictions exactly."""
+    rt = ShardedRuntime(pipeline, n_shards=3, capacity=1024, max_batch=64)
+    shard_of_pkt = rt.steer_stream(stream)[stream.fid]
+    fid = stream.fid
+    E = stream.n_events
+    for lo in range(0, E, 512):
+        hi = min(lo + 512, E)
+        sl = slice(lo, hi)
+        rt.ingest_packets(
+            stream.key[fid[sl]],
+            stream.base_t[sl],
+            stream.rel_ts32[sl],
+            stream.size[sl],
+            stream.direction[sl],
+            stream.ttl[sl],
+            stream.winsize[sl],
+            stream.flags_byte[sl],
+            stream.proto[fid[sl]],
+            stream.s_port[fid[sl]],
+            stream.d_port[fid[sl]],
+            fid[sl],
+            stream.fin[sl],
+            shard=shard_of_pkt[sl],
+        )
+    rt.drain(float(stream.base_t[-1]) + 1.0)
+    assert rt.results.keys() == single_run.predictions.keys()
+    for fid_, pred in single_run.predictions.items():
+        assert rt.results[fid_] == pred
+
+
+def test_profiler_sharded_metric_tiny_split():
+    """The per-shard ring division must not undo the trace-size clamp
+    (regression: the 64 floor re-applied after clamping tripped the
+    zero-loss ring guard on tiny held-out splits)."""
+    from repro.traffic import TrafficProfiler, make_dataset
+
+    tiny = make_dataset("app-class", n_flows=60, max_pkts=16, seed=0)
+    prof = TrafficProfiler(
+        tiny,
+        ("dur", "s_load", "s_bytes_mean"),
+        model="tree-fast",
+        cost_metric="throughput_replayed_sharded",
+        cost_mode="modeled",
+        n_shards=2,
+        seed=0,
+    )
+    r = prof(FeatureRep(("dur", "s_load"), 4))
+    assert r.cost < 0
+
+
+def test_sharded_zero_loss_scales(pipeline, stream):
+    """4 steered workers must beat one worker's zero-loss rate by well
+    more than the load-imbalance factor alone would forgive."""
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    ring = max(64, stream.n_events // 8)
+
+    def mk1(execute):
+        return StreamingRuntime(pipeline, capacity=1024, max_batch=64, execute=execute)
+
+    def mk4(execute):
+        return ShardedRuntime(
+            pipeline, n_shards=4, capacity=1024, max_batch=64, execute=execute
+        )
+
+    r1, s1 = find_zero_loss_rate(stream, mk1, svc, iters=6, ring_capacity=ring)
+    r4, s4 = find_zero_loss_rate(stream, mk4, svc, iters=6, ring_capacity=ring)
+    assert s1.drops == 0 and s4.drops == 0
+    assert s4.n_shards == 4
+    assert r4 > r1
+    assert s4.load_imbalance >= 1.0
+    assert len(s4.per_shard) == 4
+
+
+# ---------------------------------------------------------------------------
+# aggregate metrics accounting
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_metrics_account_overflow_and_eviction(pipeline, stream):
+    """Tiny per-shard tables shed flows; the aggregate view must equal the
+    per-shard sum exactly, and every admitted flow still predicts once."""
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    stats = replay(
+        stream,
+        lambda: ShardedRuntime(
+            pipeline, n_shards=3, capacity_per_shard=8, max_batch=16
+        ),
+        stream.base_pps,
+        svc,
+    )
+    m = stats.metrics  # merged RuntimeMetrics
+    assert stats.drops_table > 0
+    per = stats.per_shard
+    assert sum(p["drops_table"] for p in per) == m.drops_table
+    assert sum(p["drops_ring"] for p in per) == m.drops_ring
+    assert sum(p["pkts_total"] for p in per) == m.pkts_total
+    assert sum(p["flows_predicted"] for p in per) == m.flows_predicted
+    assert m.flows_predicted == len(stats.predictions)
+    assert 0 < len(stats.predictions) < stream.n_flows
+    assert stats.load_imbalance >= 1.0
+    # latency samples merge across shards: one sample per predicted flow
+    assert m.latency.n == m.flows_predicted
+
+
+def test_aggregate_metrics_view_sums_shards(pipeline):
+    rt = ShardedRuntime(pipeline, n_shards=3, execute=False)
+    for i, s in enumerate(rt.shards):
+        s.metrics.drops_ring = 10 * (i + 1)
+        s.metrics.drops_table = i
+        s.metrics.flows_evicted_idle = 2
+        s.metrics.pkts_total = 100
+    agg = rt.metrics
+    assert agg.drops_ring == 60
+    assert agg.drops_table == 3
+    assert agg.drops == 63
+    assert agg.flows_evicted_idle == 6
+    assert agg.load_imbalance() == 1.0
+    summ = agg.summary()
+    assert summ["n_shards"] == 3
+    assert len(summ["per_shard"]) == 3
+    assert summ["aggregate"]["pkts_total"] == 300
+
+
+# ---------------------------------------------------------------------------
+# constructor-injectable flow-table knobs
+# ---------------------------------------------------------------------------
+
+
+def test_flow_table_load_factor_injectable():
+    dense = FlowTable(64, pkt_depth=4, load_factor=0.6)
+    sparse = FlowTable(64, pkt_depth=4, load_factor=0.25)
+    assert dense._n_buckets == 128
+    assert sparse._n_buckets == 256
+    # default keeps the historical load <= 0.5 sizing
+    assert FlowTable(64, pkt_depth=4)._n_buckets == 128
+    with pytest.raises(ValueError):
+        FlowTable(64, pkt_depth=4, load_factor=0.0)
+    # a full table must always keep an EMPTY bucket or probes can spin
+    with pytest.raises(ValueError):
+        FlowTable(64, pkt_depth=4, load_factor=1.0)
+    with pytest.raises(ValueError):
+        FlowTable(64, pkt_depth=4, load_factor=0.8, rebuild_tombstone_frac=0.25)
+
+
+def test_flow_table_rebuild_threshold_injectable():
+    ft = FlowTable(32, pkt_depth=2, rebuild_tombstone_frac=0.0)
+    slots = []
+    for i in range(4):
+        _, slot = ft.observe(
+            100 + i, 0.0, 0.0, 1.0, 0, 64.0, 0.0, 0, 6.0, 1.0, 2.0, i, False
+        )
+        slots.append(slot)
+    ft.recycle(slots[0])
+    # frac 0.0: the very first tombstone triggers a rebuild, leaving none
+    assert ft._tombstones == 0
+    # frac 0.49 on a 64-bucket table: rebuild only past 31 tombstones
+    lazy = FlowTable(32, pkt_depth=2, rebuild_tombstone_frac=0.49)
+    for i in range(4):
+        _, slot = lazy.observe(
+            100 + i, 0.0, 0.0, 1.0, 0, 64.0, 0.0, 0, 6.0, 1.0, 2.0, i, False
+        )
+        lazy.recycle(slot)
+    assert lazy._tombstones == 4
+
+
+def test_sharded_runtime_threads_table_knobs(pipeline):
+    rt = ShardedRuntime(
+        pipeline,
+        n_shards=2,
+        capacity=64,
+        execute=False,
+        load_factor=0.25,
+        rebuild_tombstone_frac=0.5,
+    )
+    for s in rt.shards:
+        assert s.table.capacity == 32
+        assert s.table._n_buckets == 128  # 32 / 0.25
+        assert s.table.rebuild_tombstone_frac == 0.5

@@ -13,7 +13,7 @@ import pytest
 from repro.core import (
     CatoOptimizer, FeatureRep, SearchSpace, build_priors, hvi_ratio,
 )
-from repro.core.baselines import run_random_search, select_all
+from repro.core.baselines import select_all
 from repro.traffic import (
     MINI_FEATURE_NAMES, TrafficProfiler, extract_features, make_dataset,
 )
