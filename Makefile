@@ -1,8 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint format bench-smoke bench-smoke-sharded bench-runtime \
-	bench-compare example-stream
+.PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
+	bench-runtime bench-compare example-stream example-control
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -29,6 +29,14 @@ bench-smoke-sharded:
 		--out results/BENCH_runtime_sharded.json \
 		--single BENCH_runtime.json --min-speedup 2.0
 
+# zipf skew gate: 4 workers under elephant-flow skew, static RETA vs the
+# adaptive control plane measured under one calibration — dynamic must
+# report strictly lower load_imbalance and no lower median zero-loss pps
+bench-smoke-zipf:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --shards 4 \
+		--scenario zipf --skew-gate \
+		--out results/BENCH_runtime_zipf.json
+
 # full runtime benchmark (Fig. 5c, measured) — separate output so it never
 # clobbers the smoke baseline the bench-compare gate diffs against
 bench-runtime:
@@ -41,3 +49,6 @@ bench-compare:
 
 example-stream:
 	$(PYTHON) examples/serve_stream.py
+
+example-control:
+	$(PYTHON) examples/serve_control.py

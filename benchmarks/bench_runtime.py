@@ -13,8 +13,18 @@ the aggregate zero-loss rate, 0..N-1 for the per-worker breakdown — and
 1-shard datapoint measured with the same config (the CI bench job uses
 this to enforce that 4 workers actually buy >= 2x).
 
+With `--scenario {uniform,zipf,burst,drift}` the replayed trace is one of
+the adversarial workloads (`repro.traffic.synth.SCENARIOS`); rows carry a
+`scenario` column so the perf trajectory covers non-uniform load. A
+non-uniform scenario with `--shards N` measures every point twice —
+static RETA vs the adaptive control plane — and `--skew-gate` asserts
+the control plane earns its keep: strictly lower `load_imbalance` than
+the static fleet and no lower median zero-loss pps (DESIGN.md §9).
+
     python -m benchmarks.bench_runtime --smoke              # CI-sized
     python -m benchmarks.bench_runtime --smoke --shards 4   # sharded
+    python -m benchmarks.bench_runtime --smoke --shards 4 \
+        --scenario zipf --skew-gate                         # control plane
     python -m benchmarks.bench_runtime                      # full figure
 """
 from __future__ import annotations
@@ -29,20 +39,25 @@ import time
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
 
-def median_agg_pps(doc: dict, method: str = "CATO") -> float:
+def median_agg_pps(doc: dict, method: str = "CATO",
+                   control: str | None = None) -> float:
     """Median aggregate zero_loss_pps of a method's rows.
 
     Rows predating the `shard` column count as aggregates (a single
-    worker's only row *is* its aggregate)."""
+    worker's only row *is* its aggregate). `control` filters
+    static-vs-dynamic rows of a control-plane comparison run; None
+    accepts any (plain runs have no control column)."""
     vals = [r["zero_loss_pps"] for r in doc["rows"]
-            if r["method"] == method and r.get("shard", "agg") == "agg"]
+            if r["method"] == method and r.get("shard", "agg") == "agg"
+            and (control is None or r.get("control") == control)]
     if not vals:
         raise SystemExit(f"no {method} aggregate rows in benchmark document")
     return statistics.median(vals)
 
 
 def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
-        out_path: pathlib.Path | None = None, shards: int = 1):
+        out_path: pathlib.Path | None = None, shards: int = 1,
+        scenario: str = "uniform"):
     from .fig5_serving_perf import REPLAYED_HEADER as HEADER, run_replayed
 
     out_path = BENCH_PATH if out_path is None else pathlib.Path(out_path)
@@ -54,19 +69,30 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
         bisect_iters=7 if smoke else 10,
         cost_mode="measured",
         shards=shards,
+        scenario=scenario,
         verbose=verbose,
     )
+    if scenario != "uniform":
+        # skewed scenarios need mass concentration: fewer flows, deeper
+        # elephants (the held-out split still offers ~n_flows/5 flows)
+        cfg["n_flows"] = 600 if smoke else 1000
+        cfg["max_pkts"] = 160 if smoke else 256
+        # a sharded scenario run measures static AND dynamic control rows
+        cfg["control"] = shards > 1
     t0 = time.perf_counter()
     rows = run_replayed(**cfg)
     wall_s = time.perf_counter() - t0
 
     recs = [dict(zip(HEADER, r)) for r in rows]
     agg = [r for r in recs if r.get("shard", "agg") == "agg"]
-    cato_best = max((r["zero_loss_gbps"] for r in agg if r["method"] == "CATO"),
+    # headline ratios stay like-for-like: static rows only (a control
+    # comparison run carries both static and dynamic measurements)
+    agg_s = [r for r in agg if r.get("control", "static") == "static"]
+    cato_best = max((r["zero_loss_gbps"] for r in agg_s if r["method"] == "CATO"),
                     default=0.0)
     gains = {
         r["method"]: round(cato_best / r["zero_loss_gbps"], 3)
-        for r in agg
+        for r in agg_s
         if r["method"] != "CATO" and r["zero_loss_gbps"] > 0
     }
     out = {
@@ -112,12 +138,53 @@ def check_speedup(sharded: dict, single_path: pathlib.Path,
     return 0
 
 
+def check_skew(doc: dict) -> int:
+    """Gate: under a skewed scenario, the adaptive control plane must
+    report strictly lower load_imbalance than the static RETA and no
+    lower median zero-loss pps (both sides share one service
+    calibration, so the comparison is same-constants by construction)."""
+    agg = [r for r in doc["rows"]
+           if r.get("shard") == "agg" and r["method"] == "CATO"]
+    st = [r for r in agg if r.get("control") == "static"]
+    dy = [r for r in agg if r.get("control") == "dynamic"]
+    if not st or not dy:
+        print("skew gate needs a control-plane comparison run "
+              "(--scenario <skewed> with --shards > 1)", file=sys.stderr)
+        return 2
+    imb_st = statistics.median(r["imbalance"] for r in st)
+    imb_dy = statistics.median(r["imbalance"] for r in dy)
+    pps_st = statistics.median(r["zero_loss_pps"] for r in st)
+    pps_dy = statistics.median(r["zero_loss_pps"] for r in dy)
+    print(f"static  RETA: median imbalance {imb_st:.3f}, "
+          f"median zero_loss_pps {pps_st:,.0f}")
+    print(f"dynamic RETA: median imbalance {imb_dy:.3f}, "
+          f"median zero_loss_pps {pps_dy:,.0f} "
+          f"({pps_dy / pps_st:.2f}x static)")
+    if imb_dy >= imb_st:
+        print(f"FAIL: dynamic imbalance {imb_dy:.3f} not below static "
+              f"{imb_st:.3f}", file=sys.stderr)
+        return 1
+    if pps_dy < pps_st:
+        print(f"FAIL: dynamic median pps {pps_dy:,.0f} below static "
+              f"{pps_st:,.0f}", file=sys.stderr)
+        return 1
+    print("OK: control plane beats static RETA under skew")
+    return 0
+
+
 if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI-sized run")
     p.add_argument("--use-case", default="app", choices=("app", "iot"))
     p.add_argument("--shards", type=int, default=1,
                    help="worker count (RSS-steered ShardedRuntime when > 1)")
+    p.add_argument("--scenario", default="uniform",
+                   choices=("uniform", "zipf", "burst", "drift"),
+                   help="adversarial traffic scenario (non-uniform + shards "
+                   "> 1 also measures the adaptive control plane)")
+    p.add_argument("--skew-gate", action="store_true",
+                   help="fail unless dynamic rebalancing beats the static "
+                   "RETA under the chosen skewed scenario")
     p.add_argument("--out", default=None, help="output path (default: repo "
                    "root BENCH_runtime.json)")
     p.add_argument("--single", default=None,
@@ -127,7 +194,9 @@ if __name__ == "__main__":
                    "this (0 disables)")
     args = p.parse_args()
     doc = run(smoke=args.smoke, use_case=args.use_case, out_path=args.out,
-              shards=args.shards)
+              shards=args.shards, scenario=args.scenario)
+    if args.skew_gate:
+        raise SystemExit(check_skew(doc))
     if args.single is not None:
         raise SystemExit(
             check_speedup(doc, pathlib.Path(args.single), args.min_speedup))

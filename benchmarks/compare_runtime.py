@@ -51,10 +51,16 @@ def relative_cato(doc: dict) -> float:
 
 def comparable_config(doc: dict) -> dict:
     """Config key for apples-to-apples checks: a 1-shard run predating
-    the `shards` field equals a modern `shards: 1` run."""
+    the `shards` field equals a modern `shards: 1` run, and a uniform
+    run predating the `scenario`/`control` fields equals a modern
+    `scenario: "uniform"` run."""
     cfg = dict(doc.get("config") or {})
     if cfg.get("shards") == 1:
         del cfg["shards"]
+    if cfg.get("scenario") == "uniform":
+        del cfg["scenario"]
+    if cfg.get("control") is False:
+        del cfg["control"]
     return cfg
 
 

@@ -13,6 +13,7 @@ zero-drop rate. `benchmarks/bench_runtime.py` drives it standalone.
 """
 from repro.core import CatoOptimizer, SearchSpace
 from repro.traffic import FEATURE_NAMES, TrafficProfiler, make_dataset
+from repro.traffic.synth import make_scenario_dataset
 
 from .common import app_setup, emit, iot_setup, priors_for
 
@@ -67,7 +68,7 @@ def space_cap(space, ds):
 
 REPLAYED_HEADER = ("method", "depth", "n_features", "f1", "zero_loss_gbps",
                    "zero_loss_pps", "p50_s", "p99_s", "drops", "compiles",
-                   "shard")
+                   "shard", "scenario", "control", "imbalance")
 
 
 def run_replayed(
@@ -82,6 +83,8 @@ def run_replayed(
     verbose=True,
     seed=1,
     shards=1,
+    scenario="uniform",
+    control=False,
 ):
     """Fig. 5c, measured: zero-loss throughput via streaming-runtime replay.
 
@@ -95,27 +98,42 @@ def run_replayed(
     the aggregate zero-loss rate, followed by one row per worker
     (shard=0..n-1) carrying that shard's steered share, drops, and
     latency tail. Single-worker runs emit only the "agg" row.
+
+    `scenario` replays one of the adversarial workloads
+    (`repro.traffic.synth.SCENARIOS`) instead of the uniform trace. With
+    `control=True` (sharded runs only) every point is measured twice —
+    static RETA vs the adaptive control plane (DESIGN.md §9) under one
+    shared service calibration — and rows carry `control` =
+    "static"/"dynamic" so the skew gate can diff them.
     """
     name = "app-class" if use_case == "app" else "iot-class"
-    ds = make_dataset(name, n_flows=n_flows, max_pkts=max_pkts, seed=seed)
+    ds = make_scenario_dataset(name, scenario, n_flows=n_flows,
+                               max_pkts=max_pkts, seed=seed)
     # the search runs against the deterministic modeled metric; cost_mode
     # only selects the replay clock's constants for the measurement phase
     prof = TrafficProfiler(ds, FEATURE_NAMES, model=model,
                            cost_metric="throughput", cost_mode="modeled",
-                           seed=seed)
+                           scenario=scenario, seed=seed)
     space = SearchSpace(FEATURE_NAMES, max_depth=min(50, max_pkts))
     pri = priors_for(space, ds, prof)
     res = CatoOptimizer(space, prof, pri, seed=0).run(iters)
     prof.cost_mode = cost_mode
 
-    def measure(label, rep):
-        f1, forest = prof.perf_f1(rep)
-        gbps, stats = prof.replayed_throughput_gbps(
-            rep, forest, bisect_iters=bisect_iters, n_shards=shards)
+    control_cfg = None
+    if control:
+        if shards < 2:
+            raise ValueError("control=True needs shards > 1 (the control "
+                             "plane actuates a sharded fleet)")
+        from repro.serve.control import ControlConfig
+
+        control_cfg = ControlConfig(interval_pkts=512, imbalance_trigger=1.04)
+
+    def point_rows(label, rep, f1, gbps, stats, mode):
         out = [(label, rep.depth, len(rep.features), round(f1, 4),
                 round(gbps, 4), round(stats.offered_pps, 1),
                 round(stats.latency_p50_s, 6), round(stats.latency_p99_s, 6),
-                stats.drops, stats.metrics.compile_count(), "agg")]
+                stats.drops, stats.metrics.compile_count(), "agg",
+                scenario, mode, round(stats.load_imbalance, 4))]
         for p in stats.per_shard:
             share = p["pkts_total"] / max(stats.metrics.pkts_total, 1)
             out.append((label, rep.depth, len(rep.features), round(f1, 4),
@@ -123,14 +141,27 @@ def run_replayed(
                         round(p["latency_p50_s"], 6),
                         round(p["latency_p99_s"], 6),
                         p["drops_ring"] + p["drops_table"],
-                        stats.metrics.compile_count(), p["shard"]))
+                        stats.metrics.compile_count(), p["shard"],
+                        scenario, mode, round(stats.load_imbalance, 4)))
         if verbose:
             extra = (f" shards={stats.n_shards} "
                      f"imb={stats.load_imbalance:.2f}"
                      if stats.n_shards > 1 else "")
-            print(f"fig5r {use_case} {label:9s} f1={f1:.3f} "
-                  f"zero-loss={gbps:.3f} Gbps p99={stats.latency_p99_s:.4g}s "
-                  f"drops={stats.drops}{extra}")
+            print(f"fig5r {use_case} {label:9s} [{scenario}/{mode}] "
+                  f"f1={f1:.3f} zero-loss={gbps:.3f} Gbps "
+                  f"p99={stats.latency_p99_s:.4g}s drops={stats.drops}{extra}")
+        return out
+
+    def measure(label, rep):
+        f1, forest = prof.perf_f1(rep)
+        gbps, stats = prof.replayed_throughput_gbps(
+            rep, forest, bisect_iters=bisect_iters, n_shards=shards)
+        out = point_rows(label, rep, f1, gbps, stats, "static")
+        if control_cfg is not None:
+            gbps_d, stats_d = prof.replayed_throughput_gbps(
+                rep, forest, bisect_iters=bisect_iters, n_shards=shards,
+                control=control_cfg)
+            out += point_rows(label, rep, f1, gbps_d, stats_d, "dynamic")
         return out
 
     rows = []
@@ -140,6 +171,8 @@ def run_replayed(
     for label, rep in _baselines(space_cap(space, ds), prof, depths).items():
         rows.extend(measure(label, rep))
     suffix = "" if shards == 1 else f"_shards{shards}"
+    if scenario != "uniform":
+        suffix += f"_{scenario}"
     emit(rows, REPLAYED_HEADER,
          f"fig5_{use_case}_throughput_replayed{suffix}")
     return rows

@@ -24,6 +24,14 @@ Bit-parity with the unfused path is by construction, not luck:
 donated (``donate_argnums``) so XLA can reuse their device buffers across
 micro-batches — together with the dispatcher's staging arenas this makes a
 flush allocation-free on the host and reuse-friendly on the device.
+
+Swap-safety (DESIGN.md §9.3): the jit cache keys on the static
+``(plan, depth, forest_depth, batch shape)`` tuple, so two pipeline
+configurations can serve *concurrently* — during a zero-downtime
+hot-swap the background-warmed replacement (`ServingPipeline.warm`)
+and the still-serving old pipeline never evict or alias each other's
+executables, and donation stays per-call (each configuration's arenas
+rotate independently).
 """
 from __future__ import annotations
 

@@ -10,11 +10,13 @@ Two serving stacks live here:
   dispatch staged in preallocated arenas, and offered-load replay with
   zero-loss throughput measurement — the continuous-serving layer over the
   jit-specialized CATO pipelines, fused single-launch by default
-  (DESIGN.md §6, §7).
+  (DESIGN.md §6, §7), horizontally sharded behind RSS-style steering
+  (§8) with an adaptive control plane (`control/`, §9): dynamic RETA
+  rebalancing, zero-downtime pipeline hot-swap, elastic worker sizing.
 
-The runtime re-exports resolve lazily (PEP 562): `from repro.serve import
-make_serve_step` must not drag in the traffic/extraction stack, and the
-traffic package must stay importable without touching this one.
+The runtime/control re-exports resolve lazily (PEP 562): `from repro.serve
+import make_serve_step` must not drag in the traffic/extraction stack, and
+the traffic package must stay importable without touching this one.
 """
 from .serve_step import make_serve_step, make_prefill
 
@@ -28,13 +30,24 @@ _RUNTIME_EXPORTS = (
     "ReplayStats",
     "RuntimeMetrics",
     "ServiceModel",
+    "ShardedRuntime",
     "StreamingRuntime",
     "find_zero_loss_rate",
     "replay",
     "tuple_hash64",
 )
 
-__all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS]
+_CONTROL_EXPORTS = (
+    "BucketTelemetry",
+    "ControlConfig",
+    "ControlPlane",
+    "HeadroomPolicy",
+    "PipelineSwap",
+    "controlled_replay",
+)
+
+__all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS,
+           *_CONTROL_EXPORTS]
 
 
 def __getattr__(name):
@@ -42,4 +55,8 @@ def __getattr__(name):
         from . import runtime
 
         return getattr(runtime, name)
+    if name in _CONTROL_EXPORTS:
+        from . import control
+
+        return getattr(control, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

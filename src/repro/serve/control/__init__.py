@@ -1,0 +1,38 @@
+"""Adaptive serving control plane (DESIGN.md §9).
+
+Closes the loop between runtime telemetry and runtime configuration for
+the sharded serving fleet:
+
+- **telemetry** (`BucketTelemetry`): per-RETA-bucket EWMA load, fed by
+  the steered ingest path at one vector op per block;
+- **planning** (`plan_rebalance`, `plan_retirement`, `HeadroomPolicy`):
+  pure functions from telemetry to indirection rewrites and fleet sizes;
+- **actuation** (`ControlPlane` + the runtime's `migrate_buckets` /
+  `hot_swap`): quiescent flow-state migration so rewritten RETA entries
+  never misroute a mid-flight flow, and per-shard drain-and-swap so a
+  new Pareto-optimal (F, n) pipeline deploys with zero drops;
+- **measurement** (`controlled_replay`): the offered-load replay driver
+  for the adaptive fleet — interleaved per-shard clocks, control steps
+  between blocks, zero-loss bisection compatible.
+
+The invariant every piece preserves: control actions permute *where* and
+*when* work happens, never *what* is predicted — flows that complete
+under a single pipeline configuration classify bit-identically to an
+oracle single-worker run (tests/test_control.py).
+"""
+from .plane import ControlConfig, ControlPlane, PipelineSwap, StepReport
+from .planner import HeadroomPolicy, plan_rebalance, plan_retirement
+from .replay import controlled_replay
+from .telemetry import BucketTelemetry
+
+__all__ = [
+    "BucketTelemetry",
+    "ControlConfig",
+    "ControlPlane",
+    "HeadroomPolicy",
+    "PipelineSwap",
+    "StepReport",
+    "controlled_replay",
+    "plan_rebalance",
+    "plan_retirement",
+]

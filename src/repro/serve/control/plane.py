@@ -1,0 +1,308 @@
+"""The serving control plane: telemetry -> planner -> actuation
+(DESIGN.md §9).
+
+`ControlPlane` closes the loop the static `ShardedRuntime` leaves open:
+it watches per-RETA-bucket load (`BucketTelemetry`), and every
+`interval_pkts` ingested packets it may
+
+1. **hot-swap** the pipeline (a scheduled `PipelineSwap` — e.g. a new
+   Pareto-optimal (F, n) from `CatoOptimizer` compiled in the
+   background) via the per-shard drain-and-swap protocol;
+2. **resize the fleet** under a `HeadroomPolicy` (add workers when the
+   offered load crowds the utilization target, retire the coldest one —
+   after migrating its buckets away — when the load would comfortably
+   fit on fewer);
+3. **rebalance the RETA** (greedy bucket-migration plan, applied through
+   the quiescent flow-state migration protocol so no flow is lost,
+   double-predicted, or misrouted mid-flow).
+
+The plane is clock-agnostic: it mutates the runtime and returns a
+`StepReport` describing what happened; the replay driver (or a live
+serving loop) interprets the report — charging flush records and
+migration costs to the right worker's lanes, retargeting service
+constants after a swap. Control cadence is counted in *packets*, not
+seconds, so decisions are invariant under replay clock compression and
+zero-loss bisection probes stay comparable across offered rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.runtime.dispatch import BatchRecord
+from repro.serve.runtime.replay import ServiceModel
+from repro.serve.runtime.shard import ShardedRuntime
+
+from .planner import HeadroomPolicy, plan_rebalance, plan_retirement
+from .telemetry import BucketTelemetry
+
+__all__ = ["ControlConfig", "ControlPlane", "PipelineSwap", "StepReport"]
+
+
+@dataclasses.dataclass
+class PipelineSwap:
+    """A scheduled zero-downtime pipeline replacement.
+
+    `pipeline` is the new compiled artifact (warm it with
+    `ServingPipeline.warm` so the swap never pays a compile on the
+    serving path); `service` carries the replay-clock constants of the
+    new configuration (its feature set and depth change both per-packet
+    and per-batch costs); `after_pkts` triggers the swap once the fleet
+    has ingested that many packets."""
+
+    pipeline: object
+    service: ServiceModel
+    after_pkts: int = 0
+
+    @classmethod
+    def build(
+        cls,
+        rep,
+        forest,
+        *,
+        after_pkts: int = 0,
+        service: Optional[ServiceModel] = None,
+        fused: bool = True,
+        use_kernel: bool = True,
+        runtime=None,
+        warm_buckets: Optional[tuple] = None,
+    ) -> "PipelineSwap":
+        """Optimizer handoff: turn a Pareto-optimal (F, n) into a ready
+        swap.
+
+        `rep`/`forest` come straight from a `CatoOptimizer` observation
+        (`o.x` and the profiler's trained model for it); this compiles
+        the serving pipeline, pre-warms every dispatch bucket so the
+        swap pays no jit on the serving path, and derives modeled clock
+        constants unless measured ones are supplied. Pass the target
+        `runtime` (sharded or single) so the warm set is *its*
+        dispatcher's actual bucket geometry — a hard-coded default
+        would leave a non-default `max_batch`/`min_bucket` fleet paying
+        a compile on the serving path at swap time."""
+        from repro.traffic.pipeline import build_pipeline
+
+        if warm_buckets is None:
+            disp = None
+            if runtime is not None:
+                worker = getattr(runtime, "shards", [runtime])[0]
+                disp = worker.dispatcher
+            lo = disp.min_bucket if disp is not None else 8
+            hi = disp.max_batch if disp is not None else 256
+            warm_buckets = []
+            b = lo
+            while b <= hi:
+                warm_buckets.append(b)
+                b *= 2
+        pipeline = build_pipeline(rep, forest, max_pkts=rep.depth,
+                                  fused=fused, use_kernel=use_kernel)
+        pipeline.warm(list(warm_buckets))
+        if service is None:
+            service = ServiceModel.modeled(rep, forest)
+        return cls(pipeline=pipeline, service=service, after_pkts=after_pkts)
+
+
+@dataclasses.dataclass
+class ControlConfig:
+    """Knobs for one control loop instance."""
+
+    interval_pkts: int = 1024          # control period, in ingested packets
+    ewma_alpha: float = 0.4            # telemetry smoothing
+    rebalance: bool = True
+    imbalance_trigger: float = 1.10    # act when max/mean EWMA load above this
+    max_moves_per_step: int = 8
+    # state-copy cost charged per migrated flow, in accumulated-packet
+    # service-time equivalents: a flow's dense state is one ~KB row copy
+    # plus two index updates — about what one packet accumulate costs
+    # (which includes its own hash probe and row write). Scaling by the
+    # service model keeps the charge honest under both modeled (ns-scale)
+    # and measured (µs-scale) clock constants.
+    migrate_cost_pkts: float = 1.0
+    headroom: Optional[HeadroomPolicy] = None
+    swap: Optional[PipelineSwap] = None
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one control step did — the driver's charging manifest."""
+
+    t: float
+    records: dict[int, list[BatchRecord]] = dataclasses.field(
+        default_factory=dict)
+    ingest_charge_s: dict[int, float] = dataclasses.field(default_factory=dict)
+    service_switch: dict[int, ServiceModel] = dataclasses.field(
+        default_factory=dict)
+    buckets_moved: int = 0
+    flows_migrated: int = 0
+    swapped: bool = False
+    workers_added: list[int] = dataclasses.field(default_factory=list)
+    workers_retired: list[int] = dataclasses.field(default_factory=list)
+
+
+class ControlPlane:
+    def __init__(
+        self,
+        runtime: ShardedRuntime,
+        config: ControlConfig,
+        service: ServiceModel,
+    ):
+        self.rt = runtime
+        self.cfg = config
+        self.service = service  # current constants (retargeted on swap)
+        self.telemetry = BucketTelemetry(alpha=config.ewma_alpha)
+        self._pkts_since = 0
+        self._last_step_t: Optional[float] = None
+        self._pps_ewma = 0.0
+        self._swapped = False
+        # counters for the run summary
+        self.n_steps = 0
+        self.n_rebalances = 0
+        self.buckets_moved = 0
+        self.flows_migrated = 0
+        self.buckets_skipped = 0
+        self.n_swaps = 0
+        self.workers_added = 0
+        self.workers_retired = 0
+        self.log: list[dict] = []
+
+    # -- data-path hooks -----------------------------------------------------
+
+    def note(self, keys: np.ndarray, buckets: np.ndarray) -> None:
+        """Account one ingest block: steering ledger + bucket telemetry."""
+        self.rt.note_steering(keys, buckets)
+        self.telemetry.note(buckets)
+        self._pkts_since += len(buckets)
+
+    def maybe_step(self, now: float) -> Optional[StepReport]:
+        """Run a control step if a full interval of packets has arrived."""
+        if self._pkts_since < self.cfg.interval_pkts:
+            return None
+        cfg = self.cfg
+        rt = self.rt
+        window_pkts = self._pkts_since
+        rates = self.telemetry.roll()
+        self._pkts_since = 0
+        report = StepReport(t=now)
+        self.n_steps += 1
+
+        # offered-rate estimate for the headroom policy (EWMA of pps over
+        # the interval wall time; first step has no baseline interval)
+        if self._last_step_t is not None and now > self._last_step_t:
+            win_pps = window_pkts / (now - self._last_step_t)
+            self._pps_ewma = (cfg.ewma_alpha * win_pps
+                              + (1 - cfg.ewma_alpha) * self._pps_ewma
+                              if self._pps_ewma > 0 else win_pps)
+        self._last_step_t = now
+
+        # 1. scheduled pipeline hot-swap
+        if (cfg.swap is not None and not self._swapped
+                and self.telemetry.total_pkts >= cfg.swap.after_pkts):
+            recs = rt.hot_swap(cfg.swap.pipeline, now)
+            self._merge_records(report, recs)
+            for i in range(len(rt.shards)):
+                report.service_switch[i] = cfg.swap.service
+            self.service = cfg.swap.service
+            self._swapped = True
+            report.swapped = True
+            self.n_swaps += 1
+
+        # 2. elastic fleet sizing
+        if cfg.headroom is not None and self._pps_ewma > 0:
+            from repro.serve.runtime.shard import INDIRECTION_SIZE
+
+            cap_pps = 1e9 / max(self.service.pkt_accum_ns, 1e-3)
+            n_active = sum(rt.active)
+            desired = cfg.headroom.desired_workers(
+                self._pps_ewma, cap_pps, n_active)
+            # the RETA is the steering quantum: more workers than entries
+            # can never receive load (add_worker enforces the same bound)
+            desired = min(desired, INDIRECTION_SIZE)
+            while desired > sum(rt.active):
+                # reactivate a drained retired worker before minting a new
+                # replica: flapping load must not grow the shard list
+                retired = [i for i, a in enumerate(rt.active) if not a]
+                if retired:
+                    i = retired[0]
+                    rt.active[i] = True
+                elif len(rt.shards) < INDIRECTION_SIZE:
+                    i = rt.add_worker()
+                else:
+                    break
+                report.workers_added.append(i)
+                self.workers_added += 1
+            if desired < sum(rt.active):
+                # one retirement per step: pick the coldest active worker,
+                # evacuate its buckets, then mark it inactive
+                loads = self.telemetry.shard_loads(rt.indirection,
+                                                   len(rt.shards))
+                act = [i for i, a in enumerate(rt.active) if a]
+                coldest = min(act, key=lambda i: loads[i])
+                moves = plan_retirement(rates, rt.indirection, coldest,
+                                        rt.active)
+                self._apply_moves(report, moves, now)
+                if not np.any(rt.indirection == coldest):
+                    rt.active[coldest] = False
+                    report.workers_retired.append(coldest)
+                    self.workers_retired += 1
+
+        # 3. RETA rebalancing
+        if cfg.rebalance:
+            moves = plan_rebalance(
+                rates, rt.indirection, rt.active,
+                max_moves=cfg.max_moves_per_step,
+                trigger=cfg.imbalance_trigger,
+            )
+            if moves:
+                self.n_rebalances += 1
+                self._apply_moves(report, moves, now)
+
+        if (report.buckets_moved or report.swapped or report.workers_added
+                or report.workers_retired):
+            self.log.append({
+                "t": now,
+                "buckets_moved": report.buckets_moved,
+                "flows_migrated": report.flows_migrated,
+                "swapped": report.swapped,
+                "workers_added": list(report.workers_added),
+                "workers_retired": list(report.workers_retired),
+            })
+        return report
+
+    # -- internals -----------------------------------------------------------
+
+    def _apply_moves(self, report: StepReport, moves: dict, now: float) -> None:
+        rep = self.rt.migrate_buckets(moves, now)
+        for shard, recs in rep["records"].items():
+            report.records.setdefault(shard, []).extend(recs)
+        cost = (self.cfg.migrate_cost_pkts
+                * self.service.pkt_accum_ns * 1e-9)
+        for shard, n in rep["flows_out"].items():
+            report.ingest_charge_s[shard] = (
+                report.ingest_charge_s.get(shard, 0.0) + n * cost)
+        for shard, n in rep["flows_in"].items():
+            report.ingest_charge_s[shard] = (
+                report.ingest_charge_s.get(shard, 0.0) + n * cost)
+        report.buckets_moved += rep["buckets_moved"]
+        report.flows_migrated += rep["flows_migrated"]
+        self.buckets_moved += rep["buckets_moved"]
+        self.buckets_skipped += rep["buckets_skipped"]
+        self.flows_migrated += rep["flows_migrated"]
+
+    @staticmethod
+    def _merge_records(report: StepReport, recs: dict) -> None:
+        for shard, rs in recs.items():
+            report.records.setdefault(shard, []).extend(rs)
+
+    def summary(self) -> dict:
+        return {
+            "steps": self.n_steps,
+            "rebalances": self.n_rebalances,
+            "buckets_moved": self.buckets_moved,
+            "buckets_skipped": self.buckets_skipped,
+            "flows_migrated": self.flows_migrated,
+            "swaps": self.n_swaps,
+            "workers_added": self.workers_added,
+            "workers_retired": self.workers_retired,
+            "active_workers": sum(self.rt.active),
+        }

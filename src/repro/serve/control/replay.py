@@ -1,0 +1,139 @@
+"""Controlled offered-load replay: the adaptive fleet under the virtual
+clock (DESIGN.md §9.4).
+
+The static sharded replay precomputes steering once and drives each shard
+sequentially — valid because shards never interact. Under the control
+plane, steering *changes mid-run*, so this driver interleaves: the global
+event stream advances in delivery-ordered blocks, each block is steered
+by the RETA as it stands, and between blocks the control plane may
+rebalance, swap, or resize. Each worker keeps a persistent `_WorkerClock`
+(its two serving lanes and bounded ring survive across blocks), so the
+clock semantics per worker are identical to the static replay; the only
+new costs are the ones the control plane explicitly charges (quiesce
+flushes and per-flow migration copies).
+
+Control cadence counts packets, so a zero-loss bisection over this
+driver probes the same adaptation trajectory at every offered rate —
+the reported rate is the closed-loop system's, transients included.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.runtime.replay import (
+    ReplayStats,
+    ServiceModel,
+    PacketStream,
+    _gather_events,
+    _WorkerClock,
+)
+from repro.serve.runtime.shard import ShardedRuntime, stream_buckets
+
+from .plane import ControlConfig, ControlPlane
+
+__all__ = ["controlled_replay"]
+
+
+def controlled_replay(
+    stream: PacketStream,
+    make_runtime,
+    offered_pps: float,
+    service: ServiceModel,
+    *,
+    control: ControlConfig,
+    ring_capacity: int = 4096,
+    evict_every: int = 512,
+) -> ReplayStats:
+    """Replay `stream` at `offered_pps` through a control-plane-managed
+    sharded fleet. Same contract as `repro.serve.runtime.replay` (drops
+    aggregate across shards; predictions bit-identical to an oracle
+    single-worker run for every flow that completes under one pipeline
+    configuration), plus a `control` activity summary on the stats.
+    """
+    rt = make_runtime()
+    if not isinstance(rt, ShardedRuntime):
+        raise TypeError(
+            "controlled_replay needs a ShardedRuntime: the control plane "
+            "actuates RETA entries and per-shard state, which a single "
+            "worker does not have"
+        )
+    plane = ControlPlane(rt, control, service)
+    t_e = stream.base_t * (stream.base_pps / offered_pps)
+    t_end = float(t_e[-1]) + rt.flush_timeout_s if len(t_e) else 0.0
+    duration = float(t_e[-1] - t_e[0]) if stream.n_events > 1 else 1.0
+    gbps = stream.total_bytes * 8.0 / max(duration, 1e-9) / 1e9
+
+    # a flow's bucket is fixed for life; only the entry above it moves
+    ev_bucket = stream_buckets(stream)[stream.fid]
+    ev_key = stream.key[stream.fid]
+
+    clocks = [
+        _WorkerClock(srt, service, ring_capacity, evict_every)
+        for srt in rt.shards
+    ]
+    E = stream.n_events
+    pos = 0
+    while pos < E:
+        hi = min(pos + evict_every, E)
+        bk = ev_bucket[pos:hi]
+        plane.note(ev_key[pos:hi], bk)
+        shard = rt.indirection[bk]
+        for i in np.unique(shard):
+            sel = np.flatnonzero(shard == i) + pos
+            clocks[int(i)].feed(_gather_events(stream, t_e, sel))
+        step = plane.maybe_step(float(t_e[hi - 1]))
+        if step is not None:
+            # elastic scale-out: every new worker gets its own lanes
+            while len(clocks) < len(rt.shards):
+                clocks.append(_WorkerClock(
+                    rt.shards[len(clocks)], plane.service,
+                    ring_capacity, evict_every))
+            # quiesce/swap flushes ran on the configuration that produced
+            # them: charge before retargeting service constants
+            for i, recs in step.records.items():
+                clocks[i].charge(recs)
+            for i, sec in step.ingest_charge_s.items():
+                clocks[i].charge_ingest(sec)
+            for i, svc in step.service_switch.items():
+                clocks[i].service = svc
+        pos = hi
+
+    for clock in clocks:
+        clock.finish(t_end)
+
+    agg = rt.metrics
+    m = agg.merged()
+    per_shard = [
+        {
+            "shard": i,
+            "offered_pps": offered_pps * p.pkts_total / max(m.pkts_total, 1),
+            "pkts_total": p.pkts_total,
+            "drops_ring": p.drops_ring,
+            "drops_table": p.drops_table,
+            "flows_predicted": p.flows_predicted,
+            "flows_migrated_in": p.flows_migrated_in,
+            "flows_migrated_out": p.flows_migrated_out,
+            "batches": p.batches,
+            "occupancy_mean": p.occupancy_stats()["mean"],
+            "latency_p50_s": p.latency.percentile(50),
+            "latency_p99_s": p.latency.percentile(99),
+            "active": bool(rt.active[i]),
+        }
+        for i, p in enumerate(agg.parts)
+    ]
+    return ReplayStats(
+        offered_pps=offered_pps,
+        offered_gbps=gbps,
+        duration_s=duration,
+        drops=m.drops,
+        drops_ring=m.drops_ring,
+        drops_table=m.drops_table,
+        metrics=m,
+        predictions=dict(rt.results),
+        latency_p50_s=m.latency.percentile(50),
+        latency_p99_s=m.latency.percentile(99),
+        n_shards=rt.n_shards,
+        load_imbalance=agg.load_imbalance(),
+        per_shard=per_shard,
+        control=plane.summary(),
+    )

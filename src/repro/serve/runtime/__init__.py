@@ -20,9 +20,15 @@ replay where a drop on any shard fails the trial — bit-identical
 predictions to the single-worker path by construction.
 """
 from .dispatch import BatchRecord, MicroBatchDispatcher, StreamingRuntime, next_bucket
-from .flow_table import FlowStatus, FlowTable, symmetric_tuple_hash64, tuple_hash64
+from .flow_table import (
+    FlowStatus,
+    FlowTable,
+    move_slot,
+    symmetric_tuple_hash64,
+    tuple_hash64,
+)
 from .metrics import LatencyHistogram, RuntimeMetrics
-from .shard import AggregateMetrics, ShardedRuntime
+from .shard import AggregateMetrics, ShardedRuntime, stream_buckets
 from .replay import (
     PacketStream,
     ReplayStats,
@@ -45,8 +51,10 @@ __all__ = [
     "ShardedRuntime",
     "StreamingRuntime",
     "find_zero_loss_rate",
+    "move_slot",
     "next_bucket",
     "replay",
+    "stream_buckets",
     "symmetric_tuple_hash64",
     "tuple_hash64",
 ]

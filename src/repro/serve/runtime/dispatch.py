@@ -152,7 +152,7 @@ class BatchRecord:
     flush_ts: float            # when the batch left the queue
     bucket: int                # padded batch size actually submitted
     n_real: int
-    reason: str                # "full" | "timeout" | "drain"
+    reason: str                # "full" | "timeout" | "drain" | "migrate" | "swap"
     flush_idx: int = -1        # triggering packet index within an ingest block
     shard: int = 0             # owning worker under a ShardedRuntime
     probs: Optional[object] = None   # in-flight device array
@@ -250,6 +250,29 @@ class MicroBatchDispatcher:
             self._resolve(self._pending.popleft())
         return out
 
+    def flush_queue(self, now: float, reason: str) -> list[BatchRecord]:
+        """Quiesce the ready queue: flush everything queued, keep running.
+
+        The control plane calls this before a RETA migration ("migrate")
+        or a pipeline hot-swap ("swap"): afterwards no table slot is
+        referenced by the queue, so flow state can move between tables
+        without dangling slot ids. Unlike `drain` the pending window stays
+        open — in-flight batches hold no table references (flow ids are
+        copied at flush) and resolve on their own schedule.
+        """
+        out = []
+        while len(self._queue):
+            out.append(self._flush(now, reason))
+        return out
+
+    def resolve_pending(self) -> None:
+        """Block until every in-flight batch has resolved (hot-swap: the
+        old pipeline must finish its submitted work before it is dropped,
+        or its staging arenas could be retired while XLA still reads
+        them)."""
+        while self._pending:
+            self._resolve(self._pending.popleft())
+
     # -- flush mechanics -----------------------------------------------------
 
     def _flush(self, now: float, reason: str, flush_idx: int = -1) -> BatchRecord:
@@ -266,6 +289,10 @@ class MicroBatchDispatcher:
             m.flushes_full += 1
         elif reason == "timeout":
             m.flushes_timeout += 1
+        elif reason == "migrate":
+            m.flushes_migrate += 1
+        elif reason == "swap":
+            m.flushes_swap += 1
         else:
             m.flushes_drain += 1
 
@@ -502,6 +529,63 @@ class StreamingRuntime:
         for slot in self.table.evict_idle(now):
             self.dispatcher.enqueue(slot, now)
         return self.dispatcher.maybe_flush(now)
+
+    def hot_swap(self, pipeline: ServingPipeline, now: float) -> list[BatchRecord]:
+        """Drain-and-swap to a new pipeline without dropping a packet
+        (DESIGN.md §9.3).
+
+        Protocol: (1) quiesce — every READY flow flushes through the *old*
+        pipeline (it completed under the old configuration, so that is the
+        configuration that classifies it) and the pending window resolves,
+        so no computation still references the old table or arenas; (2) a
+        fresh `FlowTable` + dispatcher are built at the new connection
+        depth, sharing this runtime's metrics block so counters and
+        latency history continue across the swap; (3) every live flow
+        migrates via `move_slot` — ACTIVE flows keep accumulating into the
+        new table (a flow whose accumulated prefix already meets the new
+        depth becomes READY immediately), PREDICTED flows keep their
+        close-tracking state so re-tenancy accounting survives the swap.
+
+        The caller compiles/warm-ups `pipeline` beforehand (background
+        compile — `ServingPipeline.warm`); this method is pure state
+        motion plus at most one round of quiesce flushes.
+        """
+        disp = self.dispatcher
+        recs = disp.flush_queue(now, "swap")
+        disp.resolve_pending()
+        old = self.table
+        depth = pipeline.rep.depth
+        table = FlowTable(
+            old.capacity, depth, idle_timeout_s=old.idle_timeout_s,
+            load_factor=old.load_factor,
+            rebuild_tombstone_frac=old.rebuild_tombstone_frac,
+            metrics=self.metrics,
+        )
+        from .flow_table import move_slot
+
+        new_disp = MicroBatchDispatcher(
+            table, pipeline, max_batch=disp.max_batch,
+            min_bucket=disp.min_bucket, flush_timeout_s=disp.flush_timeout_s,
+            max_pending=disp.max_pending, execute=disp.execute,
+            metrics=self.metrics,
+        )
+        # predictions and the flush log are runtime-lifetime, not
+        # pipeline-lifetime: carry them over
+        new_disp.results = disp.results
+        new_disp.records = disp.records
+        ready = []
+        for s in np.nonzero(old.ctrl["state"] != 0)[0]:
+            ns = move_slot(old, table, int(s))
+            c = table.ctrl[ns]
+            if c["state"] == 1 and c["count"] >= depth:
+                c["state"] = 2  # READY under the new (deeper-or-equal) prefix
+                c["ready_ts"] = now
+                ready.append(ns)
+        for ns in ready:
+            new_disp.enqueue(ns, now)
+        self.table, self.dispatcher, self.pipeline = table, new_disp, pipeline
+        recs.extend(new_disp.maybe_flush(now))
+        return recs
 
     def drain(self, now: float) -> list[BatchRecord]:
         """End of stream: classify every flow still holding packets."""

@@ -35,6 +35,7 @@ from repro.serve.runtime.metrics import RuntimeMetrics
 __all__ = [
     "FlowStatus",
     "FlowTable",
+    "move_slot",
     "symmetric_tuple_hash64",
     "tuple_hash64",
 ]
@@ -292,15 +293,19 @@ class FlowTable:
         self.metrics.flows_seen += 1
         return slot
 
-    def recycle(self, slot: int) -> None:
-        """Return a slot to the free list and clear its payload row."""
+    def _clear_slot(self, slot: int) -> None:
+        """Detach a slot from the index and zero its state + payload.
+
+        The one slot-clearing sequence, shared by `recycle` (flow ended)
+        and `detach_slot` (flow migrating) so the two can never diverge.
+        State must clear BEFORE the index removal: removal can trigger a
+        rebuild, and the rebuild must not re-insert the departing slot.
+        Payload rows are zeroed so the next tenant starts from padding.
+        """
         key = int(self.ctrl["key"][slot])
-        # state must clear BEFORE the index removal: removal can trigger a
-        # rebuild, and the rebuild must not re-insert the departing slot
         self.ctrl["state"][slot] = 0
         self._index_remove(key)
         self.ctrl["key"][slot] = 0
-        # payload rows are zeroed so the next tenant starts from padding
         self.ts[slot] = 0.0
         self.size[slot] = 0.0
         self.direction[slot] = 0
@@ -308,6 +313,10 @@ class FlowTable:
         self.winsize[slot] = 0.0
         self.flags[slot] = 0
         self._free.append(slot)
+
+    def recycle(self, slot: int) -> None:
+        """Return a slot to the free list and clear its payload row."""
+        self._clear_slot(slot)
         self.metrics.slots_recycled += 1
 
     # -- hot path ------------------------------------------------------------
@@ -559,6 +568,14 @@ class FlowTable:
 
     # -- maintenance ---------------------------------------------------------
 
+    def detach_slot(self, slot: int) -> None:
+        """Remove a slot from this table *without* recycle accounting.
+
+        Used by migration (`move_slot`): the flow is not ending, it is
+        moving to another table, so `slots_recycled` must not count it —
+        the migration counters do."""
+        self._clear_slot(slot)
+
     def mark_predicted(self, slots: np.ndarray) -> list[int]:
         """Dispatch flushed these slots: recycle fully-closed flows, keep
         the rest as PREDICTED (tracked until both FINs or idle timeout)."""
@@ -605,3 +622,56 @@ class FlowTable:
             else:
                 self.recycle(int(s))
         return late
+
+
+def move_slot(src: FlowTable, dst: FlowTable, slot: int) -> int:
+    """Migrate one live flow's state from `src` to `dst` (DESIGN.md §9).
+
+    The transfer is a pure relocation: identity (5-tuple key), control
+    fields (state, fin_mask, counts, timestamps, flow_id) and the dense
+    payload move bit-exactly, so extraction on the destination produces
+    exactly what it would have produced on the source. Lifecycle counters
+    are *not* bumped — a migrated flow is the same flow, not a new one
+    (`flows_seen`) nor a finished one (`slots_recycled`); only the
+    `flows_migrated_out/in` counters record the transfer.
+
+    Tables may differ in `pkt_depth` (pipeline hot-swap): the payload
+    prefix up to `min(src.pkt_depth, dst.pkt_depth)` is copied and
+    `count` clamps to the destination depth. The caller decides what a
+    clamped ACTIVE flow becomes (a flow with `count == dst.pkt_depth`
+    is dispatchable under the new configuration).
+
+    Returns the destination slot, or -1 if `dst` has no free slot — the
+    flow then stays where it is, and the caller must leave its steering
+    entry unchanged (a misrouted continuation would re-tenant the
+    5-tuple on the destination and classify the flow twice).
+    """
+    if not dst._free:
+        return -1
+    key = int(src.ctrl["key"][slot])
+    found, bucket = dst._probe(key)
+    if found >= 0:
+        # the key already lives in dst (should be impossible while a flow
+        # is owned by exactly one shard); refuse rather than double-track
+        return -1
+    dslot = int(dst._free.pop())
+    dst.ctrl[dslot] = src.ctrl[slot]
+    d = min(src.pkt_depth, dst.pkt_depth)
+    cnt = min(int(src.ctrl["count"][slot]), d)
+    dst.ctrl["count"][dslot] = cnt
+    # destination payload rows are zero (init or recycle), so copying the
+    # overlapping prefix leaves the rest as padding — the batch layout
+    dst.ts[dslot, :d] = src.ts[slot, :d]
+    dst.size[dslot, :d] = src.size[slot, :d]
+    dst.direction[dslot, :d] = src.direction[slot, :d]
+    dst.ttl[dslot, :d] = src.ttl[slot, :d]
+    dst.winsize[dslot, :d] = src.winsize[slot, :d]
+    dst.flags[dslot, :d] = src.flags[slot, :d]
+    dst.proto[dslot] = src.proto[slot]
+    dst.s_port[dslot] = src.s_port[slot]
+    dst.d_port[dslot] = src.d_port[slot]
+    dst._index_insert(key, dslot, bucket)
+    src.detach_slot(slot)
+    src.metrics.flows_migrated_out += 1
+    dst.metrics.flows_migrated_in += 1
+    return dslot

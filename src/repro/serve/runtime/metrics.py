@@ -3,8 +3,10 @@
 Everything the replay driver and the dispatcher want to report lives here:
 
 - `LatencyHistogram` — log-bucketed enqueue→prediction flow latencies with
-  exact percentiles (raw samples are kept; flow counts are small enough
-  that the histogram is a *view*, not the storage).
+  *bounded* memory: bucket counts are exact and updated incrementally, raw
+  samples are capped by reservoir sampling, and percentiles are exact while
+  every sample is still retained, falling back to bucket interpolation
+  (error bounded by the bucket width) once the reservoir saturates.
 - `RuntimeMetrics`  — drop/evict/recycle counters, batch-occupancy stats
   and the compile-count probe the shape-bucketing tests assert against.
 
@@ -22,33 +24,79 @@ __all__ = ["LatencyHistogram", "RuntimeMetrics"]
 
 
 class LatencyHistogram:
-    """Flow-latency samples with exact quantiles + a log-bucketed view.
+    """Latency distribution with exact log-bucket counts + capped raw samples.
 
-    Raw samples are the storage (flow counts are small — thousands, not
-    billions); the log-spaced histogram is computed on demand for display,
-    so the record path is just an append.
+    A serving runtime records one sample per predicted flow, forever; keeping
+    every raw float (as this class originally did) grows without bound and
+    `RuntimeMetrics.merged` used to concatenate the leak across shards. The
+    storage contract is now:
+
+    - **bucket counts are exact**: `_counts` is updated incrementally on
+      every record, so `rows()` and bucket-based percentiles never degrade;
+    - **raw samples are a reservoir**: at most `max_samples` floats are kept
+      (Algorithm R with a deterministic generator, so replays reproduce);
+    - **percentiles** are exact (`np.percentile` over the raw samples) while
+      the reservoir still holds *every* sample, and interpolate within the
+      exact bucket counts afterwards — the absolute error is bounded by the
+      width of the bucket containing the requested rank;
+    - min/max/sum stay exact running scalars regardless of the cap.
     """
 
-    def __init__(self, lo_s: float = 1e-6, hi_s: float = 1e3, per_decade: int = 8):
+    def __init__(
+        self,
+        lo_s: float = 1e-6,
+        hi_s: float = 1e3,
+        per_decade: int = 8,
+        max_samples: int = 8192,
+        seed: int = 0,
+    ):
         self.lo_s = lo_s
         self.hi_s = hi_s
         n_dec = math.log10(hi_s / lo_s)
         self.edges = np.logspace(
             math.log10(lo_s), math.log10(hi_s), int(round(n_dec * per_decade)) + 1
         )
-        self._samples: list[float] = []
+        self.max_samples = max_samples
+        self._counts = np.zeros(len(self.edges) + 1, np.int64)
+        self._reservoir = np.empty(max_samples, np.float64)
+        self._n_res = 0
+        self._n = 0
+        self._min = math.inf
+        self._max = 0.0
+        self._sum = 0.0
+        self._rng = np.random.default_rng(seed)
 
     def record_many(self, seconds: np.ndarray) -> None:
-        self._samples.extend(np.asarray(seconds, dtype=np.float64).ravel().tolist())
+        x = np.asarray(seconds, dtype=np.float64).ravel()
+        if x.size == 0:
+            return
+        idx = np.searchsorted(self.edges, x, side="right")
+        self._counts += np.bincount(idx, minlength=len(self._counts))
+        self._min = min(self._min, float(x.min()))
+        self._max = max(self._max, float(x.max()))
+        self._sum += float(x.sum())
+        # reservoir: fill to capacity, then Algorithm R over the overflow
+        k = self.max_samples
+        fill = min(x.size, k - self._n_res)
+        if fill > 0:
+            self._reservoir[self._n_res : self._n_res + fill] = x[:fill]
+            self._n_res += fill
+        if fill < x.size:
+            tail = x[fill:]
+            # global index (1-based stream position) of each overflow sample
+            pos = self._n + fill + 1 + np.arange(tail.size)
+            j = self._rng.integers(0, pos)  # uniform in [0, pos)
+            hit = j < k
+            self._reservoir[j[hit]] = tail[hit]
+        self._n += x.size
 
     def counts(self) -> np.ndarray:
-        """Log-bucket counts (len(edges)+1: underflow ... overflow)."""
-        idx = np.searchsorted(self.edges, np.asarray(self._samples), side="right")
-        return np.bincount(idx, minlength=len(self.edges) + 1).astype(np.int64)
+        """Exact log-bucket counts (len(edges)+1: underflow ... overflow)."""
+        return self._counts.copy()
 
     def rows(self) -> list[tuple[float, float, int]]:
         """Occupied buckets as (lo_s, hi_s, count) — the display view."""
-        c = self.counts()
+        c = self._counts
         lo = np.concatenate([[0.0], self.edges])
         hi = np.concatenate([self.edges, [np.inf]])
         return [(float(lo[i]), float(hi[i]), int(c[i]))
@@ -56,12 +104,66 @@ class LatencyHistogram:
 
     @property
     def n(self) -> int:
-        return len(self._samples)
+        """Total samples recorded (not the retained reservoir size)."""
+        return self._n
 
     def percentile(self, q: float) -> float:
-        if not self._samples:
+        if self._n == 0:
             return 0.0
-        return float(np.percentile(np.asarray(self._samples), q))
+        if self._n == self._n_res:
+            # reservoir still holds every sample: exact
+            return float(np.percentile(self._reservoir[: self._n_res], q))
+        # bucket interpolation over the exact counts: rank the q-th sample,
+        # find its bucket, interpolate linearly inside it. The true value is
+        # somewhere in the same bucket, so the error <= bucket width — a
+        # *deterministic* bound, which is why the saturated reservoir is
+        # deliberately not consulted here (reservoir quantiles are tighter
+        # on average but only statistically; the reservoir stays maintained
+        # for the exact-merge path and raw-sample diagnostics).
+        rank = min(max(int(math.ceil(q / 100.0 * self._n)), 1), self._n)
+        cum = np.cumsum(self._counts)
+        b = int(np.searchsorted(cum, rank, side="left"))
+        lo = self._min if b == 0 else float(self.edges[b - 1])
+        hi = float(self.edges[b]) if b < len(self.edges) else self._max
+        prev = 0 if b == 0 else int(cum[b - 1])
+        frac = (rank - prev) / max(int(self._counts[b]), 1)
+        val = lo + frac * (max(hi, lo) - lo)
+        return float(min(max(val, self._min), self._max))
+
+    def merge_from(self, other: "LatencyHistogram") -> None:
+        """Fold another histogram in (aggregate views over shards).
+
+        Counts/min/max/sum merge exactly. Reservoirs concatenate while the
+        union still fits (keeping percentiles exact for small fleets) and
+        are re-sampled proportionally to each side's true population
+        otherwise — consistent with the per-histogram error contract.
+        """
+        if other._n == 0:
+            return
+        self._counts += other._counts
+        self._min = min(self._min, other._min)
+        self._max = max(self._max, other._max)
+        self._sum += other._sum
+        mine = self._reservoir[: self._n_res]
+        theirs = other._reservoir[: other._n_res]
+        n_total = self._n + other._n
+        exact = (self._n == self._n_res and other._n == other._n_res
+                 and n_total <= self.max_samples)
+        if exact:
+            self._reservoir[self._n_res : self._n_res + other._n_res] = theirs
+            self._n_res += other._n_res
+        else:
+            pool = np.concatenate([mine, theirs])
+            w = np.concatenate([
+                np.full(len(mine), self._n / max(len(mine), 1)),
+                np.full(len(theirs), other._n / max(len(theirs), 1)),
+            ])
+            k = min(self.max_samples, len(pool))
+            pick = self._rng.choice(len(pool), size=k, replace=False,
+                                    p=w / w.sum())
+            self._reservoir[:k] = pool[pick]
+            self._n_res = k
+        self._n = n_total
 
     def summary(self) -> dict:
         return {
@@ -69,7 +171,7 @@ class LatencyHistogram:
             "p50_s": self.percentile(50),
             "p90_s": self.percentile(90),
             "p99_s": self.percentile(99),
-            "max_s": float(max(self._samples)) if self._samples else 0.0,
+            "max_s": self._max if self._n else 0.0,
         }
 
 
@@ -87,11 +189,16 @@ class RuntimeMetrics:
     flows_seen: int = 0
     flows_evicted_idle: int = 0    # evicted before reaching depth (late flush)
     slots_recycled: int = 0
+    # control plane (DESIGN.md §9)
+    flows_migrated_out: int = 0    # slots exported to another shard's table
+    flows_migrated_in: int = 0     # slots imported from another shard's table
     # dispatch-side
     batches: int = 0
     flushes_full: int = 0          # flushed because depth-n batch filled
     flushes_timeout: int = 0       # flushed because oldest flow waited too long
     flushes_drain: int = 0         # flushed at end-of-stream drain
+    flushes_migrate: int = 0       # quiesce flush ahead of a RETA migration
+    flushes_swap: int = 0          # quiesce flush ahead of a pipeline hot-swap
     flows_predicted: int = 0
     duplicate_predictions: int = 0  # re-tenancy fragments, first wins
     batch_occupancy: list = dataclasses.field(default_factory=list)
@@ -112,9 +219,10 @@ class RuntimeMetrics:
         concatenate (in shard order — the aggregate cares about the
         distribution, not the interleaving), shape sets union (the jit
         cache is shared across shards, so the union *is* the compile
-        bound), and latency samples merge into one histogram. The parts
-        are copied out, not aliased: mutating the merged block never
-        writes back into a shard."""
+        bound), and latency histograms fold via `merge_from` (exact
+        counts always; raw samples stay capped). The parts are copied
+        out, not aliased: mutating the merged block never writes back
+        into a shard."""
         agg = cls()
         counter_names = [
             f.name for f in dataclasses.fields(cls) if f.type in (int, "int")
@@ -124,7 +232,7 @@ class RuntimeMetrics:
                 setattr(agg, name, getattr(agg, name) + getattr(p, name))
             agg.batch_occupancy.extend(p.batch_occupancy)
             agg.shapes_seen |= p.shapes_seen
-            agg.latency._samples.extend(p.latency._samples)
+            agg.latency.merge_from(p.latency)
         return agg
 
     def compile_count(self) -> int:
@@ -154,10 +262,14 @@ class RuntimeMetrics:
             "duplicate_predictions": self.duplicate_predictions,
             "flows_evicted_idle": self.flows_evicted_idle,
             "slots_recycled": self.slots_recycled,
+            "flows_migrated_out": self.flows_migrated_out,
+            "flows_migrated_in": self.flows_migrated_in,
             "batches": self.batches,
             "flushes_full": self.flushes_full,
             "flushes_timeout": self.flushes_timeout,
             "flushes_drain": self.flushes_drain,
+            "flushes_migrate": self.flushes_migrate,
+            "flushes_swap": self.flushes_swap,
             "compile_count": self.compile_count(),
             "batch_occupancy": self.occupancy_stats(),
             "latency": self.latency.summary(),

@@ -49,7 +49,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.traffic.features import per_flow_ops_ns, per_packet_ops, FEATURES
-from repro.traffic.synth import FLAG_NAMES, TrafficDataset
+from repro.traffic.synth import FLAG_NAMES, TrafficDataset, scenario_flow_starts
 
 from .dispatch import BatchRecord, StreamingRuntime
 from .flow_table import FlowTable, tuple_hash64
@@ -125,7 +125,16 @@ class PacketStream:
         ds: TrafficDataset,
         seed: int = 0,
         avg_active_flows: int = 64,
+        scenario: str = "uniform",
     ) -> "PacketStream":
+        """Flatten `ds` into a delivery-ordered packet stream.
+
+        `scenario` selects the flow *arrival process* (see
+        `repro.traffic.synth.scenario_flow_starts`): "uniform" is the
+        historical Poisson process, "burst" modulates it with MMPP on/off
+        phases. Dataset-level scenario structure (Zipf flow-mass skew,
+        drifting class mix) is applied earlier, by
+        `make_scenario_dataset`."""
         rows, cols = np.nonzero(ds.valid_mask())
         flags = ds.flags[rows, cols]  # (E, 8)
         flags_byte = (flags.astype(np.uint16) << np.arange(8)).sum(1).astype(np.uint8)
@@ -150,7 +159,7 @@ class PacketStream:
         last = np.minimum(ds.flow_len, ds.max_pkts) - 1
         mean_dur = float(ds.ts[np.arange(ds.n_flows), last].mean())
         spacing = max(mean_dur, 1e-3) / max(avg_active_flows, 1)
-        starts = np.cumsum(rng.exponential(spacing, ds.n_flows))
+        starts = scenario_flow_starts(rng, ds.n_flows, spacing, scenario)
         base_t = starts[rows] + rel64
         order = np.argsort(base_t, kind="stable")
         span = float(base_t[order[-1]] - base_t[order[0]])
@@ -328,6 +337,8 @@ class ReplayStats:
     n_shards: int = 1
     load_imbalance: float = 1.0
     per_shard: list = dataclasses.field(default_factory=list)
+    # control-plane replay: rebalance/swap/elastic activity summary
+    control: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> dict:
         out = {
@@ -344,6 +355,8 @@ class ReplayStats:
             out["n_shards"] = self.n_shards
             out["load_imbalance"] = self.load_imbalance
             out["per_shard"] = self.per_shard
+        if self.control:
+            out["control"] = self.control
         return out
 
 
@@ -404,6 +417,164 @@ def _gather_events(
     )
 
 
+class _WorkerClock:
+    """Persistent two-lane virtual clock for one worker (one NIC queue).
+
+    Holds the lane state (`busy_ingest`, `busy_infer`, the bounded ring of
+    outstanding ingest completions) *across* `feed` calls, so a worker can
+    be driven incrementally: the static replay feeds the whole steered
+    sub-stream in one call, while the control-plane driver interleaves all
+    shards block by block, pausing between blocks for telemetry/rebalance
+    steps (DESIGN.md §9). The clock semantics per feed are unchanged from
+    the original drive loop: vectorized blocks whenever a conservative
+    admission bound proves the ring cannot overflow (service charged at
+    the worst per-packet rate plus the whole block's possible flush-submit
+    cost), an order-exact per-packet fallback otherwise — DESIGN.md
+    §6.3/§7.
+
+    `service` is a plain attribute: a pipeline hot-swap retargets the
+    worker's constants mid-run by assigning it.
+    """
+
+    def __init__(
+        self,
+        rt: StreamingRuntime,
+        service: ServiceModel,
+        ring_capacity: int,
+        evict_every: int,
+    ):
+        self.rt = rt
+        self.service = service
+        self.ring_capacity = ring_capacity
+        self.evict_every = evict_every
+        self.busy_ingest = 0.0
+        self.busy_infer = 0.0
+        self.ring = np.empty(0, np.float64)  # outstanding completions (sorted)
+        self._since_poll = 0
+        self.t = 0.0
+
+    def charge(self, recs: list[BatchRecord], charge_submit: bool = True) -> None:
+        """Inference-lane accounting; optionally charge the ingest-lane
+        submit cost (the vectorized path charges it inside the recurrence
+        at the triggering packet instead). Public so the control plane can
+        charge quiesce/swap flushes to the worker that fired them."""
+        service = self.service
+        m = self.rt.metrics
+        for rec in recs:
+            if charge_submit:
+                self.busy_ingest += service.submit_ns(rec.n_real) * 1e-9
+            done = max(rec.flush_ts, self.busy_infer) \
+                + service.batch_ns(rec.bucket) * 1e-9
+            self.busy_infer = done
+            m.latency.record_many(done - rec.ready_ts)
+
+    def charge_ingest(self, seconds: float) -> None:
+        """Serialize extra work into the ingest lane (e.g. the per-flow
+        state-copy cost of a RETA migration)."""
+        self.busy_ingest += seconds
+
+    def feed(self, ev: _Events) -> None:
+        """Drive one delivery-ordered event block through the worker."""
+        rt = self.rt
+        service = self.service
+        m = rt.metrics
+        E = len(ev.t)
+
+        s_acc = service.pkt_accum_ns * 1e-9
+        s_trk = service.pkt_track_ns * 1e-9
+        s_max = max(s_acc, s_trk)
+        sub_flow = service.gather_ns_per_flow * 1e-9
+        evict_every = self.evict_every
+
+        pos = 0
+        while pos < E:
+            hi = min(pos + evict_every, E)
+            tc = ev.t[pos:hi]
+            n = hi - pos
+            # retire completed service (the scalar loop's per-arrival popleft)
+            ring = self.ring[np.searchsorted(self.ring, tc[0], side="right"):]
+
+            # conservative no-drop proof for this block: every packet at the
+            # slowest service class, all possible flush submits front-loaded
+            b_w = _lindley(tc, np.full(n, s_max), self.busy_ingest) \
+                + sub_flow * (len(rt.dispatcher._queue) + n)
+            carry = ring.size - np.searchsorted(ring, tc, side="right")
+            own = np.arange(n) - np.searchsorted(b_w, tc, side="right")
+            if int((carry + own).max()) < self.ring_capacity:
+                # -- vectorized block: admission proven, ingest in one call
+                _, accumulated, recs = rt.ingest_packets(
+                    ev.key[pos:hi], tc, ev.rel32[pos:hi], ev.size[pos:hi],
+                    ev.direction[pos:hi], ev.ttl[pos:hi], ev.winsize[pos:hi],
+                    ev.flags_byte[pos:hi], ev.proto[pos:hi], ev.s_port[pos:hi],
+                    ev.d_port[pos:hi], ev.fid[pos:hi], ev.fin[pos:hi],
+                )
+                s_i = np.where(accumulated, s_acc, s_trk)
+                # exact lane recurrence, segmented at flush submits
+                b = np.empty(n)
+                seg_lo = 0
+                for rec in recs:
+                    k = rec.flush_idx
+                    if k >= seg_lo:
+                        b[seg_lo:k + 1] = _lindley(
+                            tc[seg_lo:k + 1], s_i[seg_lo:k + 1],
+                            self.busy_ingest)
+                        self.busy_ingest = b[k]
+                        seg_lo = k + 1
+                    self.busy_ingest += service.submit_ns(rec.n_real) * 1e-9
+                if seg_lo < n:
+                    b[seg_lo:] = _lindley(tc[seg_lo:], s_i[seg_lo:],
+                                          self.busy_ingest)
+                    self.busy_ingest = b[n - 1]
+                self.ring = np.concatenate([ring, b])
+                self.charge(recs, charge_submit=False)
+                self.t = tc[-1]
+                self._since_poll += n
+                if self._since_poll >= evict_every:
+                    self.charge(rt.poll(self.t))
+                    self._since_poll = 0
+            else:
+                # -- fallback: per-packet loop, order-exact admission
+                rq: deque[float] = deque(ring.tolist())
+                ingest = rt.ingest_packet
+                for i in range(pos, hi):
+                    t = self.t = ev.t[i]
+                    while rq and rq[0] <= t:
+                        rq.popleft()
+                    self._since_poll += 1
+                    poll_due = self._since_poll >= evict_every
+                    if poll_due:
+                        self._since_poll = 0
+                    if len(rq) >= self.ring_capacity:
+                        # drop; a poll boundary landing here is skipped,
+                        # matching the scalar cadence (`continue` first)
+                        m.pkts_total += 1
+                        m.drops_ring += 1
+                        continue
+                    acc0 = m.pkts_accumulated
+                    _, recs = ingest(
+                        int(ev.key[i]), t, float(ev.rel32[i]),
+                        float(ev.size[i]), int(ev.direction[i]),
+                        float(ev.ttl[i]), float(ev.winsize[i]),
+                        int(ev.flags_byte[i]), float(ev.proto[i]),
+                        float(ev.s_port[i]), float(ev.d_port[i]),
+                        int(ev.fid[i]), bool(ev.fin[i]),
+                    )
+                    start_srv = max(t, self.busy_ingest)
+                    self.busy_ingest = start_srv + service.packet_ns(
+                        m.pkts_accumulated > acc0) * 1e-9
+                    rq.append(self.busy_ingest)
+                    if recs:
+                        self.charge(recs)
+                    if poll_due:
+                        self.charge(rt.poll(t))
+                self.ring = np.asarray(rq, np.float64)
+            pos = hi
+
+    def finish(self, t_end: float) -> None:
+        """End of stream: drain the worker at the global clock edge."""
+        self.charge(self.rt.drain(t_end))
+
+
 def _drive(
     rt: StreamingRuntime,
     ev: _Events,
@@ -412,124 +583,20 @@ def _drive(
     evict_every: int,
     t_end: float,
 ) -> None:
-    """Drive one worker's event stream under the two-lane virtual clock.
-
-    Packets are driven in blocks of `evict_every` through the vectorized
-    `StreamingRuntime.ingest_packets` path whenever a conservative
-    admission bound proves the ingest ring cannot overflow inside the
-    block (service charged at the worst per-packet rate plus the whole
-    block's possible flush-submit cost). Blocks that might drop fall back
-    to the per-packet loop, whose admission decisions are order-exact; the
-    clock model (ingest lane Lindley recurrence, bounded ring, serialized
-    inference lane) is identical either way — see DESIGN.md §6.3/§7.
+    """Drive one worker's whole event stream: feed + drain (the static
+    single-owner path; the control plane drives `_WorkerClock` directly).
 
     Each worker is one core with one NIC queue: its own ingest lane,
-    bounded ring of `ring_capacity`, and inference lane. Under a
-    `ShardedRuntime` this runs once per shard over the steered
-    sub-stream; lanes never interact across shards (DESIGN.md §8).
-    All effects accumulate in `rt` and its metrics; the final drain is
-    clocked at the caller's `t_end` so every shard of a fleet stops on
-    the same global clock edge.
+    bounded ring of `ring_capacity`, and inference lane. Under a static
+    `ShardedRuntime` this runs once per shard over the steered sub-stream;
+    lanes never interact across shards (DESIGN.md §8). All effects
+    accumulate in `rt` and its metrics; the final drain is clocked at the
+    caller's `t_end` so every shard of a fleet stops on the same global
+    clock edge.
     """
-    m = rt.metrics
-    E = len(ev.t)
-
-    s_acc = service.pkt_accum_ns * 1e-9
-    s_trk = service.pkt_track_ns * 1e-9
-    s_max = max(s_acc, s_trk)
-    sub_flow = service.gather_ns_per_flow * 1e-9
-
-    busy_ingest = 0.0
-    busy_infer = 0.0
-    ring = np.empty(0, np.float64)  # outstanding completion times (sorted)
-
-    def on_batches(recs: list[BatchRecord], charge_submit: bool = True) -> None:
-        """Inference-lane accounting; optionally charge the ingest-lane
-        submit cost (the vectorized path charges it inside the recurrence
-        at the triggering packet instead)."""
-        nonlocal busy_ingest, busy_infer
-        for rec in recs:
-            if charge_submit:
-                busy_ingest += service.submit_ns(rec.n_real) * 1e-9
-            done = max(rec.flush_ts, busy_infer) + service.batch_ns(rec.bucket) * 1e-9
-            busy_infer = done
-            m.latency.record_many(done - rec.ready_ts)
-
-    t = 0.0
-    pos = 0
-    while pos < E:
-        hi = min(pos + evict_every, E)
-        tc = ev.t[pos:hi]
-        n = hi - pos
-        # retire completed service (the scalar loop's per-arrival popleft)
-        ring = ring[np.searchsorted(ring, tc[0], side="right"):]
-
-        # conservative no-drop proof for this block: every packet at the
-        # slowest service class, all possible flush submits front-loaded
-        b_w = _lindley(tc, np.full(n, s_max), busy_ingest) \
-            + sub_flow * (len(rt.dispatcher._queue) + n)
-        carry = ring.size - np.searchsorted(ring, tc, side="right")
-        own = np.arange(n) - np.searchsorted(b_w, tc, side="right")
-        if int((carry + own).max()) < ring_capacity:
-            # -- vectorized block: admission proven, ingest in one call
-            _, accumulated, recs = rt.ingest_packets(
-                ev.key[pos:hi], tc, ev.rel32[pos:hi], ev.size[pos:hi],
-                ev.direction[pos:hi], ev.ttl[pos:hi], ev.winsize[pos:hi],
-                ev.flags_byte[pos:hi], ev.proto[pos:hi], ev.s_port[pos:hi],
-                ev.d_port[pos:hi], ev.fid[pos:hi], ev.fin[pos:hi],
-            )
-            s_i = np.where(accumulated, s_acc, s_trk)
-            # exact lane recurrence, segmented at flush submits
-            b = np.empty(n)
-            seg_lo = 0
-            for rec in recs:
-                k = rec.flush_idx
-                if k >= seg_lo:
-                    b[seg_lo:k + 1] = _lindley(
-                        tc[seg_lo:k + 1], s_i[seg_lo:k + 1], busy_ingest)
-                    busy_ingest = b[k]
-                    seg_lo = k + 1
-                busy_ingest += service.submit_ns(rec.n_real) * 1e-9
-            if seg_lo < n:
-                b[seg_lo:] = _lindley(tc[seg_lo:], s_i[seg_lo:], busy_ingest)
-                busy_ingest = b[n - 1]
-            ring = np.concatenate([ring, b])
-            on_batches(recs, charge_submit=False)
-            t = tc[-1]
-            if n == evict_every:
-                on_batches(rt.poll(t))
-        else:
-            # -- fallback: per-packet loop, order-exact admission
-            rq: deque[float] = deque(ring.tolist())
-            ingest = rt.ingest_packet
-            for i in range(pos, hi):
-                t = ev.t[i]
-                while rq and rq[0] <= t:
-                    rq.popleft()
-                if len(rq) >= ring_capacity:
-                    m.pkts_total += 1
-                    m.drops_ring += 1
-                    continue
-                acc0 = m.pkts_accumulated
-                _, recs = ingest(
-                    int(ev.key[i]), t, float(ev.rel32[i]), float(ev.size[i]),
-                    int(ev.direction[i]), float(ev.ttl[i]),
-                    float(ev.winsize[i]), int(ev.flags_byte[i]),
-                    float(ev.proto[i]), float(ev.s_port[i]),
-                    float(ev.d_port[i]), int(ev.fid[i]), bool(ev.fin[i]),
-                )
-                start_srv = max(t, busy_ingest)
-                busy_ingest = start_srv + service.packet_ns(
-                    m.pkts_accumulated > acc0) * 1e-9
-                rq.append(busy_ingest)
-                if recs:
-                    on_batches(recs)
-                if (i + 1) % evict_every == 0:
-                    on_batches(rt.poll(t))
-            ring = np.asarray(rq, np.float64)
-        pos = hi
-
-    on_batches(rt.drain(t_end))
+    clock = _WorkerClock(rt, service, ring_capacity, evict_every)
+    clock.feed(ev)
+    clock.finish(t_end)
 
 
 def replay(
@@ -540,6 +607,7 @@ def replay(
     *,
     ring_capacity: int = 4096,
     evict_every: int = 512,
+    control=None,
 ) -> ReplayStats:
     """Replay `stream` at `offered_pps` through a fresh runtime.
 
@@ -555,7 +623,22 @@ def replay(
     The clock semantics per worker are `_drive`'s (vectorized
     admission-proven blocks with an order-exact per-packet fallback —
     DESIGN.md §6.3/§7).
+
+    With `control` (a `repro.serve.control.ControlConfig`) and a sharded
+    runtime, the replay runs under the adaptive control plane instead:
+    shards are driven interleaved in global time, and telemetry-driven
+    RETA rebalancing / hot-swap / elastic actions fire between blocks
+    (DESIGN.md §9). Steering is then dynamic, so this path delegates to
+    `repro.serve.control.replay.controlled_replay`.
     """
+    if control is not None:
+        from repro.serve.control.replay import controlled_replay
+
+        return controlled_replay(
+            stream, make_runtime, offered_pps, service,
+            control=control, ring_capacity=ring_capacity,
+            evict_every=evict_every,
+        )
     rt = make_runtime()
     # tcpreplay-style clock compression: one factor scales delivery times
     t_e = stream.base_t * (stream.base_pps / offered_pps)
@@ -627,6 +710,7 @@ def find_zero_loss_rate(
     iters: int = 12,
     ring_capacity: int = 4096,
     verbose: bool = False,
+    control=None,
 ) -> tuple[float, ReplayStats]:
     """Bisect the highest offered rate with zero drops (Fig. 5c protocol).
 
@@ -637,6 +721,11 @@ def find_zero_loss_rate(
     `execute=False` (timing only — predictions are rate-invariant), and
     the returned stats come from a final *executing* verification replay
     at the found rate. `ring_capacity` is per worker queue.
+
+    `control` (a `ControlConfig`) measures the *adaptive* fleet: every
+    probe replays under the control plane (fresh runtime, fresh
+    telemetry), so the reported rate is the zero-loss throughput of the
+    closed-loop system — rebalancing transients included.
     """
     def ring_guard(events_bound: int, scope: str) -> None:
         """The ring is per worker queue: the (sub-)trace offered to a
@@ -659,7 +748,7 @@ def find_zero_loss_rate(
     def probe(r):
         return replay(
             stream, lambda: make_runtime(False), r, service,
-            ring_capacity=ring_capacity,
+            ring_capacity=ring_capacity, control=control,
         )
 
     # bracket from the stream's own base rate unless told otherwise: every
@@ -699,6 +788,6 @@ def find_zero_loss_rate(
             hi = mid
     final = replay(
         stream, lambda: make_runtime(True), lo, service,
-        ring_capacity=ring_capacity,
+        ring_capacity=ring_capacity, control=control,
     )
     return lo, final

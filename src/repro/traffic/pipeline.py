@@ -78,6 +78,39 @@ class ServingPipeline:
     def probabilities(self, ds: TrafficDataset) -> np.ndarray:
         return np.asarray(self._fn(ds))
 
+    def warm(self, buckets: "list[int]") -> None:
+        """Pre-compile this pipeline's executables for the given dispatch
+        shape buckets (swap-safe handle, DESIGN.md §9.3).
+
+        A pipeline hot-swap must never pay an XLA compile on the serving
+        path: the control plane compiles the replacement in the
+        background by warming every batch geometry the dispatcher can
+        submit (`min_bucket..max_batch` powers of two). Each call runs a
+        zero-filled batch through the real jit entry, so the executable
+        cache — keyed on (feature plan, depth, batch shape), disjoint
+        per configuration — holds every shape before the swap flips the
+        handle. Safe to run while the old pipeline serves: caches are
+        keyed by static config, so coexisting pipelines never evict or
+        alias each other, and the dummy buffers are donated like any
+        other batch."""
+        P = int(self.rep.depth)
+        for b in buckets:
+            ds = TrafficDataset(
+                ts=np.zeros((b, P), np.float32),
+                size=np.zeros((b, P), np.float32),
+                direction=np.zeros((b, P), np.uint8),
+                ttl=np.zeros((b, P), np.float32),
+                winsize=np.zeros((b, P), np.float32),
+                flags=np.zeros((b, P, 8), np.float32),
+                flow_len=np.zeros(b, np.int32),
+                proto=np.zeros(b, np.float32),
+                s_port=np.zeros(b, np.float32),
+                d_port=np.zeros(b, np.float32),
+                label=np.zeros(b, np.int32),
+                name="warm",
+            )
+            self.finalize(self.predict_async(ds))
+
 
 def build_pipeline(
     rep: FeatureRep,

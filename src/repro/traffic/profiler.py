@@ -86,6 +86,7 @@ class TrafficProfiler:
                                           # | throughput_replayed_sharded
         cost_mode: str = "modeled",       # modeled | measured
         n_shards: int = 2,                # worker count for the sharded metric
+        scenario: str = "uniform",        # arrival process for replayed metrics
         test_frac: float = 0.2,
         seed: int = 0,
         cache: bool = True,
@@ -96,9 +97,11 @@ class TrafficProfiler:
         self.cost_metric = cost_metric
         self.cost_mode = cost_mode
         self.n_shards = n_shards
+        self.scenario = scenario
         self.seed = seed
         self.train_ds, self.test_ds = dataset.split(test_frac, seed)
         self._stream_cache = None
+        self._service_cache: dict = {}
         self._matrix_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._result_cache: dict = {}
         self._cache_enabled = cache
@@ -203,6 +206,7 @@ class TrafficProfiler:
         verbose: bool = False,
         fused: bool = True,
         n_shards: int = 1,
+        control=None,
     ):
         """Zero-loss throughput measured through the streaming runtime.
 
@@ -223,6 +227,14 @@ class TrafficProfiler:
         saturation stays reachable (DESIGN.md §8.3, incl. the buffering
         caveat this implies for aggregate numbers). The flow table budget
         (`capacity`) is split per shard.
+
+        The offered stream follows the profiler's `scenario` (arrival
+        process + dataset skew are fixed at dataset construction; see
+        `make_scenario_dataset`). With `control` (a
+        `repro.serve.control.ControlConfig`) and `n_shards > 1`, the
+        measurement runs under the adaptive control plane — dynamic RETA
+        rebalancing and friends — instead of the static fleet
+        (DESIGN.md §9).
         """
         from repro.serve.runtime import (
             PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
@@ -234,7 +246,8 @@ class TrafficProfiler:
         pipe = build_pipeline(x, forest, max_pkts=x.depth, fused=fused,
                               use_kernel=False)
         if self._stream_cache is None:
-            self._stream_cache = PacketStream.from_dataset(self.test_ds, seed=self.seed)
+            self._stream_cache = PacketStream.from_dataset(
+                self.test_ds, seed=self.seed, scenario=self.scenario)
         stream = self._stream_cache
         if ring_capacity is None:
             # the DUT buffer must be small vs the trace or loss cannot
@@ -273,13 +286,21 @@ class TrafficProfiler:
             )
 
         t0 = time.perf_counter()
-        if self.cost_mode == "measured":
-            service = ServiceModel.measure(make_runtime(True), stream)
-        else:
-            service = ServiceModel.modeled(x, forest)
+        # one calibration per representation: repeated measurements of the
+        # same (F, n) — e.g. a static-vs-controlled comparison — must share
+        # clock constants, or calibration jitter masquerades as a
+        # configuration effect
+        skey = (x.key(), self.cost_mode)
+        service = self._service_cache.get(skey)
+        if service is None:
+            if self.cost_mode == "measured":
+                service = ServiceModel.measure(make_runtime(True), stream)
+            else:
+                service = ServiceModel.modeled(x, forest)
+            self._service_cache[skey] = service
         rate_pps, stats = find_zero_loss_rate(
             stream, make_runtime, service, iters=bisect_iters,
-            ring_capacity=ring_capacity, verbose=verbose,
+            ring_capacity=ring_capacity, verbose=verbose, control=control,
         )
         self.wallclock["measure_cost"] += time.perf_counter() - t0
         return stats.offered_gbps, stats

@@ -27,7 +27,33 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["TrafficDataset", "make_dataset", "FLAG_NAMES"]
+__all__ = [
+    "TrafficDataset",
+    "make_dataset",
+    "make_scenario_dataset",
+    "scenario_flow_starts",
+    "FLAG_NAMES",
+    "SCENARIOS",
+]
+
+# Adversarial serving workloads (DESIGN.md §9.5). Real traffic is not the
+# well-mixed Poisson soup `make_dataset` + a plain exponential arrival
+# process produce; these named scenarios break exactly the assumptions a
+# static deployment bakes in:
+#   uniform — the historical well-behaved baseline;
+#   zipf    — elephant-flow skew: flow packet mass ~ bounded Zipf, flow
+#             durations equalized so an elephant's *rate* scales with its
+#             mass. A handful of flows dominate offered load, so a
+#             handful of RETA buckets dominate shard load — the workload
+#             dynamic rebalancing exists for;
+#   burst   — MMPP on/off flow arrivals: mean rate preserved, but flows
+#             arrive in compressed bursts separated by lulls, stressing
+#             ring buffering and flush-timeout behavior;
+#   drift   — the class mix drifts across the trace (early flows drawn
+#             from one end of the class list, late flows from the other),
+#             so per-class load — and the bucket histogram under any
+#             class-correlated steering — moves under the control plane.
+SCENARIOS = ("uniform", "zipf", "burst", "drift")
 
 FLAG_NAMES = ("cwr", "ece", "urg", "ack", "psh", "rst", "syn", "fin")
 _F = {n: i for i, n in enumerate(FLAG_NAMES)}
@@ -148,8 +174,16 @@ def make_dataset(
     max_pkts: int = 128,
     seed: int = 0,
     label_noise: float = 0.02,
+    flow_len: np.ndarray | None = None,
 ) -> TrafficDataset:
-    """Generate a dataset for `iot-class` (28 classes) or `app-class` (7)."""
+    """Generate a dataset for `iot-class` (28 classes) or `app-class` (7).
+
+    `flow_len` overrides the per-class geometric length draw with explicit
+    per-flow packet counts (clipped to [3, max_pkts]) — scenario generators
+    use it to impose e.g. a Zipf mass distribution while every other
+    generative mechanism (handshake, sizes, IATs, FIN placement) stays
+    consistent with the lengths.
+    """
     if use_case == "iot-class":
         K = 28
         class_names = tuple(f"iot_device_{i:02d}" for i in range(K))
@@ -169,11 +203,17 @@ def make_dataset(
     y = rng.integers(0, K, n_flows)
     P = max_pkts
 
-    # flow lengths: geometric-ish with per-class mean, min 3 (handshake)
-    lam = prm["len_mean"][y]
-    flow_len = np.clip(
-        3 + rng.exponential(lam).astype(np.int64), 3, P
-    ).astype(np.int32)
+    # flow lengths: geometric-ish with per-class mean, min 3 (handshake),
+    # unless the caller imposes its own distribution (scenario generators)
+    if flow_len is None:
+        lam = prm["len_mean"][y]
+        flow_len = np.clip(
+            3 + rng.exponential(lam).astype(np.int64), 3, P
+        ).astype(np.int32)
+    else:
+        flow_len = np.clip(np.asarray(flow_len, np.int64), 3, P).astype(np.int32)
+        if len(flow_len) != n_flows:
+            raise ValueError("flow_len override must have one entry per flow")
 
     idx = np.arange(P)[None, :]
     in_flow = idx < flow_len[:, None]
@@ -284,3 +324,111 @@ def make_dataset(
         class_names=class_names,
         name=use_case,
     )
+
+
+# ---------------------------------------------------------------------------
+# adversarial serving scenarios (DESIGN.md §9.5)
+# ---------------------------------------------------------------------------
+
+
+def scenario_flow_starts(
+    rng: np.random.Generator,
+    n_flows: int,
+    spacing: float,
+    scenario: str = "uniform",
+    *,
+    burst_factor: float = 10.0,
+    burst_mean_on: int = 48,
+    burst_on_frac: float = 0.35,
+) -> np.ndarray:
+    """Flow start times for `n_flows` flows at mean inter-start `spacing`.
+
+    "uniform" (also "zipf"/"drift", whose adversarial structure lives in
+    the dataset, not the arrival process) is the historical Poisson
+    process. "burst" is a two-state MMPP: ON phases arrive
+    `burst_factor`x faster than the mean, OFF phases are stretched so the
+    *overall* mean spacing — and therefore the offered rate at any clock
+    compression — is preserved; `burst_on_frac` of flows arrive inside ON
+    phases of geometric mean length `burst_mean_on` flows. The same `rng`
+    drives every branch so "uniform" reproduces the pre-scenario streams
+    bit-for-bit.
+    """
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; pick from {SCENARIOS}")
+    if scenario != "burst":
+        return np.cumsum(rng.exponential(spacing, n_flows))
+    fast = spacing / burst_factor
+    # OFF spacing solves the mean-preservation constraint:
+    #   on_frac * fast + (1 - on_frac) * slow == spacing
+    slow = (spacing - burst_on_frac * fast) / (1.0 - burst_on_frac)
+    gaps = np.empty(n_flows)
+    pos = 0
+    on = True
+    while pos < n_flows:
+        if on:
+            n_phase = 1 + int(rng.geometric(1.0 / burst_mean_on))
+            mean_gap = fast
+        else:
+            mean_off = burst_mean_on * (1.0 - burst_on_frac) / burst_on_frac
+            n_phase = 1 + int(rng.geometric(1.0 / mean_off))
+            mean_gap = slow
+        n_phase = min(n_phase, n_flows - pos)
+        gaps[pos : pos + n_phase] = rng.exponential(mean_gap, n_phase)
+        pos += n_phase
+        on = not on
+    return np.cumsum(gaps)
+
+
+def make_scenario_dataset(
+    use_case: str,
+    scenario: str = "uniform",
+    n_flows: int = 1500,
+    max_pkts: int = 48,
+    seed: int = 0,
+    *,
+    zipf_a: float = 1.3,
+    elephant_boost: float = 0.0,
+    drift_jitter: float = 0.15,
+    **kw,
+) -> TrafficDataset:
+    """`make_dataset` plus the dataset-level half of a named scenario.
+
+    - "uniform"/"burst": the plain dataset (burst shapes arrivals, which
+      happens at `PacketStream.from_dataset(scenario=...)` time).
+    - "zipf": flow packet counts follow a bounded Zipf draw (elephants
+      clip at `max_pkts`), and every flow's timestamps are rescaled so a
+      flow's duration *shrinks* with its mass: per-flow packet rate goes
+      as `flow_len ** (1 + elephant_boost)`. A handful of flows then
+      carry most of the offered load, so a handful of RETA buckets carry
+      most of the shard load — the workload round-robin steering cannot
+      survive and dynamic rebalancing exists for.
+    - "drift": flows are reordered so the class mix seen by an in-order
+      arrival process drifts across the trace (class rank + jitter sort).
+    """
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; pick from {SCENARIOS}")
+    rng = np.random.default_rng(seed + 77_000)
+    if scenario == "zipf":
+        lens = 2 + rng.zipf(zipf_a, n_flows)
+        ds = make_dataset(use_case, n_flows=n_flows, max_pkts=max_pkts,
+                          seed=seed, flow_len=lens, **kw)
+        # rescale flow durations around the median so per-flow pps scales
+        # as len^(1 + boost): equalized duration alone gives rate ~ len;
+        # the boost shortens elephants further (a 24-pkt elephant at
+        # boost 1 offers ~64x a 3-pkt mouse's rate)
+        last = np.minimum(ds.flow_len, ds.max_pkts) - 1
+        dur = ds.ts[np.arange(ds.n_flows), last].astype(np.float64)
+        target = float(np.median(dur[dur > 0])) if (dur > 0).any() else 1.0
+        med_len = float(np.median(ds.flow_len))
+        target_i = target * (med_len / ds.flow_len) ** elephant_boost
+        scale = np.where(dur > 0, target_i / np.maximum(dur, 1e-9), 1.0)
+        ds.ts = (ds.ts.astype(np.float64) * scale[:, None]).astype(np.float32)
+        return ds
+    ds = make_dataset(use_case, n_flows=n_flows, max_pkts=max_pkts,
+                      seed=seed, **kw)
+    if scenario == "drift":
+        K = len(ds.class_names)
+        score = ds.label / max(K - 1, 1) + drift_jitter * rng.standard_normal(
+            ds.n_flows)
+        ds = ds.take(np.argsort(score, kind="stable"))
+    return ds

@@ -1,0 +1,591 @@
+"""Control-plane invariants (DESIGN.md §9).
+
+The contracts the adaptive layer promises, asserted end to end:
+
+- **migration safety**: a RETA rewrite moves the stranded flow state with
+  it — no flow is lost, double-predicted, or misrouted mid-flow, and
+  predictions stay bit-identical to an oracle single-worker run;
+- **hot-swap safety**: a mid-stream pipeline replacement drops nothing,
+  predicts every flow exactly once, and flows that complete under a
+  single configuration classify exactly as that configuration's oracle;
+- **the acceptance number**: under the Zipf elephant-flow scenario at 4
+  shards, the control plane strictly reduces `load_imbalance` and buys
+  >= 1.2x the static RETA's zero-loss throughput, zero drops both ways;
+- **elastic sizing**: the headroom policy grows the fleet under load and
+  retires workers (after evacuating their buckets) when idle;
+- **bounded metrics**: `LatencyHistogram` keeps exact bucket counts and
+  bounded raw storage, with percentile error within one bucket width.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve.control import (
+    ControlConfig,
+    HeadroomPolicy,
+    PipelineSwap,
+    plan_rebalance,
+    plan_retirement,
+)
+from repro.serve.runtime import (
+    FlowTable,
+    LatencyHistogram,
+    PacketStream,
+    ServiceModel,
+    ShardedRuntime,
+    StreamingRuntime,
+    find_zero_loss_rate,
+    move_slot,
+    replay,
+    stream_buckets,
+)
+from repro.traffic import extract_features
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+from repro.traffic.synth import make_scenario_dataset
+
+DEPTH_A = 8
+DEPTH_B = 12
+
+
+@pytest.fixture(scope="module")
+def ds():
+    # pinned draw with strong elephant skew (static 4-shard imbalance ~1.9)
+    return make_scenario_dataset("app-class", "zipf", n_flows=120,
+                                 max_pkts=256, seed=3)
+
+
+def _pipe(ds, rep):
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    return _pipe(ds, FeatureRep(
+        ("dur", "s_load", "s_bytes_mean", "s_iat_mean", "ack_cnt"),
+        depth=DEPTH_A))
+
+
+@pytest.fixture(scope="module")
+def pipeline_b(ds):
+    return _pipe(ds, FeatureRep(
+        ("dur", "s_load", "s_pkt_cnt", "d_bytes_med", "psh_cnt"),
+        depth=DEPTH_B))
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=0)
+
+
+@pytest.fixture(scope="module")
+def service():
+    # deterministic constants at realistic magnitudes: the control-plane
+    # overhead accounting (quiesce flushes, migration copies) only means
+    # something when packet service and state copies are on real scales
+    return ServiceModel(
+        pkt_accum_ns=800.0, pkt_track_ns=200.0,
+        bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+        gather_ns_per_flow=200.0, source="synthetic",
+    )
+
+
+def fleet(pipeline, n_shards=4, execute=False, **kw):
+    return ShardedRuntime(pipeline, n_shards=n_shards, capacity=2048,
+                          max_batch=64, execute=execute, **kw)
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+
+def test_shard_count_validation(pipeline):
+    with pytest.raises(ValueError, match=">= 1"):
+        ShardedRuntime(pipeline, n_shards=0)
+    with pytest.raises(ValueError, match="RETA"):
+        ShardedRuntime(pipeline, n_shards=129)
+    # 128 workers (one per RETA entry) is the legal maximum
+    rt = ShardedRuntime(pipeline, n_shards=128, capacity_per_shard=8,
+                        execute=False)
+    assert len(np.unique(rt.indirection)) == 128
+
+
+def test_per_shard_capacity_validation(pipeline):
+    with pytest.raises(ValueError, match="capacity"):
+        ShardedRuntime(pipeline, n_shards=4, capacity_per_shard=0)
+    with pytest.raises(ValueError, match="capacity"):
+        ShardedRuntime(pipeline, n_shards=4, capacity_per_shard=-5)
+
+
+# ---------------------------------------------------------------------------
+# flow-state migration primitive
+# ---------------------------------------------------------------------------
+
+
+def _seed_flow(table, key, n_pkts, flow_id=7, fin=False):
+    for i in range(n_pkts):
+        st, slot = table.observe(
+            key, 1.0 + i, float(i) * 0.1, 100.0 + i, i & 1, 64.0,
+            1000.0, 0x10, 6.0, 1234.0, 443.0, flow_id,
+            fin and i == n_pkts - 1,
+        )
+    return slot
+
+
+def test_move_slot_bit_exact_state_transfer():
+    src = FlowTable(16, pkt_depth=8)
+    dst = FlowTable(16, pkt_depth=8)
+    slot = _seed_flow(src, key=991, n_pkts=5)
+    before = {
+        "ctrl": src.ctrl[slot].copy(),
+        "ts": src.ts[slot].copy(), "size": src.size[slot].copy(),
+        "direction": src.direction[slot].copy(), "ttl": src.ttl[slot].copy(),
+        "winsize": src.winsize[slot].copy(), "flags": src.flags[slot].copy(),
+        "proto": src.proto[slot], "s_port": src.s_port[slot],
+        "d_port": src.d_port[slot],
+    }
+    ns = move_slot(src, dst, slot)
+    assert ns >= 0
+    assert dst.ctrl[ns] == before["ctrl"]
+    for f in ("ts", "size", "direction", "ttl", "winsize", "flags"):
+        assert (getattr(dst, f)[ns] == before[f]).all()
+    for f in ("proto", "s_port", "d_port"):
+        assert getattr(dst, f)[ns] == before[f]
+    # src slot fully detached: free again, index probe misses
+    assert src.n_active == 0
+    assert src._probe(991)[0] == -1
+    assert dst._probe(991)[0] == ns
+    # migration is not a lifecycle event
+    assert src.metrics.slots_recycled == 0
+    assert src.metrics.flows_migrated_out == 1
+    assert dst.metrics.flows_migrated_in == 1
+    assert dst.metrics.flows_seen == 0
+
+
+def test_move_slot_depth_clamp_and_full_destination():
+    src = FlowTable(8, pkt_depth=16)
+    dst = FlowTable(2, pkt_depth=4)
+    slot = _seed_flow(src, key=55, n_pkts=9)
+    payload_prefix = src.ts[slot, :4].copy()
+    ns = move_slot(src, dst, slot)
+    assert int(dst.ctrl["count"][ns]) == 4  # clamped to the new depth
+    assert (dst.ts[ns] == payload_prefix).all()
+    # fill dst, then a further move must refuse (flow stays put)
+    _seed_flow(dst, key=56, n_pkts=1, flow_id=1)
+    s2 = _seed_flow(src, key=57, n_pkts=2, flow_id=2)
+    assert move_slot(src, dst, s2) == -1
+    assert src._probe(57)[0] == s2  # untouched
+
+
+# ---------------------------------------------------------------------------
+# RETA migration through the live facade
+# ---------------------------------------------------------------------------
+
+
+def _drive_steered(rt, stream, *, migrate_at=None, moves=None, block=256):
+    """Feed the stream through `ingest_steered` in delivery order,
+    optionally rewriting RETA entries mid-stream."""
+    fid = stream.fid
+    bucket_of_flow = stream_buckets(stream)
+    E = stream.n_events
+    done_migration = None
+    for lo in range(0, E, block):
+        hi = min(lo + block, E)
+        sl = slice(lo, hi)
+        rt.ingest_steered(
+            stream.key[fid[sl]], stream.base_t[sl], stream.rel_ts32[sl],
+            stream.size[sl], stream.direction[sl], stream.ttl[sl],
+            stream.winsize[sl], stream.flags_byte[sl],
+            stream.proto[fid[sl]], stream.s_port[fid[sl]],
+            stream.d_port[fid[sl]], fid[sl], stream.fin[sl],
+            bucket=bucket_of_flow[fid[sl]],
+        )
+        if migrate_at is not None and lo <= migrate_at < hi:
+            done_migration = rt.migrate_buckets(
+                moves, float(stream.base_t[hi - 1]))
+    rt.drain(float(stream.base_t[-1]) + 1.0)
+    return done_migration
+
+
+def test_migration_no_flow_lost_or_double_predicted(pipeline, stream, ds,
+                                                    service):
+    """Rewrite a third of the RETA mid-stream; every flow still predicts
+    exactly once, bit-identical to a single-worker oracle."""
+    single = replay(
+        stream,
+        lambda: StreamingRuntime(pipeline, capacity=2048, max_batch=64),
+        stream.base_pps, service)
+    rt = fleet(pipeline, execute=True)
+    # move half of shard 0's buckets to shard 3, some of 1's to 2
+    moves = {int(b): 3 for b in range(0, 40, 4)}
+    moves.update({int(b): 2 for b in range(1, 20, 4)})
+    rep = _drive_steered(rt, stream, migrate_at=stream.n_events // 3,
+                         moves=moves)
+    assert rep is not None and rep["buckets_moved"] > 0
+    m = rt.metrics.merged()
+    assert m.flows_migrated_out == m.flows_migrated_in
+    assert rep["flows_migrated"] == m.flows_migrated_out
+    assert m.duplicate_predictions == 0
+    assert len(rt.results) == ds.n_flows
+    assert rt.results.keys() == single.predictions.keys()
+    for f, pred in single.predictions.items():
+        assert rt.results[f] == pred
+
+
+def test_migration_resnapshots_after_quiesce_recycle(pipeline):
+    """Regression: the quiesce flush recycles fully-closed READY flows
+    (`mark_predicted`), so a pre-flush slot snapshot could 'migrate' a
+    freed slot — double-freeing it on the source and indexing key 0 on
+    the destination."""
+    rt = ShardedRuntime(pipeline, n_shards=2, capacity=64, execute=False)
+    bucket = np.zeros(3, np.int64)  # steer one flow through bucket 0
+    key = np.full(3, 12345, np.uint64)
+    # three packets, FIN in both directions: READY_EOF before depth, and
+    # fully closed — exactly what mark_predicted recycles at the flush
+    rt.ingest_steered(
+        key, np.array([1.0, 1.001, 1.002]), np.zeros(3, np.float32),
+        np.full(3, 100.0, np.float32), np.array([0, 1, 0], np.uint8),
+        np.full(3, 64.0, np.float32), np.full(3, 1000.0, np.float32),
+        np.zeros(3, np.uint8),
+        np.full(3, 6.0, np.float32), np.full(3, 1.0, np.float32),
+        np.full(3, 2.0, np.float32), np.zeros(3, np.int64),
+        np.array([True, True, False]), bucket=bucket,
+    )
+    src = rt.shards[int(rt.indirection[0])]
+    assert len(src.dispatcher._queue) == 1  # READY, waiting for a flush
+    rep = rt.migrate_buckets({0: 1 - int(rt.indirection[0])}, now=1.01)
+    # the flush classified-and-recycled the flow; nothing left to move
+    assert rep["flows_migrated"] == 0
+    for shard in rt.shards:
+        free = shard.table._free
+        assert len(free) == len(set(free))  # no double-free
+        assert shard.table._probe(0)[0] == -1  # key 0 never indexed
+        live = np.nonzero(shard.table.ctrl["state"] != 0)[0]
+        assert live.size == 0
+    agg = rt.metrics.merged()
+    assert agg.flows_migrated_out == 0 and agg.flows_migrated_in == 0
+
+
+def test_migration_skips_bucket_when_destination_full(pipeline, stream):
+    rt = fleet(pipeline, capacity_per_shard=4, execute=False)
+    bucket_of_flow = stream_buckets(stream)
+    fid = stream.fid
+    sl = slice(0, 2000)
+    rt.ingest_steered(
+        stream.key[fid[sl]], stream.base_t[sl], stream.rel_ts32[sl],
+        stream.size[sl], stream.direction[sl], stream.ttl[sl],
+        stream.winsize[sl], stream.flags_byte[sl], stream.proto[fid[sl]],
+        stream.s_port[fid[sl]], stream.d_port[fid[sl]], fid[sl],
+        stream.fin[sl], bucket=bucket_of_flow[fid[sl]],
+    )
+    # shard 1's table is tiny; moving every shard-0 bucket there cannot fit
+    moves = {int(b): 1 for b in np.flatnonzero(rt.indirection == 0)}
+    before = rt.indirection.copy()
+    rep = rt.migrate_buckets(moves, float(stream.base_t[1999]))
+    assert rep["buckets_skipped"] > 0
+    # skipped buckets keep their steering entry (no misrouting)
+    skipped = [b for b in moves if rt.indirection[b] == before[b]]
+    assert len(skipped) == rep["buckets_skipped"]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: zipf @ 4 shards
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_acceptance_rebalancing_beats_static(pipeline, stream, ds,
+                                                  service):
+    """ISSUE 4 acceptance: under the Zipf elephant-flow scenario at 4
+    shards the control plane reduces load_imbalance vs the static RETA
+    and achieves >= 1.2x its measured zero-loss throughput, with zero
+    drops and bit-identical predictions."""
+    ring = max(64, stream.n_events // 16)
+
+    def mk(execute=False):
+        return fleet(pipeline, execute=execute)
+
+    cfg = ControlConfig(interval_pkts=512, imbalance_trigger=1.04)
+    r_st, s_st = find_zero_loss_rate(stream, mk, service, iters=8,
+                                     ring_capacity=ring)
+    r_dy, s_dy = find_zero_loss_rate(stream, mk, service, iters=8,
+                                     ring_capacity=ring, control=cfg)
+    assert s_st.drops == 0 and s_dy.drops == 0
+    assert s_dy.load_imbalance < s_st.load_imbalance
+    assert r_dy >= 1.2 * r_st
+    assert s_dy.control["buckets_moved"] > 0
+    # the verification replays execute: bitwise parity with a single-worker
+    # oracle (fed at its own zero-drop rate — predictions are
+    # rate-invariant precisely while nothing drops)
+    single = replay(
+        stream,
+        lambda: StreamingRuntime(pipeline, capacity=2048, max_batch=64),
+        stream.base_pps, service)
+    assert single.drops == 0
+    assert s_dy.predictions == single.predictions
+    assert len(s_dy.predictions) == ds.n_flows
+
+
+def test_controlled_replay_rate_invariant_predictions(pipeline, stream,
+                                                      service):
+    """Control decisions are packet-cadenced, so predictions (and the
+    adaptation trajectory) are offered-rate-invariant — the property the
+    timing-only bisection probes rely on."""
+    cfg = ControlConfig(interval_pkts=512, imbalance_trigger=1.04)
+
+    def mk():
+        return fleet(pipeline, execute=True)
+
+    lo = replay(stream, mk, stream.base_pps, service, control=cfg)
+    hi = replay(stream, mk, stream.base_pps * 3, service, control=cfg)
+    assert lo.predictions == hi.predictions
+    assert lo.control["buckets_moved"] == hi.control["buckets_moved"]
+
+
+# ---------------------------------------------------------------------------
+# pipeline hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_single_runtime_exactly_once(pipeline, pipeline_b, stream):
+    """Drain-and-swap on one worker mid-stream: zero drops, every flow
+    predicted exactly once, metrics continuous across the swap."""
+    rt = StreamingRuntime(pipeline, capacity=2048, max_batch=64)
+    fid = stream.fid
+    E = stream.n_events
+    cut = E // 2
+    for lo in range(0, E, 512):
+        hi = min(lo + 512, E)
+        sl = slice(lo, hi)
+        rt.ingest_packets(
+            stream.key[fid[sl]], stream.base_t[sl], stream.rel_ts32[sl],
+            stream.size[sl], stream.direction[sl], stream.ttl[sl],
+            stream.winsize[sl], stream.flags_byte[sl], stream.proto[fid[sl]],
+            stream.s_port[fid[sl]], stream.d_port[fid[sl]], fid[sl],
+            stream.fin[sl],
+        )
+        if lo <= cut < hi:
+            rt.hot_swap(pipeline_b, float(stream.base_t[hi - 1]))
+            assert rt.pipeline is pipeline_b
+            assert rt.table.pkt_depth == DEPTH_B
+    rt.drain(float(stream.base_t[-1]) + 1.0)
+    m = rt.metrics
+    assert m.drops == 0
+    assert m.duplicate_predictions == 0
+    assert len(rt.results) == stream.n_flows
+    assert m.flushes_swap >= 0  # quiesce may be empty if queue was drained
+    assert m.flows_migrated_in == m.flows_migrated_out  # same metrics block
+
+
+def test_hot_swap_fleet_parity_with_oracles(pipeline, pipeline_b, stream, ds,
+                                            service):
+    """Mid-replay fleet swap under the control plane: flows that complete
+    under one configuration match that configuration's oracle exactly."""
+    svc_b = ServiceModel(
+        pkt_accum_ns=900.0, pkt_track_ns=200.0,
+        bucket_ns={8: 4e4, 16: 5e4, 32: 7e4, 64: 1.2e5},
+        gather_ns_per_flow=200.0, source="synthetic")
+    cut = stream.n_events // 2
+    cfg = ControlConfig(interval_pkts=512,
+                        swap=PipelineSwap(pipeline_b, svc_b, after_pkts=cut))
+    swapped = replay(stream, lambda: fleet(pipeline, execute=True),
+                     stream.base_pps, service, control=cfg)
+    assert swapped.drops == 0
+    assert swapped.control["swaps"] == 1
+    assert swapped.metrics.duplicate_predictions == 0
+    assert len(swapped.predictions) == ds.n_flows
+
+    old_oracle = replay(
+        stream,
+        lambda: StreamingRuntime(pipeline, capacity=2048, max_batch=64),
+        stream.base_pps, service)
+    new_oracle = replay(
+        stream,
+        lambda: StreamingRuntime(pipeline_b, capacity=2048, max_batch=64),
+        stream.base_pps, svc_b)
+
+    first_pkt = np.full(ds.n_flows, stream.n_events)
+    last_pkt = np.zeros(ds.n_flows, np.int64)
+    np.minimum.at(first_pkt, stream.fid, np.arange(stream.n_events))
+    np.maximum.at(last_pkt, stream.fid, np.arange(stream.n_events))
+
+    # completed under the old configuration: all packets before the swap
+    # AND the flow reached depth (so it was READY and the swap's quiesce
+    # flush — at the latest — classified it through the old pipeline).
+    # A one-directional FIN does *not* complete a flow (fin_mask needs
+    # both directions), so short FIN'd flows stay ACTIVE across the swap
+    # and legitimately classify under the new configuration.
+    pre = (last_pkt < cut) & (ds.flow_len >= DEPTH_A)
+    # started after the swap: pure new-configuration flows
+    post = first_pkt >= cut
+    assert pre.sum() > 0 and post.sum() > 0
+    for f in np.nonzero(pre)[0]:
+        assert swapped.predictions[f] == old_oracle.predictions[f]
+    for f in np.nonzero(post)[0]:
+        assert swapped.predictions[f] == new_oracle.predictions[f]
+
+
+# ---------------------------------------------------------------------------
+# elastic scale-out / scale-in
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_scale_out_under_load(pipeline, stream, service):
+    cfg = ControlConfig(interval_pkts=512,
+                        headroom=HeadroomPolicy(max_workers=8))
+
+    def mk():
+        return ShardedRuntime(pipeline, n_shards=2, capacity=4096,
+                              max_batch=64, execute=False)
+
+    # per-worker ingest capacity ~1.25M pps at 800ns: 4M pps needs ~5
+    hot = replay(stream, mk, 4e6, service, control=cfg)
+    assert hot.control["workers_added"] > 0
+    assert hot.control["active_workers"] > 2
+    assert hot.n_shards == 2 + hot.control["workers_added"]
+    # the grown fleet absorbed a load two workers could not have served
+    added = [p for p in hot.per_shard if p["shard"] >= 2]
+    assert sum(p["pkts_total"] for p in added) > 0
+
+
+def test_elastic_scale_in_when_idle(pipeline, stream, service):
+    cfg = ControlConfig(interval_pkts=512,
+                        headroom=HeadroomPolicy(max_workers=8))
+
+    def mk():
+        return ShardedRuntime(pipeline, n_shards=2, capacity=4096,
+                              max_batch=64, execute=True)
+
+    cold = replay(stream, mk, 1e5, service, control=cfg)
+    assert cold.control["workers_retired"] >= 1
+    assert cold.control["active_workers"] == 1
+    # retirement evacuated state: nothing lost, predictions complete
+    assert cold.drops == 0
+    assert len(cold.predictions) == stream.n_flows
+    # retired workers own no RETA entries and hold no flows
+    rtd = [p["shard"] for p in cold.per_shard if not p["active"]]
+    assert rtd
+
+
+# ---------------------------------------------------------------------------
+# planner unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rebalance_reduces_imbalance():
+    rng = np.random.default_rng(0)
+    rates = rng.exponential(1.0, 128)
+    rates[5] = 60.0  # one elephant bucket
+    ind = np.arange(128, dtype=np.int64) % 4
+    active = [True] * 4
+
+    def imb(i):
+        loads = np.bincount(i, weights=rates, minlength=4)
+        return loads.max() / loads.mean()
+
+    moves = plan_rebalance(rates, ind, active, max_moves=16, trigger=1.02)
+    assert moves
+    after = ind.copy()
+    for b, d in moves.items():
+        after[b] = d
+    assert imb(after) < imb(ind)
+
+
+def test_plan_rebalance_noop_when_balanced():
+    rates = np.ones(128)
+    ind = np.arange(128, dtype=np.int64) % 4
+    assert plan_rebalance(rates, ind, [True] * 4, trigger=1.05) == {}
+    # single active worker: nothing to plan
+    assert plan_rebalance(rates, np.zeros(128, np.int64), [True]) == {}
+
+
+def test_plan_retirement_spreads_and_empties_worker():
+    rates = np.random.default_rng(1).exponential(1.0, 128)
+    ind = np.arange(128, dtype=np.int64) % 4
+    moves = plan_retirement(rates, ind, worker=2, active=[True] * 4)
+    assert set(moves) == set(np.flatnonzero(ind == 2).tolist())
+    assert all(d != 2 for d in moves.values())
+    with pytest.raises(ValueError):
+        plan_retirement(rates, np.zeros(128, np.int64), 0, [True, False])
+
+
+def test_headroom_policy_hysteresis():
+    pol = HeadroomPolicy(target_util=0.7, scale_in_util=0.5, max_workers=8)
+    # 4M pps at 1.25M/worker: need ceil(4/0.875) = 5
+    assert pol.desired_workers(4e6, 1.25e6, current=2) == 5
+    # mild overshoot below scale-in threshold keeps the current fleet
+    assert pol.desired_workers(2.4e6, 1.25e6, current=4) == 4
+    # deep idle shrinks
+    assert pol.desired_workers(1e5, 1.25e6, current=4) == 1
+    assert pol.desired_workers(1e9, 1.25e6, current=2) == 8  # capped
+
+
+# ---------------------------------------------------------------------------
+# bounded latency histogram (reservoir + exact buckets)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_histogram_exact_below_cap():
+    h = LatencyHistogram(max_samples=512)
+    x = np.random.default_rng(0).exponential(0.01, 400)
+    h.record_many(x)
+    assert h.n == 400
+    assert h.percentile(50) == pytest.approx(float(np.percentile(x, 50)),
+                                             rel=1e-12)
+    assert h.percentile(99) == pytest.approx(float(np.percentile(x, 99)),
+                                             rel=1e-12)
+
+
+def test_latency_histogram_bounded_memory_and_error():
+    h = LatencyHistogram(max_samples=256)
+    rng = np.random.default_rng(1)
+    all_x = []
+    for _ in range(40):
+        x = rng.lognormal(-6.0, 1.0, 1000)
+        h.record_many(x)
+        all_x.append(x)
+    x = np.concatenate(all_x)
+    assert h.n == len(x)
+    assert h._reservoir.size == 256  # storage never grew
+    # bucket counts stay exact
+    idx = np.searchsorted(h.edges, x, side="right")
+    assert (h.counts() == np.bincount(idx, minlength=len(h.edges) + 1)).all()
+    # percentile error bounded by the containing bucket's width
+    for q in (50, 90, 99):
+        est = h.percentile(q)
+        true = float(np.percentile(x, q))
+        b = int(np.searchsorted(h.edges, true, side="right"))
+        lo = 0.0 if b == 0 else float(h.edges[b - 1])
+        hi = float(h.edges[b]) if b < len(h.edges) else true
+        assert abs(est - true) <= (hi - lo) + 1e-12
+    assert h._min <= h.percentile(0.001) and h.percentile(99.999) <= h._max
+
+
+def test_latency_histogram_merge_exact_when_small():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    xa = np.random.default_rng(2).exponential(0.01, 300)
+    xb = np.random.default_rng(3).exponential(0.02, 500)
+    a.record_many(xa)
+    b.record_many(xb)
+    a.merge_from(b)
+    both = np.concatenate([xa, xb])
+    assert a.n == 800
+    assert a.percentile(90) == pytest.approx(float(np.percentile(both, 90)),
+                                             rel=1e-12)
+    idx = np.searchsorted(a.edges, both, side="right")
+    assert (a.counts() == np.bincount(idx, minlength=len(a.edges) + 1)).all()
+
+
+def test_latency_histogram_merge_stays_capped():
+    a = LatencyHistogram(max_samples=128)
+    b = LatencyHistogram(max_samples=128)
+    a.record_many(np.full(1000, 0.001))
+    b.record_many(np.full(1000, 0.1))
+    a.merge_from(b)
+    assert a.n == 2000
+    assert a._n_res <= 128
+    # bucket-interpolated percentiles still separate the two modes
+    assert a.percentile(20) < 0.01 < a.percentile(80)

@@ -1,0 +1,112 @@
+"""Adversarial traffic scenario generators (DESIGN.md §9.5).
+
+Each named scenario must actually produce the pathology it claims —
+otherwise the control-plane benchmarks measure nothing — while leaving
+the "uniform" path bit-identical to the historical generator.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.runtime import PacketStream
+from repro.serve.runtime.shard import steer_flows
+from repro.traffic.synth import (
+    SCENARIOS,
+    make_dataset,
+    make_scenario_dataset,
+    scenario_flow_starts,
+)
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario_dataset("app-class", "tsunami", n_flows=10, max_pkts=8)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenario_flow_starts(np.random.default_rng(0), 10, 1.0, "tsunami")
+
+
+def test_uniform_scenario_is_bit_identical_to_plain_dataset():
+    a = make_dataset("app-class", n_flows=80, max_pkts=16, seed=4)
+    b = make_scenario_dataset("app-class", "uniform", n_flows=80,
+                              max_pkts=16, seed=4)
+    for f in ("ts", "size", "direction", "ttl", "winsize", "flags",
+              "flow_len", "label"):
+        assert (getattr(a, f) == getattr(b, f)).all()
+    sa = PacketStream.from_dataset(a, seed=1)
+    sb = PacketStream.from_dataset(b, seed=1, scenario="uniform")
+    assert (sa.base_t == sb.base_t).all()
+
+
+def test_flow_len_override_validation():
+    with pytest.raises(ValueError, match="one entry per flow"):
+        make_dataset("app-class", n_flows=10, max_pkts=16,
+                     flow_len=np.array([5, 5]))
+    ds = make_dataset("app-class", n_flows=10, max_pkts=16,
+                      flow_len=np.full(10, 99))
+    assert (ds.flow_len == 16).all()  # clipped to max_pkts
+    # FIN placement follows the overridden lengths
+    last = ds.flow_len - 1
+    fin_col = ds.flags[np.arange(10), last, 7]
+    assert fin_col.sum() >= 1
+
+
+def test_zipf_scenario_concentrates_packet_mass():
+    ds = make_scenario_dataset("app-class", "zipf", n_flows=120,
+                               max_pkts=256, seed=3)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    per_flow = np.bincount(stream.fid, minlength=ds.n_flows)
+    share = np.sort(per_flow)[::-1]
+    # elephants: the top decile of flows carries most of the packets
+    assert share[:12].sum() / stream.n_events > 0.35
+    # and the skew survives RSS steering: round-robin RETA leaves a
+    # visibly hot shard (this is the pathology rebalancing fixes)
+    shard = steer_flows(stream, 4)[stream.fid]
+    counts = np.bincount(shard, minlength=4)
+    assert counts.max() / counts.mean() > 1.3
+    # duration equalization: elephants offer proportionally higher rate
+    last = np.minimum(ds.flow_len, ds.max_pkts) - 1
+    dur = ds.ts[np.arange(ds.n_flows), last]
+    big = ds.flow_len >= 128
+    small = ds.flow_len <= 8
+    assert big.any() and small.any()
+    assert np.median(dur[big]) < 4 * np.median(dur[small])
+
+
+def test_burst_scenario_mmpp_arrivals():
+    rng_u = np.random.default_rng(9)
+    rng_b = np.random.default_rng(9)
+    uni = scenario_flow_starts(rng_u, 4000, 1.0, "uniform")
+    bur = scenario_flow_starts(rng_b, 4000, 1.0, "burst")
+    gu = np.diff(uni)
+    gb = np.diff(bur)
+    # mean rate roughly preserved (bursts compress, lulls stretch)
+    assert abs(gb.mean() - gu.mean()) / gu.mean() < 0.35
+    # but the arrival process is far burstier: higher CoV of gaps
+    cov_u = gu.std() / gu.mean()
+    cov_b = gb.std() / gb.mean()
+    assert cov_b > 1.3 * cov_u
+
+
+def test_drift_scenario_class_mix_moves():
+    ds = make_scenario_dataset("app-class", "drift", n_flows=600,
+                               max_pkts=16, seed=2)
+    K = len(ds.class_names)
+    q = ds.n_flows // 4
+    first = np.bincount(ds.label[:q], minlength=K) / q
+    last = np.bincount(ds.label[-q:], minlength=K) / q
+    # total-variation distance between early and late class mixes
+    tv = 0.5 * np.abs(first - last).sum()
+    assert tv > 0.4
+    # content is a permutation of the plain dataset, not a relabeling
+    plain = make_scenario_dataset("app-class", "uniform", n_flows=600,
+                                  max_pkts=16, seed=2)
+    assert sorted(ds.label.tolist()) == sorted(plain.label.tolist())
+
+
+def test_scenarios_flow_through_packet_stream():
+    for scenario in SCENARIOS:
+        ds = make_scenario_dataset("app-class", scenario, n_flows=40,
+                                   max_pkts=16, seed=0)
+        st = PacketStream.from_dataset(ds, seed=0, scenario=scenario)
+        assert st.n_flows == 40
+        assert (np.diff(st.base_t) >= 0).all()
