@@ -2,7 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-runtime bench-compare example-stream example-control
+	bench-runtime bench-compare tune-smoke example-stream example-control \
+	example-tune
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -37,6 +38,13 @@ bench-smoke-zipf:
 		--scenario zipf --skew-gate \
 		--out results/BENCH_runtime_zipf.json
 
+# multi-fidelity tuner gate: batched cheap->measured optimization vs the
+# sequential loop and every baseline, all through one shared memoized
+# evaluator; fails unless CATO-MF's measured-fidelity hypervolume is >=
+# every method's at equal measurement budget (DESIGN.md §10.3)
+tune-smoke:
+	$(PYTHON) -m benchmarks.tune_smoke --gate
+
 # full runtime benchmark (Fig. 5c, measured) — separate output so it never
 # clobbers the smoke baseline the bench-compare gate diffs against
 bench-runtime:
@@ -52,3 +60,8 @@ example-stream:
 
 example-control:
 	$(PYTHON) examples/serve_control.py
+
+# the closed loop: optimize under zipf -> compile the front -> hot-swap
+# the knee point into a live sharded replay (DESIGN.md §10)
+example-tune:
+	$(PYTHON) examples/tune_serving.py

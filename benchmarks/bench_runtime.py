@@ -3,8 +3,9 @@
 Drives `fig5_serving_perf.run_replayed` — CATO Pareto points vs the
 ALL/MI10/RFE10 baselines, each measured by offered-load replay through
 `repro.serve.runtime` with bisection to the highest zero-drop rate — and
-records the result as a machine-readable `BENCH_runtime.json` datapoint at
-the repo root so the perf trajectory is tracked across PRs.
+records the result as a machine-readable `results/BENCH_runtime.json`
+datapoint (with a repo-root symlink alias for legacy readers) so the perf
+trajectory is tracked across PRs.
 
 With `--shards N` every point is measured against an RSS-steered
 `ShardedRuntime` (DESIGN.md §8): rows carry a `shard` column — "agg" for
@@ -36,6 +37,8 @@ import statistics
 import sys
 import time
 
+# legacy alias at the repo root: a symlink into results/ maintained by
+# `benchmarks.common.write_datapoint` (the canonical artifact home)
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_runtime.json"
 
 
@@ -60,7 +63,6 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
         scenario: str = "uniform"):
     from .fig5_serving_perf import REPLAYED_HEADER as HEADER, run_replayed
 
-    out_path = BENCH_PATH if out_path is None else pathlib.Path(out_path)
     cfg = dict(
         use_case=use_case,
         iters=8 if smoke else 25,
@@ -105,10 +107,11 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
         "gain_vs_baseline": gains,
         "zero_drops_at_reported_rate": all(r["drops"] == 0 for r in agg),
     }
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    out_path.write_text(json.dumps(out, indent=2) + "\n")
+    from .common import write_datapoint
+
+    path = write_datapoint(out, out_path, name=BENCH_PATH.name)
     if verbose:
-        print(f"# wrote {out_path} (wall {wall_s:.1f}s, "
+        print(f"# wrote {path} (wall {wall_s:.1f}s, "
               f"CATO best {cato_best:.3f} Gbps, gains {gains})")
     return out
 
@@ -185,8 +188,8 @@ if __name__ == "__main__":
     p.add_argument("--skew-gate", action="store_true",
                    help="fail unless dynamic rebalancing beats the static "
                    "RETA under the chosen skewed scenario")
-    p.add_argument("--out", default=None, help="output path (default: repo "
-                   "root BENCH_runtime.json)")
+    p.add_argument("--out", default=None, help="output path (default: "
+                   "results/BENCH_runtime.json + repo-root symlink alias)")
     p.add_argument("--single", default=None,
                    help="1-shard datapoint to compute sharded speedup against")
     p.add_argument("--min-speedup", type=float, default=0.0,

@@ -1,7 +1,9 @@
-"""Shared benchmark infrastructure: datasets, profilers, ground truth cache."""
+"""Shared benchmark infrastructure: datasets, profilers, ground truth cache,
+and the single datapoint-artifact writer every benchmark routes through."""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -14,8 +16,47 @@ from repro.traffic import (
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 RESULTS.mkdir(exist_ok=True)
+REPO = RESULTS.parent
 
 _CACHE = {}
+
+
+def datapoint_path(name: str) -> pathlib.Path:
+    """Canonical home of a benchmark datapoint artifact: results/<name>."""
+    return RESULTS / name
+
+
+def write_datapoint(doc: dict, out_path=None, *, name: str) -> pathlib.Path:
+    """Write a JSON benchmark datapoint through the one canonical path.
+
+    Explicit `out_path` values (a user's ``--out``, CI's artifacts dir)
+    are honored verbatim. The default routes to ``results/<name>`` and
+    maintains a repo-root *symlink* of the same name, so legacy readers
+    — `compare_runtime`'s committed-baseline diff, ``--single
+    BENCH_runtime.json``, external tooling tracking the perf trajectory
+    — keep resolving without knowing about the move.
+    """
+    if out_path is not None:
+        path = pathlib.Path(out_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        return path
+    RESULTS.mkdir(exist_ok=True)
+    path = datapoint_path(name)
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    alias = REPO / name
+    rel = os.path.relpath(path, REPO)
+    if alias.is_symlink():
+        if os.readlink(alias) != rel:
+            alias.unlink()
+            alias.symlink_to(rel)
+    elif alias.exists():
+        # pre-move regular file: migrate it to the alias scheme
+        alias.unlink()
+        alias.symlink_to(rel)
+    else:
+        alias.symlink_to(rel)
+    return path
 
 
 def iot_setup(n_flows=3000, max_pkts=128, features="mini", model="rf-fast",

@@ -6,8 +6,9 @@ non-zero on a regression beyond the threshold (default 20%). Driven by
 ``make bench-compare``; the committed file is only ever rewritten by an
 explicit ``make bench-smoke``.
 
-The baseline defaults to the committed repo-root ``BENCH_runtime.json``
-— meaningful when it was measured on the same machine (the local
+The baseline defaults to the committed ``BENCH_runtime.json`` (a
+repo-root symlink into ``results/``, the canonical datapoint home) —
+meaningful when it was measured on the same machine (the local
 workflow). Measured constants scale with host speed, so cross-machine
 comparisons need one of:
 

@@ -2,7 +2,7 @@
 the exhaustively-measured 6-feature ground-truth space."""
 import numpy as np
 
-from repro.core import CatoOptimizer, SearchSpace, hvi_ratio
+from repro.core import CatoOptimizer, MemoizedEvaluator, SearchSpace, hvi_ratio
 from repro.core.baselines import (
     run_iterate_all, run_random_search, run_simulated_annealing,
 )
@@ -14,15 +14,18 @@ def run(iters=50, max_depth=50, seed=0, verbose=True):
     ds, prof, names = iot_setup(features="mini", model="rf-fast")
     space = SearchSpace(names, max_depth=max_depth)
     reps, Yt = ground_truth(space, prof, cache_name=f"iot_mini_{max_depth}")
-    cached = cached_profiler(prof, reps, Yt)
+    # ONE memoized evaluator shared by CATO and every baseline: the
+    # cost comparison is measured through identical code, and a config
+    # any algorithm already evaluated is free for the others
+    ev = MemoizedEvaluator(cached_profiler(prof, reps, Yt))
     pri = priors_for(space, ds, prof)
 
     runs = {
-        "CATO": lambda: CatoOptimizer(space, cached, pri, seed=seed).run(iters),
-        "CATO-BASE": lambda: CatoOptimizer(space, cached, None, seed=seed).run(iters),
-        "SIMANNEAL": lambda: run_simulated_annealing(space, cached, iters, seed=seed),
-        "RANDSEARCH": lambda: run_random_search(space, cached, iters, seed=seed),
-        "ITERATEALL": lambda: run_iterate_all(space, cached, iters),
+        "CATO": lambda: CatoOptimizer(space, ev, pri, seed=seed).run(iters),
+        "CATO-BASE": lambda: CatoOptimizer(space, ev, None, seed=seed).run(iters),
+        "SIMANNEAL": lambda: run_simulated_annealing(space, ev, iters, seed=seed),
+        "RANDSEARCH": lambda: run_random_search(space, ev, iters, seed=seed),
+        "ITERATEALL": lambda: run_iterate_all(space, ev, iters),
     }
     rows = []
     for name, fn in runs.items():

@@ -1,0 +1,190 @@
+"""Tune-smoke: the multi-fidelity loop vs sequential search, gated on
+measured-fidelity hypervolume at equal measurement budget.
+
+Runs the batched multi-fidelity tuner (cheap `modeled` fidelity +
+expensive `replayed_sharded` measurements through the serving runtime,
+under a zipf elephant-flow scenario) on the smoke fixture, alongside
+the sequential single-fidelity CATO loop and the RANDSEARCH /
+SIMANNEAL / ITERATEALL baselines — every algorithm spending the *same*
+number of measured-fidelity evaluations, and all of them measuring
+through ONE shared memoized evaluator (a config any algorithm already
+measured is free for the rest, and results are bit-identical across
+algorithms — DESIGN.md §10.2).
+
+The budget unit is measured evaluations: one measured evaluation is a
+full zero-loss bisection through the sharded runtime (the wall-clock
+cost that matters), while a cheap modeled evaluation is ~5 orders of
+magnitude cheaper; the artifact records per-fidelity wall-clock so the
+"equal wall-clock" reading can be audited.
+
+Gate (`--gate`, the CI `tune-smoke` step): CATO's multi-fidelity
+measured-fidelity hypervolume must be >= the sequential loop's and >=
+every baseline's. The artifact lands at `results/BENCH_tune.json`
+(repo-root symlink alias) like the other datapoints.
+
+    python -m benchmarks.tune_smoke --gate
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    CatoOptimizer, MemoizedEvaluator, SearchSpace, hypervolume_2d,
+    pareto_mask,
+)
+from repro.core.baselines import (
+    run_iterate_all, run_random_search, run_simulated_annealing,
+)
+from repro.core.pareto import normalize_objectives
+from repro.traffic import FEATURE_NAMES, TrafficProfiler, backend_suite
+from repro.traffic.synth import make_scenario_dataset
+
+from .common import priors_for, write_datapoint
+
+MEASURED = "replayed_sharded"
+
+
+def measured_hv(per_method: dict[str, list]) -> dict[str, float]:
+    """Hypervolume of each method's measured observations, normalized
+    jointly over the union so the numbers are comparable."""
+    union = np.array(
+        [o.objectives for obs in per_method.values() for o in obs],
+        dtype=np.float64,
+    )
+    _, lo, hi = normalize_objectives(union)
+    out = {}
+    for name, obs in per_method.items():
+        Y = np.array([o.objectives for o in obs], dtype=np.float64)
+        Yn, _, _ = normalize_objectives(Y, lo, hi)
+        out[name] = hypervolume_2d(Yn[pareto_mask(Yn)])
+    return out
+
+
+def run(budget: int = 6, batch_size: int = 4, seed: int = 0,
+        n_flows: int = 400, max_pkts: int = 96, shards: int = 2,
+        bisect_iters: int = 6, out_path=None, scenario: str = "zipf",
+        verbose: bool = True):
+    ds = make_scenario_dataset("app-class", scenario, n_flows=n_flows,
+                               max_pkts=max_pkts, seed=seed)
+    prof = TrafficProfiler(ds, FEATURE_NAMES, model="tree-fast",
+                           cost_mode="modeled", scenario=scenario,
+                           n_shards=shards, bisect_iters=bisect_iters,
+                           seed=seed)
+    space = SearchSpace(FEATURE_NAMES, max_depth=min(50, max_pkts))
+    pri = priors_for(space, ds, prof)
+    ev = MemoizedEvaluator(backend_suite(prof, ("modeled", MEASURED)))
+
+    t_all = time.perf_counter()
+    runs = {}
+    walls = {}
+
+    def record(name, fn):
+        t0 = time.perf_counter()
+        runs[name] = fn()
+        walls[name] = round(time.perf_counter() - t0, 2)
+        if verbose:
+            print(f"# tune-smoke {name:10s} done in {walls[name]:.1f}s")
+
+    record("CATO-MF", lambda: CatoOptimizer(
+        space, ev, pri, seed=seed, batch_size=batch_size,
+    ).run_multi_fidelity(measure_budget=budget))
+    record("CATO-SEQ", lambda: CatoOptimizer(
+        space, ev, pri, seed=seed,
+    ).run(budget, fidelity=MEASURED))
+    record("RANDSEARCH", lambda: run_random_search(
+        space, ev, budget, seed=seed, fidelity=MEASURED))
+    record("SIMANNEAL", lambda: run_simulated_annealing(
+        space, ev, budget, seed=seed, fidelity=MEASURED))
+    record("ITERATEALL", lambda: run_iterate_all(
+        space, ev, budget, fidelity=MEASURED))
+
+    per_method = {
+        name: res.observations_at(MEASURED) or res.measured_observations()
+        for name, res in runs.items()
+    }
+    hv = measured_hv(per_method)
+    mf = runs["CATO-MF"]
+    doc = {
+        "bench": "tune_smoke",
+        "config": {
+            "budget": budget, "batch_size": batch_size, "seed": seed,
+            "n_flows": n_flows, "max_pkts": max_pkts, "shards": shards,
+            "scenario": scenario, "bisect_iters": bisect_iters,
+            "measured_fidelity": MEASURED,
+        },
+        "wall_s": round(time.perf_counter() - t_all, 2),
+        "methods": {
+            name: {
+                "hv_measured": round(hv[name], 6),
+                "measured_evals": len(per_method[name]),
+                "total_observations": len(runs[name].observations),
+                "surrogate_fallbacks": len(runs[name].surrogate_fallbacks),
+                "wall_s": walls[name],
+            }
+            for name in runs
+        },
+        "evaluator": ev.budget_summary(),
+        "mf_fidelity_counts": mf.fidelity_counts,
+    }
+    path = write_datapoint(doc, out_path, name="BENCH_tune.json")
+    if verbose:
+        for name in runs:
+            m = doc["methods"][name]
+            print(f"# {name:10s} HV={m['hv_measured']:.4f} "
+                  f"measured={m['measured_evals']} "
+                  f"obs={m['total_observations']}")
+        print(f"# wrote {path} (wall {doc['wall_s']:.1f}s)")
+    return doc
+
+
+def check_gate(doc: dict) -> int:
+    """CATO-MF measured HV must not lose to any method at equal budget."""
+    methods = doc["methods"]
+    mf = methods["CATO-MF"]
+    budget = doc["config"]["budget"]
+    bad = 0
+    if mf["measured_evals"] > budget:
+        print(f"FAIL: CATO-MF spent {mf['measured_evals']} measured evals "
+              f"(budget {budget})", file=sys.stderr)
+        bad = 1
+    for name, m in methods.items():
+        if name == "CATO-MF":
+            continue
+        rel = "ok" if mf["hv_measured"] >= m["hv_measured"] - 1e-9 else "FAIL"
+        print(f"{rel}: CATO-MF HV {mf['hv_measured']:.4f} vs "
+              f"{name} {m['hv_measured']:.4f} "
+              f"({m['measured_evals']} measured evals each)")
+        if rel == "FAIL":
+            bad = 1
+    if bad:
+        print("FAIL: multi-fidelity loop lost measured hypervolume at "
+              "equal measurement budget", file=sys.stderr)
+        return 1
+    print("OK: multi-fidelity >= sequential and every baseline at equal "
+          "measurement budget")
+    return 0
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--budget", type=int, default=6,
+                   help="measured-fidelity evaluations per method")
+    p.add_argument("--batch-size", type=int, default=4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--shards", type=int, default=2)
+    p.add_argument("--scenario", default="zipf",
+                   choices=("uniform", "zipf", "burst", "drift"))
+    p.add_argument("--out", default=None,
+                   help="output path (default: results/BENCH_tune.json "
+                   "+ repo-root symlink alias)")
+    p.add_argument("--gate", action="store_true",
+                   help="fail unless CATO-MF HV >= every method's")
+    args = p.parse_args()
+    doc = run(budget=args.budget, batch_size=args.batch_size, seed=args.seed,
+              shards=args.shards, scenario=args.scenario, out_path=args.out)
+    if args.gate:
+        raise SystemExit(check_gate(doc))

@@ -1,0 +1,35 @@
+"""CATO beyond the paper: tune an LM serving pipeline's config with the
+same multi-objective BO the paper applies to traffic pipelines.
+
+(Previously `examples/tune_serving.py`; that name now drives the traffic
+measure -> optimize -> compile -> deploy loop.)
+
+    PYTHONPATH=src python examples/tune_lm_config.py [--arch qwen3-8b]
+"""
+import argparse
+
+from repro import configs
+from repro.core.tuner import PipelineTuner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--iters", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    tuner = PipelineTuner(cfg, chips=256)
+    res = tuner.tune(args.iters, seed=0)
+
+    print(f"== serving-config Pareto front for {cfg.name} "
+          f"(cost = us per generated token on 256 chips, perf = quality proxy) ==")
+    for o in res.pareto_observations():
+        x = o.x
+        print(f"  {o.cost:7.3f}us  q={o.perf:.3f}  kv={x.kv_dtype:4s} "
+              f"window={x.window:6d} mb={x.microbatches} remat={x.remat:5s} "
+              f"batch={x.decode_batch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,11 @@ reuses the same Optimizer against the dry-run roofline cost model.
 """
 from .search_space import FeatureRep, SearchSpace
 from .optimizer import CatoOptimizer, CatoResult, Observation
+from .evaluator import MeasurementBackend, MemoizedEvaluator
 from .priors import CatoPriors, build_priors
-from .pareto import hvi_ratio, hypervolume_2d, pareto_front, pareto_mask
+from .pareto import (
+    hvi_ratio, hypervolume_2d, knee_index, pareto_front, pareto_mask,
+)
 from .surrogate import RFSurrogate
 from .forest import DenseForest, train_forest, train_tree
 
@@ -19,10 +22,13 @@ __all__ = [
     "CatoOptimizer",
     "CatoResult",
     "Observation",
+    "MeasurementBackend",
+    "MemoizedEvaluator",
     "CatoPriors",
     "build_priors",
     "hvi_ratio",
     "hypervolume_2d",
+    "knee_index",
     "pareto_front",
     "pareto_mask",
     "RFSurrogate",

@@ -15,7 +15,7 @@ import numpy as np
 
 from .pareto import pareto_mask
 
-__all__ = ["hvi_contribution", "ehvi", "apply_pibo"]
+__all__ = ["hvi_contribution", "ehvi", "qehvi_greedy", "apply_pibo"]
 
 
 def hvi_contribution(
@@ -62,6 +62,50 @@ def ehvi(
     for t in range(T):
         acc += hvi_contribution(front, post_samples[t], ref)
     return acc / T
+
+
+def qehvi_greedy(
+    post_samples: np.ndarray,  # (T, M, 2) posterior draws (normalized objs)
+    front: np.ndarray,         # (K, 2) current normalized front
+    q: int,
+    *,
+    ref: tuple[float, float] = (1.0, 1.0),
+    log_prior: np.ndarray | None = None,
+    iteration: int = 0,
+    beta: float = 0.0,
+) -> list[int]:
+    """Greedy q-EHVI batch selection: candidate indices, best first.
+
+    Joint q-EHVI is approximated by the standard sequential-greedy
+    scheme: pick the EHVI argmax, *fantasize* the pick into every
+    posterior sample's front (sample t contributes its own draw of the
+    pick, preserving the joint coupling across objectives), rescore the
+    remainder against the augmented fronts, repeat. Hypervolume
+    improvement is submodular, so greedy keeps the (1 - 1/e)
+    approximation guarantee. πBO prior weight (`log_prior`) is applied
+    at every pick of the batch — the whole batch belongs to the same
+    iteration `t` in the decay schedule.
+    """
+    T, M, _ = post_samples.shape
+    base = np.asarray(front, dtype=np.float64).reshape(-1, 2)
+    fronts = [base] * T
+    chosen: list[int] = []
+    avail = np.ones(M, dtype=bool)
+    for _ in range(min(q, M)):
+        acc = np.zeros(M, dtype=np.float64)
+        for t in range(T):
+            acc += hvi_contribution(fronts[t], post_samples[t], ref)
+        acq = acc / T
+        if log_prior is not None:
+            acq = apply_pibo(acq, log_prior, iteration, beta)
+        pick = int(np.argmax(np.where(avail, acq, -np.inf)))
+        chosen.append(pick)
+        avail[pick] = False
+        fronts = [
+            np.vstack([fronts[t], post_samples[t, pick][None, :]])
+            for t in range(T)
+        ]
+    return chosen
 
 
 def scalarized_ei(

@@ -16,6 +16,7 @@ from typing import Callable
 
 import numpy as np
 
+from .evaluator import MemoizedEvaluator
 from .forest import train_forest
 from .mutual_info import mi_scores
 from .optimizer import CatoResult, Observation
@@ -31,18 +32,24 @@ __all__ = [
 ]
 
 
-def _evaluate(profiler, x, it) -> Observation:
-    res = profiler(x)
-    if hasattr(res, "cost"):
-        return Observation(x, float(res.cost), float(res.perf),
-                           aux=dict(getattr(res, "aux", {})), iteration=it)
-    cost, perf = res
-    return Observation(x, float(cost), float(perf), iteration=it)
+def _shared_evaluator(profiler) -> MemoizedEvaluator:
+    """Baselines evaluate through the same memoized layer as
+    `CatoOptimizer` (pass an existing `MemoizedEvaluator` to share its
+    per-fidelity cache across algorithms), so cost comparisons are
+    measured through identical code — DESIGN.md §10.2."""
+    if isinstance(profiler, MemoizedEvaluator):
+        return profiler
+    return MemoizedEvaluator(profiler)
 
 
 def run_random_search(
-    space: SearchSpace, profiler: Callable, n_iterations: int, seed: int = 0
+    space: SearchSpace,
+    profiler: Callable | MemoizedEvaluator,
+    n_iterations: int,
+    seed: int = 0,
+    fidelity: str | None = None,
 ) -> CatoResult:
+    ev = _shared_evaluator(profiler)
     rng = np.random.default_rng(seed)
     obs, seen = [], set()
     it = 0
@@ -51,32 +58,37 @@ def run_random_search(
         if x.key() in seen:
             continue
         seen.add(x.key())
-        obs.append(_evaluate(profiler, x, it))
+        obs.append(ev.evaluate(x, it, fidelity))
         it += 1
     return CatoResult(obs, space)
 
 
 def run_iterate_all(
-    space: SearchSpace, profiler: Callable, n_iterations: int
+    space: SearchSpace,
+    profiler: Callable | MemoizedEvaluator,
+    n_iterations: int,
+    fidelity: str | None = None,
 ) -> CatoResult:
     """All features; depth = 1, 2, 3, ... (paper §5.3)."""
+    ev = _shared_evaluator(profiler)
     obs = []
     for it in range(n_iterations):
         d = space.min_depth + it
         if d > space.max_depth:
             break
         x = FeatureRep(space.feature_names, d)
-        obs.append(_evaluate(profiler, x, it))
+        obs.append(ev.evaluate(x, it, fidelity))
     return CatoResult(obs, space)
 
 
 def run_simulated_annealing(
     space: SearchSpace,
-    profiler: Callable,
+    profiler: Callable | MemoizedEvaluator,
     n_iterations: int,
     seed: int = 0,
     t0: float = 1.0,
     cooling: float = 0.99,
+    fidelity: str | None = None,
 ) -> CatoResult:
     """Multi-objective SA per paper Appendix E.
 
@@ -85,11 +97,12 @@ def run_simulated_annealing(
     is always accepted; otherwise accept with prob exp((f(x)-f(x_i))/T_i)
     where f is the equal-weighted combination of normalized objectives.
     """
+    ev = _shared_evaluator(profiler)
     rng = np.random.default_rng(seed)
     obs: list[Observation] = []
 
     cur = space.sample_uniform(rng, 1)[0]
-    cur_obs = _evaluate(profiler, cur, 0)
+    cur_obs = ev.evaluate(cur, 0, fidelity)
     obs.append(cur_obs)
     T = t0
 
@@ -103,7 +116,7 @@ def run_simulated_annealing(
         frac = 1.0 - it / max(1, n_iterations)
         step = max(1, int(frac * (space.max_depth - space.min_depth)))
         nb = space.mutate(rng, cur_obs.x, depth_step=step)
-        nb_obs = _evaluate(profiler, nb, it)
+        nb_obs = ev.evaluate(nb, it, fidelity)
         obs.append(nb_obs)
 
         Y = np.array([o.objectives for o in obs])

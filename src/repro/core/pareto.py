@@ -16,6 +16,7 @@ __all__ = [
     "pareto_front",
     "hypervolume_2d",
     "hvi_ratio",
+    "knee_index",
     "normalize_objectives",
 ]
 
@@ -71,6 +72,36 @@ def hypervolume_2d(front: np.ndarray, ref: tuple[float, float] = (1.0, 1.0)) -> 
         hv += (rx - x) * (prev_y - y)
         prev_y = y
     return hv
+
+
+def knee_index(front: np.ndarray) -> int:
+    """Index of the knee of a 2-objective minimization front.
+
+    The knee is the point with the largest perpendicular distance below
+    the chord between the front's extremes, after min-max normalization
+    (so the pick is scale-invariant). It is the classic
+    diminishing-returns operating point: past it, improving one
+    objective costs disproportionately in the other — which makes it the
+    default point `serve.deploy` pushes into a live runtime. Degenerate
+    fronts (fewer than 3 points, or a zero-length chord) fall back to
+    the middle point.
+    """
+    F = np.asarray(front, dtype=np.float64)
+    if F.ndim != 2 or F.shape[1] != 2 or len(F) == 0:
+        raise ValueError(f"front must be (k, 2), got {F.shape}")
+    if len(F) < 3:
+        return len(F) // 2
+    Fn, _, _ = normalize_objectives(F)
+    order = np.argsort(Fn[:, 0], kind="stable")
+    Fs = Fn[order]
+    a, b = Fs[0], Fs[-1]
+    chord = b - a
+    norm = float(np.hypot(*chord))
+    if norm <= 0.0:
+        return int(order[len(order) // 2])
+    # signed cross product: positive = below the chord (toward the ideal)
+    d = (chord[0] * (a[1] - Fs[:, 1]) - chord[1] * (a[0] - Fs[:, 0])) / norm
+    return int(order[int(np.argmax(d))])
 
 
 def normalize_objectives(

@@ -48,6 +48,20 @@ class RFSurrogate:
             self._forests.append(f)
         return self
 
+    @staticmethod
+    def with_fidelity(X: np.ndarray, levels: np.ndarray) -> np.ndarray:
+        """Append a fidelity-level input column (0.0 = cheapest backend,
+        1.0 = measured) so one forest pools observations across
+        fidelities: low-fidelity points inform the posterior wherever the
+        objectives agree, and the level input lets trees split the
+        fidelities apart wherever they systematically disagree — cheap
+        points inform but never *pollute* measured predictions.
+        Candidates are scored with the column pinned to the target
+        fidelity (see `CatoOptimizer._propose_batch`)."""
+        X = np.asarray(X, dtype=np.float32)
+        lv = np.asarray(levels, dtype=np.float32).reshape(len(X), 1)
+        return np.concatenate([X, lv], axis=1)
+
     def posterior_samples(self, X: np.ndarray) -> np.ndarray:
         """(n_trees, n, m) joint posterior draws at X."""
         per_obj = [forest_predict_per_tree(f, X) for f in self._forests]  # m x (T, n)

@@ -12,7 +12,10 @@ Two serving stacks live here:
   jit-specialized CATO pipelines, fused single-launch by default
   (DESIGN.md §6, §7), horizontally sharded behind RSS-style steering
   (§8) with an adaptive control plane (`control/`, §9): dynamic RETA
-  rebalancing, zero-downtime pipeline hot-swap, elastic worker sizing.
+  rebalancing, zero-downtime pipeline hot-swap, elastic worker sizing —
+  plus the compile-to-deploy layer (`deploy.py`, §10.4) that turns an
+  optimized Pareto front into warmed pipelines, a serializable
+  `ParetoBundle`, and a live hot-swap into the fleet.
 
 The runtime/control re-exports resolve lazily (PEP 562): `from repro.serve
 import make_serve_step` must not drag in the traffic/extraction stack, and
@@ -46,8 +49,18 @@ _CONTROL_EXPORTS = (
     "controlled_replay",
 )
 
+# compile-to-deploy layer (DESIGN.md §10.4): CatoResult front ->
+# warmed pipelines -> serializable ParetoBundle -> live hot-swap
+_DEPLOY_EXPORTS = (
+    "BundlePoint",
+    "ParetoBundle",
+    "compile_front",
+    "deploy",
+    "make_swap",
+)
+
 __all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS,
-           *_CONTROL_EXPORTS]
+           *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS]
 
 
 def __getattr__(name):
@@ -59,4 +72,8 @@ def __getattr__(name):
         from . import control
 
         return getattr(control, name)
+    if name in _DEPLOY_EXPORTS:
+        from . import deploy
+
+        return getattr(deploy, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -81,20 +81,11 @@ class PipelineSwap:
         dispatcher's actual bucket geometry — a hard-coded default
         would leave a non-default `max_batch`/`min_bucket` fleet paying
         a compile on the serving path at swap time."""
+        from repro.serve.deploy import warm_buckets_for
         from repro.traffic.pipeline import build_pipeline
 
         if warm_buckets is None:
-            disp = None
-            if runtime is not None:
-                worker = getattr(runtime, "shards", [runtime])[0]
-                disp = worker.dispatcher
-            lo = disp.min_bucket if disp is not None else 8
-            hi = disp.max_batch if disp is not None else 256
-            warm_buckets = []
-            b = lo
-            while b <= hi:
-                warm_buckets.append(b)
-                b *= 2
+            warm_buckets = warm_buckets_for(runtime)
         pipeline = build_pipeline(rep, forest, max_pkts=rep.depth,
                                   fused=fused, use_kernel=use_kernel)
         pipeline.warm(list(warm_buckets))
@@ -162,6 +153,11 @@ class ControlPlane:
         self.flows_migrated = 0
         self.buckets_skipped = 0
         self.n_swaps = 0
+        # packets ingested fleet-wide when the scheduled swap actually
+        # fired (control steps run on block cadence, so this is >= the
+        # requested after_pkts): callers checking post-swap invariants
+        # need the real boundary, not the requested one
+        self.swap_at_pkts: Optional[int] = None
         self.workers_added = 0
         self.workers_retired = 0
         self.log: list[dict] = []
@@ -206,6 +202,7 @@ class ControlPlane:
             self._swapped = True
             report.swapped = True
             self.n_swaps += 1
+            self.swap_at_pkts = int(self.telemetry.total_pkts)
 
         # 2. elastic fleet sizing
         if cfg.headroom is not None and self._pps_ewma > 0:
@@ -302,6 +299,7 @@ class ControlPlane:
             "buckets_skipped": self.buckets_skipped,
             "flows_migrated": self.flows_migrated,
             "swaps": self.n_swaps,
+            "swap_at_pkts": self.swap_at_pkts,
             "workers_added": self.workers_added,
             "workers_retired": self.workers_retired,
             "active_workers": sum(self.rt.active),

@@ -1,0 +1,321 @@
+"""Compile-to-deploy: turn an optimized Pareto front into running pipelines.
+
+The paper's pitch is that CATO "compiles end-to-end optimized serving
+pipelines that can be deployed in real networks" — discovery is only
+half the loop. This module is the other half (DESIGN.md §10.4):
+
+1. `compile_front` takes a `CatoResult` (its measured-fidelity Pareto
+   set) and the profiler that measured it, rebuilds each front point's
+   trained model from the profiler's cache (the *same* seeded forest the
+   measurement used), compiles the serving pipeline, and pre-warms every
+   dispatch bucket geometry of the target runtime so deployment never
+   pays an XLA compile on the serving path (`ServingPipeline.warm`; the
+   jit cache is keyed on static config, so coexisting pipelines never
+   alias).
+2. `ParetoBundle` is the serializable artifact: configs, measured
+   objectives, compile metadata, and the full dense-forest payload per
+   point — `save`/`load` round-trips through JSON, so a bundle built on
+   the optimization host can be deployed elsewhere without retraining.
+3. `make_swap` / `deploy` push a chosen point (`knee()` by default —
+   the diminishing-returns operating point) into a *live* runtime:
+   `make_swap` schedules a zero-downtime `PipelineSwap` through the
+   control plane, `deploy` hot-swaps immediately via the §9.3
+   drain-and-swap quiescence protocol (zero drops, exactly-once
+   predictions — the same argument, reused).
+
+`examples/tune_serving.py` drives the full measure → optimize →
+compile → deploy loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.forest import DenseForest
+from repro.core.optimizer import CatoResult, Observation
+from repro.core.pareto import knee_index
+from repro.core.search_space import FeatureRep
+
+__all__ = ["BundlePoint", "ParetoBundle", "compile_front", "deploy",
+           "make_swap", "warm_buckets_for"]
+
+
+def warm_buckets_for(runtime=None, lo: int = 8, hi: int = 256) -> list[int]:
+    """Power-of-two dispatch buckets a runtime's dispatcher can submit.
+
+    Warming must cover the target fleet's *actual* batch geometry
+    (`min_bucket..max_batch`); the defaults only apply when no runtime
+    is given (matching `StreamingRuntime`'s own defaults)."""
+    if runtime is not None:
+        worker = getattr(runtime, "shards", [runtime])[0]
+        lo, hi = worker.dispatcher.min_bucket, worker.dispatcher.max_batch
+    buckets, b = [], lo
+    while b <= hi:
+        buckets.append(b)
+        b *= 2
+    return buckets
+
+
+def _forest_to_doc(f: DenseForest) -> dict:
+    return {
+        "feature": f.feature.tolist(),
+        "threshold": f.threshold.tolist(),
+        "leaf": f.leaf.tolist(),
+        "depth": int(f.depth),
+        "n_features": int(f.n_features),
+        "classes": None if f.classes is None else f.classes.tolist(),
+    }
+
+
+def _forest_from_doc(d: dict) -> DenseForest:
+    return DenseForest(
+        feature=np.asarray(d["feature"], dtype=np.int32),
+        threshold=np.asarray(d["threshold"], dtype=np.float32),
+        leaf=np.asarray(d["leaf"], dtype=np.float32),
+        depth=int(d["depth"]),
+        n_features=int(d["n_features"]),
+        classes=(None if d["classes"] is None
+                 else np.asarray(d["classes"])),
+    )
+
+
+@dataclasses.dataclass
+class BundlePoint:
+    """One compiled Pareto point: config + measured objectives + model."""
+
+    rep: FeatureRep
+    cost: float
+    perf: float
+    fidelity: str
+    aux: dict
+    compile_meta: dict        # buckets warmed, compile wall, fusion mode
+    forest_doc: dict          # serialized DenseForest (deploy payload)
+    # live warm handle — process-local, never serialized
+    pipeline: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
+
+    def forest(self) -> DenseForest:
+        return _forest_from_doc(self.forest_doc)
+
+    def build(self, *, runtime=None, warm: bool = True):
+        """(Re)compile this point's serving pipeline; warm it for the
+        target runtime's bucket geometry unless told not to."""
+        from repro.traffic.pipeline import build_pipeline
+
+        pipe = build_pipeline(
+            self.rep, self.forest(), max_pkts=self.rep.depth,
+            fused=bool(self.compile_meta.get("fused", True)),
+            use_kernel=bool(self.compile_meta.get("use_kernel", False)),
+        )
+        if warm:
+            pipe.warm(warm_buckets_for(runtime))
+        self.pipeline = pipe
+        return pipe
+
+    def to_doc(self) -> dict:
+        return {
+            "features": list(self.rep.features),
+            "depth": int(self.rep.depth),
+            "cost": float(self.cost),
+            "perf": float(self.perf),
+            "fidelity": self.fidelity,
+            "aux": self.aux,
+            "compile_meta": self.compile_meta,
+            "forest": self.forest_doc,
+        }
+
+    @classmethod
+    def from_doc(cls, d: dict) -> "BundlePoint":
+        return cls(
+            rep=FeatureRep(tuple(d["features"]), int(d["depth"])),
+            cost=float(d["cost"]),
+            perf=float(d["perf"]),
+            fidelity=d["fidelity"],
+            aux=dict(d["aux"]),
+            compile_meta=dict(d["compile_meta"]),
+            forest_doc=d["forest"],
+        )
+
+
+@dataclasses.dataclass
+class ParetoBundle:
+    """The deployable artifact: a measured Pareto front, compiled.
+
+    `points` are sorted by cost ascending. `meta` records where the
+    front came from (fidelity, scenario, shard count, measurement
+    budget, surrogate fallbacks) so an operator can audit what a bundle
+    claims before pushing it at traffic."""
+
+    points: list[BundlePoint]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # -- selection -----------------------------------------------------------
+    def knee(self) -> BundlePoint:
+        """The diminishing-returns point of the (cost, -perf) front."""
+        Y = np.array([(p.cost, -p.perf) for p in self.points])
+        return self.points[knee_index(Y)]
+
+    def best_by_perf(self) -> BundlePoint:
+        return max(self.points, key=lambda p: p.perf)
+
+    def best_by_cost(self) -> BundlePoint:
+        return min(self.points, key=lambda p: p.cost)
+
+    # -- serialization -------------------------------------------------------
+    def to_doc(self) -> dict:
+        return {
+            "kind": "cato_pareto_bundle",
+            "version": 1,
+            "meta": self.meta,
+            "points": [p.to_doc() for p in self.points],
+        }
+
+    @classmethod
+    def from_doc(cls, d: dict) -> "ParetoBundle":
+        if d.get("kind") != "cato_pareto_bundle":
+            raise ValueError(f"not a ParetoBundle document: {d.get('kind')!r}")
+        return cls(
+            points=[BundlePoint.from_doc(p) for p in d["points"]],
+            meta=dict(d["meta"]),
+        )
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_doc()) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "ParetoBundle":
+        return cls.from_doc(json.loads(pathlib.Path(path).read_text()))
+
+
+def compile_front(
+    result: CatoResult,
+    profiler,
+    *,
+    runtime=None,
+    fused: bool = True,
+    use_kernel: bool = False,
+    warm: bool = True,
+    max_points: Optional[int] = None,
+    meta: Optional[dict] = None,
+) -> ParetoBundle:
+    """Compile the measured-fidelity Pareto set of `result` into a bundle.
+
+    `profiler` must be the `TrafficProfiler` the optimization evaluated
+    through: its `perf_f1` cache returns the exact seeded forest each
+    front point was measured with, so the deployed model *is* the
+    measured model. `runtime` (optional) fixes the warm-bucket geometry
+    to the deployment fleet's dispatcher; `warm=False` skips bucket
+    pre-compilation (the pipeline still compiles lazily on first use).
+    `max_points` keeps only the front's best-spread subset — both
+    extremes and the knee always survive, so the result has
+    max(max_points, 3) points — when compiling every point would be
+    wasteful.
+    """
+    front: list[Observation] = result.pareto_observations()
+    if not front:
+        raise ValueError("result has no measured observations to compile")
+    if max_points is not None and len(front) > max_points:
+        # both extremes and the knee are always kept (so the bundle is
+        # never smaller than 3 points, even for max_points < 3); the
+        # remaining quota fills with an even spread over the front
+        keep = {0, len(front) - 1,
+                knee_index(np.array([o.objectives for o in front]))}
+        for i in np.linspace(0, len(front) - 1, max_points).round():
+            if len(keep) >= max_points:
+                break
+            keep.add(int(i))
+        front = [front[i] for i in sorted(keep)]
+    buckets = warm_buckets_for(runtime)
+    points = []
+    for o in front:
+        f1, forest = profiler.perf_f1(o.x)  # cache hit: the measured model
+        from repro.traffic.pipeline import build_pipeline
+
+        t0 = time.perf_counter()
+        pipe = build_pipeline(o.x, forest, max_pkts=o.x.depth, fused=fused,
+                              use_kernel=use_kernel)
+        if warm:
+            pipe.warm(buckets)
+        compile_s = time.perf_counter() - t0
+        points.append(BundlePoint(
+            rep=o.x,
+            cost=o.cost,
+            perf=o.perf,
+            fidelity=o.fidelity,
+            aux=dict(o.aux),
+            compile_meta={
+                "buckets": list(buckets) if warm else [],
+                "compile_s": round(compile_s, 4),
+                "fused": fused,
+                "use_kernel": use_kernel,
+                "n_trees": forest.n_trees,
+                "forest_depth": forest.depth,
+            },
+            forest_doc=_forest_to_doc(forest),
+            pipeline=pipe,
+        ))
+    points.sort(key=lambda p: p.cost)
+    bundle_meta = {
+        "measured_fidelity": result.measured_fidelity,
+        "fidelity_counts": result.fidelity_counts,
+        "surrogate_fallbacks": len(result.surrogate_fallbacks),
+        "budget": result.budget,
+        "scenario": getattr(profiler, "scenario", None),
+        "n_shards": getattr(profiler, "n_shards", None),
+        "cost_mode": getattr(profiler, "cost_mode", None),
+    }
+    if meta:
+        bundle_meta.update(meta)
+    return ParetoBundle(points=points, meta=bundle_meta)
+
+
+def make_swap(
+    point: BundlePoint,
+    *,
+    after_pkts: int = 0,
+    runtime=None,
+    service=None,
+):
+    """Schedule `point` as a zero-downtime `PipelineSwap` (DESIGN.md §9.3).
+
+    Reuses the bundle's compiled pipeline handle when present
+    (compile-once), but always (re-)warms it for the *target* runtime's
+    bucket geometry: a handle warmed elsewhere for a smaller `max_batch`
+    would pay a first-use XLA compile on the serving path mid-swap —
+    exactly the stall the warm protocol exists to prevent. Re-warming an
+    already-compiled bucket only replays a zero batch through the jit
+    cache, so the ensure is cheap. `service` defaults to the modeled
+    clock constants for the point's (F, n) — pass measured constants
+    for calibrated replay."""
+    from repro.serve.control.plane import PipelineSwap
+    from repro.serve.runtime.replay import ServiceModel
+
+    pipe = point.pipeline or point.build(runtime=runtime, warm=False)
+    pipe.warm(warm_buckets_for(runtime))
+    if service is None:
+        service = ServiceModel.modeled(point.rep, point.forest())
+    return PipelineSwap(pipeline=pipe, service=service, after_pkts=after_pkts)
+
+
+def deploy(point: BundlePoint, runtime, now: float):
+    """Hot-swap `point` into a live runtime immediately.
+
+    `runtime` is a `StreamingRuntime` or `ShardedRuntime`; the swap goes
+    through the §9.3 drain-and-swap quiescence protocol, so in-flight
+    flows resolve under the old pipeline and no flow is dropped or
+    predicted twice. Warm coverage for `runtime`'s bucket geometry is
+    ensured first (see `make_swap`), so the swap pays no compile on the
+    serving path. Returns the quiesce flush records (list for a single
+    worker, {shard: records} for a fleet) so a replay clock can charge
+    them to the right lanes."""
+    pipe = point.pipeline or point.build(runtime=runtime, warm=False)
+    pipe.warm(warm_buckets_for(runtime))
+    return runtime.hot_swap(pipe, now)

@@ -11,6 +11,7 @@ from .synth import TrafficDataset, make_dataset
 from .features import FEATURES, FEATURE_NAMES, MINI_FEATURE_NAMES, OPS
 from .extraction import extract_features
 from .profiler import TrafficProfiler, ProfileResult
+from .backends import ProfilerBackend, backend_suite
 from .models import train_traffic_model, macro_f1
 
 __all__ = [
@@ -23,6 +24,8 @@ __all__ = [
     "extract_features",
     "TrafficProfiler",
     "ProfileResult",
+    "ProfilerBackend",
+    "backend_suite",
     "train_traffic_model",
     "macro_f1",
 ]

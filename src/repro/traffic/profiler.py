@@ -36,6 +36,14 @@ Cost modes:
 Fig.-8 ablation variants are exposed as alternative metrics: `naive_cost`
 (per-feature costs summed without shared-op dedup), `model_inf_cost`,
 `pkt_depth_cost`, `naive_perf` (sum of per-feature MI).
+
+The cheap-modeled vs. expensive-replayed spectrum above is packaged as
+pluggable measurement *backends* in `repro.traffic.backends`
+(`modeled` / `replayed` / `replayed_sharded`), all views over one
+profiler instance: they share its matrix, trained-model, service-model
+calibration, and result caches, so the multi-fidelity optimizer and
+every baseline pay for each distinct config at most once per fidelity
+(DESIGN.md §10.1).
 """
 from __future__ import annotations
 
@@ -87,6 +95,7 @@ class TrafficProfiler:
         cost_mode: str = "modeled",       # modeled | measured
         n_shards: int = 2,                # worker count for the sharded metric
         scenario: str = "uniform",        # arrival process for replayed metrics
+        bisect_iters: int = 10,           # zero-loss bisection depth
         test_frac: float = 0.2,
         seed: int = 0,
         cache: bool = True,
@@ -98,12 +107,18 @@ class TrafficProfiler:
         self.cost_mode = cost_mode
         self.n_shards = n_shards
         self.scenario = scenario
+        self.bisect_iters = bisect_iters
         self.seed = seed
         self.train_ds, self.test_ds = dataset.split(test_frac, seed)
         self._stream_cache = None
         self._service_cache: dict = {}
         self._matrix_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._result_cache: dict = {}
+        # trained model + hold-out F1 per canonical config key: every
+        # fidelity of the same x shares one trained model (training is
+        # seeded-deterministic, so caching is semantics-free), and
+        # `serve.deploy` reuses the exact forest the measurement used
+        self._perf_cache: dict = {}
         self._cache_enabled = cache
         self._mi_full: Optional[np.ndarray] = None
         self.n_profile_calls = 0
@@ -124,6 +139,9 @@ class TrafficProfiler:
 
     # -- perf(x): train fresh model, hold-out macro F1 -----------------------
     def perf_f1(self, x: FeatureRep) -> tuple[float, DenseForest]:
+        pkey = (x.key(), self.model)
+        if self._cache_enabled and pkey in self._perf_cache:
+            return self._perf_cache[pkey]
         t0 = time.perf_counter()
         Xtr, Xte = self.columns(x)
         forest, _ = train_traffic_model(
@@ -132,6 +150,8 @@ class TrafficProfiler:
         pred = forest_predict_class(forest, Xte)
         f1 = macro_f1(self.test_ds.label, pred)
         self.wallclock["train_perf"] += time.perf_counter() - t0
+        if self._cache_enabled:
+            self._perf_cache[pkey] = (f1, forest)
         return f1, forest
 
     # -- cost components ------------------------------------------------------
@@ -202,7 +222,7 @@ class TrafficProfiler:
         capacity: int = 2048,
         max_batch: int = 128,
         ring_capacity: Optional[int] = None,
-        bisect_iters: int = 10,
+        bisect_iters: Optional[int] = None,
         verbose: bool = False,
         fused: bool = True,
         n_shards: int = 1,
@@ -299,7 +319,8 @@ class TrafficProfiler:
                 service = ServiceModel.modeled(x, forest)
             self._service_cache[skey] = service
         rate_pps, stats = find_zero_loss_rate(
-            stream, make_runtime, service, iters=bisect_iters,
+            stream, make_runtime, service,
+            iters=self.bisect_iters if bisect_iters is None else bisect_iters,
             ring_capacity=ring_capacity, verbose=verbose, control=control,
         )
         self.wallclock["measure_cost"] += time.perf_counter() - t0

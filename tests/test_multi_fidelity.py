@@ -1,0 +1,372 @@
+"""Batched multi-fidelity optimization + compile-to-deploy loop
+(DESIGN.md §10): sequential-equivalence pin, promotion policy, shared
+memoization, and the ParetoBundle artifact."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CatoOptimizer,
+    MemoizedEvaluator,
+    Observation,
+    SearchSpace,
+    build_priors,
+    knee_index,
+)
+from repro.core.acquisition import (
+    apply_pibo, ehvi, qehvi_greedy, scalarized_ei,
+)
+from repro.core.baselines import run_iterate_all
+from repro.core.pareto import normalize_objectives, pareto_mask
+from repro.core.surrogate import RFSurrogate
+
+NAMES = tuple(f"f{i}" for i in range(6))
+VALUE = np.array([0.6, 0.35, 0.15, 0.05, 0.0, 0.0])
+COST = np.array([1.0, 6.0, 0.3, 3.0, 10.0, 0.5])
+
+
+def expensive(x):
+    idx = [NAMES.index(f) for f in x.features]
+    perf = 1 - np.exp(-VALUE[idx].sum() * (1 + 0.5 * min(x.depth, 6) / 6))
+    cost = COST[idx].sum() * (1 + 0.08 * x.depth)
+    return cost, perf
+
+
+def cheap(x):
+    # biased-but-correlated proxy: what a cost model is to a measurement
+    c, p = expensive(x)
+    return 0.9 * c + 0.2, 0.95 * p
+
+
+@pytest.fixture(scope="module")
+def space():
+    return SearchSpace(NAMES, max_depth=20)
+
+
+@pytest.fixture(scope="module")
+def toy_priors(space):
+    rng = np.random.default_rng(42)
+    y = rng.integers(0, 2, 1500)
+    X = np.stack(
+        [y * VALUE[i] * 3 + rng.normal(0, 1, 1500) for i in range(6)], 1)
+    return build_priors(space, X, y)
+
+
+# ---------------------------------------------------------------------------
+# the batched loop at batch_size=1 IS the paper's sequential loop
+# ---------------------------------------------------------------------------
+
+def _reference_sequential(space, profiler, priors, n_iterations, seed,
+                          n_init=3, candidate_pool=512, pibo_beta=3.0):
+    """The pre-batching sequential loop, inlined verbatim: pins the
+    refactored optimizer's batch_size=1 path draw-for-draw (same rng
+    stream, same acquisition alternation, same argmax)."""
+    rng = np.random.default_rng(seed)
+    surrogate = RFSurrogate(seed=seed)
+    observations, seen = [], set()
+
+    def evaluate(x, it):
+        cost, perf = profiler(x)
+        o = Observation(x, float(cost), float(perf), iteration=it)
+        observations.append(o)
+        seen.add(x.key())
+        return o
+
+    def candidates(n):
+        cands = []
+        if priors is not None:
+            cands += space.sample_from_priors(
+                rng, int(n * 0.6), priors.feature_probs, priors.depth_pmf)
+        cands += space.sample_uniform(rng, n - len(cands))
+        if observations:
+            Y = np.array([o.objectives for o in observations])
+            inc = [o.x for o, m in zip(observations, pareto_mask(Y)) if m]
+            for x in inc:
+                for _ in range(4):
+                    cands.append(space.mutate(rng, x))
+        fresh, dup = [], set()
+        for c in cands:
+            k = c.key()
+            if k in seen or k in dup:
+                continue
+            dup.add(k)
+            fresh.append(c)
+        return fresh
+
+    def propose(iteration):
+        cands = candidates(candidate_pool)
+        if not cands:
+            return space.sample_uniform(rng, 1)[0]
+        Y = np.array([o.objectives for o in observations], dtype=np.float64)
+        Yn, _, _ = normalize_objectives(Y)
+        X_obs = np.stack([space.encode(o.x) for o in observations])
+        try:
+            surrogate.fit(X_obs, Yn)
+        except Exception:
+            return cands[int(rng.integers(len(cands)))]
+        X_cand = np.stack([space.encode(c) for c in cands])
+        post = surrogate.posterior_samples(X_cand)
+        front = Yn[pareto_mask(Yn)]
+        if iteration % 2 == 0:
+            acq = ehvi(post, front)
+        else:
+            lam = float(rng.beta(0.3, 0.3))
+            acq = scalarized_ei(post, Yn, lam)
+        if priors is not None:
+            pl = getattr(priors, "pi_log_clipped", priors.pi_log)
+            lp = np.array([pl(space, c) for c in cands])
+            acq = apply_pibo(acq, lp, iteration, pibo_beta)
+        return cands[int(np.argmax(acq))]
+
+    n0 = min(n_init, n_iterations)
+    init = (
+        space.sample_from_priors(
+            rng, n0, priors.feature_probs, priors.depth_pmf)
+        if priors is not None else space.sample_uniform(rng, n0)
+    )
+    for i, x in enumerate(init):
+        evaluate(x, i)
+    for it in range(len(observations), n_iterations):
+        evaluate(propose(it), it)
+    return observations
+
+
+@pytest.mark.parametrize("use_priors", [True, False])
+def test_batch_size_1_matches_sequential_loop(space, toy_priors, use_priors):
+    pri = toy_priors if use_priors else None
+    ref = _reference_sequential(space, expensive, pri, 18, seed=3)
+    res = CatoOptimizer(space, expensive, pri, seed=3, batch_size=1).run(18)
+    got = [(o.x.key(), o.cost, o.perf, o.iteration) for o in res.observations]
+    want = [(o.x.key(), o.cost, o.perf, o.iteration) for o in ref]
+    assert got == want, "batched loop at q=1 drifted from the sequential loop"
+
+
+def test_qehvi_greedy_first_pick_is_ehvi_argmax_and_batch_distinct():
+    rng = np.random.default_rng(7)
+    post = rng.random((16, 40, 2))
+    front = np.array([[0.2, 0.8], [0.5, 0.4], [0.9, 0.1]])
+    idx = qehvi_greedy(post, front, 5)
+    assert len(idx) == len(set(idx)) == 5
+    assert idx[0] == int(np.argmax(ehvi(post, front)))
+    # fantasizing the pick must not *raise* later scores: greedy HVI
+    # contributions are non-increasing along the batch
+    contribs = []
+    fronts = [front] * post.shape[0]
+    from repro.core.acquisition import hvi_contribution
+    for pick in idx:
+        acc = np.mean([hvi_contribution(f, p)[pick]
+                       for f, p in zip(fronts, post)])
+        contribs.append(acc)
+        fronts = [np.vstack([f, p[pick][None]])
+                  for f, p in zip(fronts, post)]
+    assert all(a >= b - 1e-12 for a, b in zip(contribs, contribs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# multi-fidelity loop invariants
+# ---------------------------------------------------------------------------
+
+def test_multi_fidelity_reports_measured_front_only(space, toy_priors):
+    ev = MemoizedEvaluator({"modeled": cheap, "measured": expensive})
+    opt = CatoOptimizer(space, ev, toy_priors, seed=0, batch_size=4)
+    res = opt.run_multi_fidelity(measure_budget=6)
+    assert res.measured_fidelity == "measured"
+    assert res.fidelity_counts["measured"] <= 6
+    assert res.fidelity_counts["modeled"] >= opt.n_init
+    front = res.pareto_observations()
+    assert front and all(o.fidelity == "measured" for o in front)
+    # the front really is non-dominated within the measured set
+    Ym = np.array([o.objectives for o in res.observations_at("measured")])
+    assert len(front) == int(pareto_mask(Ym).sum())
+
+
+def test_promotion_never_measures_a_dominated_candidate(space, toy_priors):
+    ev = MemoizedEvaluator({"modeled": cheap, "measured": expensive})
+    opt = CatoOptimizer(space, ev, toy_priors, seed=1, batch_size=4)
+    res = opt.run_multi_fidelity(measure_budget=8)
+    assert res.fidelity_counts.get("measured"), "nothing was ever promoted"
+    for i, o in enumerate(res.observations):
+        if o.fidelity != "measured":
+            continue
+        prior_cheap = [p for p in res.observations[:i]
+                       if p.fidelity == "modeled"]
+        mine = [p for p in prior_cheap if p.x.key() == o.x.key()]
+        assert mine, "promoted a config never evaluated at the cheap fidelity"
+        y = np.array(mine[0].objectives)
+        for p in prior_cheap:
+            yp = np.array(p.objectives)
+            assert not (np.all(yp <= y) and np.any(yp < y)), (
+                f"promoted {o.x} although {p.x} dominated it at the cheap "
+                "fidelity"
+            )
+
+
+def test_measured_budget_is_never_spent_on_memo_hits():
+    # a 2-feature space is tiny enough that prior/uniform sampling keeps
+    # re-proposing the same configs: every measured observation must
+    # still be a distinct config backed by a real backend call
+    tiny = SearchSpace(("a", "b"), max_depth=2)
+
+    def t_exp(x):
+        return len(x.features) + 0.1 * x.depth, float(len(x.features))
+
+    def t_cheap(x):
+        c, p = t_exp(x)
+        return 0.9 * c, 0.9 * p
+
+    ev = MemoizedEvaluator({"modeled": t_cheap, "measured": t_exp})
+    opt = CatoOptimizer(tiny, ev, seed=0, n_init=6, batch_size=3)
+    res = opt.run_multi_fidelity(measure_budget=4, max_rounds=30)
+    measured = res.observations_at("measured")
+    keys = [o.x.key() for o in measured]
+    assert len(keys) == len(set(keys)), "a config was measured twice"
+    assert ev.n_calls["measured"] == len(measured), (
+        "budget slots were burned on memoized repeats")
+    # cheap init was deduped too
+    cheap_keys = [o.x.key() for o in res.observations_at("modeled")]
+    assert len(cheap_keys) == len(set(cheap_keys))
+
+
+def test_multi_fidelity_requires_a_fidelity_spectrum(space):
+    opt = CatoOptimizer(space, expensive, seed=0)
+    with pytest.raises(ValueError, match="multi-fidelity"):
+        opt.run_multi_fidelity(measure_budget=2)
+
+
+def test_surrogate_fallbacks_are_counted(space):
+    class Brittle(RFSurrogate):
+        def fit(self, X, Y):
+            raise RuntimeError("boom")
+
+    opt = CatoOptimizer(space, expensive, seed=0, surrogate=Brittle())
+    with pytest.warns(RuntimeWarning, match="surrogate fit failed"):
+        res = opt.run(8)
+    # every post-init iteration degraded to random, and the result says so
+    assert res.surrogate_fallbacks == list(range(3, 8))
+    assert len(res.observations) == 8
+
+
+# ---------------------------------------------------------------------------
+# shared memoization across algorithms (real profiler, bit-identical)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mini_profiler():
+    from repro.traffic import MINI_FEATURE_NAMES, TrafficProfiler, make_dataset
+
+    ds = make_dataset("iot-class", n_flows=300, max_pkts=12, seed=0)
+    return TrafficProfiler(ds, MINI_FEATURE_NAMES, model="tree-fast",
+                           cost_metric="exec_time", cost_mode="modeled",
+                           seed=0)
+
+
+def test_memoization_is_bit_identical_across_algorithms(mini_profiler):
+    from repro.traffic import MINI_FEATURE_NAMES
+
+    space = SearchSpace(MINI_FEATURE_NAMES, max_depth=12)
+    ev = MemoizedEvaluator(mini_profiler)
+    # two "algorithms" requesting the same configs: ITERATEALL twice
+    res_a = run_iterate_all(space, ev, 6)
+    res_b = run_iterate_all(space, ev, 6)
+    for oa, ob in zip(res_a.observations, res_b.observations):
+        assert oa.x.key() == ob.x.key()
+        assert oa.cost == ob.cost and oa.perf == ob.perf
+    # the cached ProfileResult object itself is returned, not a re-run
+    x = res_a.observations[0].x
+    r1, _ = ev.profile(x)
+    r2, _ = ev.profile(x)
+    assert r1 is r2
+    fid = ev.measured
+    assert ev.n_calls[fid] == 6
+    assert ev.n_hits[fid] >= 7  # 6 from the repeat run + 2 probes - 1
+
+
+def test_backend_suite_ordering_and_metrics(mini_profiler):
+    from repro.traffic import backend_suite
+
+    suite = backend_suite(mini_profiler, ("modeled", "replayed"))
+    assert list(suite) == ["modeled", "replayed"]
+    assert suite["modeled"].metric == "throughput"
+    assert suite["replayed"].metric == "throughput_replayed"
+    with pytest.raises(ValueError, match="cheap -> expensive"):
+        backend_suite(mini_profiler, ("replayed", "modeled"))
+    with pytest.raises(ValueError, match="unknown fidelities"):
+        backend_suite(mini_profiler, ("modeled", "live_nic"))
+
+
+def test_perf_cache_returns_the_same_forest(mini_profiler):
+    from repro.core import FeatureRep
+
+    x = FeatureRep(mini_profiler.feature_names[:3], 6)
+    f1_a, forest_a = mini_profiler.perf_f1(x)
+    f1_b, forest_b = mini_profiler.perf_f1(x)
+    assert f1_a == f1_b
+    assert forest_a is forest_b  # deploy gets the measured model, bit-exact
+
+
+# ---------------------------------------------------------------------------
+# ParetoBundle: serialize -> load -> deploy
+# ---------------------------------------------------------------------------
+
+def test_pareto_bundle_roundtrip(tmp_path, mini_profiler):
+    from repro.serve.deploy import ParetoBundle, compile_front
+    from repro.traffic import MINI_FEATURE_NAMES
+
+    space = SearchSpace(MINI_FEATURE_NAMES, max_depth=12)
+    res = CatoOptimizer(space, MemoizedEvaluator(mini_profiler), seed=0).run(8)
+    bundle = compile_front(res, mini_profiler, fused=False, warm=False)
+    assert bundle.points == sorted(bundle.points, key=lambda p: p.cost)
+    assert bundle.meta["measured_fidelity"] is None  # single-fidelity run
+
+    path = bundle.save(tmp_path / "bundle.json")
+    again = ParetoBundle.load(path)
+    assert again.to_doc() == bundle.to_doc()
+    # the model payload reconstructs bit-exactly
+    for p0, p1 in zip(bundle.points, again.points):
+        f0, f1 = p0.forest(), p1.forest()
+        assert np.array_equal(f0.feature, f1.feature)
+        assert np.array_equal(f0.threshold, f1.threshold)
+        assert np.array_equal(f0.leaf, f1.leaf)
+        assert f0.depth == f1.depth and f0.n_features == f1.n_features
+    # selection is stable across the round-trip
+    assert again.knee().rep == bundle.knee().rep
+    assert again.best_by_perf().rep == bundle.best_by_perf().rep
+    # a deserialized point compiles into a servable pipeline
+    pipe = again.knee().build(warm=False)
+    pipe.warm([8])  # one tiny bucket: exercises the real jit entry
+
+
+def test_compile_front_max_points_keeps_extremes_and_knee(mini_profiler):
+    from repro.core import CatoResult, FeatureRep
+    from repro.serve.deploy import compile_front
+    from repro.traffic import MINI_FEATURE_NAMES
+
+    space = SearchSpace(MINI_FEATURE_NAMES, max_depth=12)
+    # a 10-point mutually non-dominated front (cost and perf both rise)
+    obs = [
+        Observation(FeatureRep(MINI_FEATURE_NAMES[:2], d), float(d),
+                    0.1 * d, iteration=d)
+        for d in range(1, 11)
+    ]
+    res = CatoResult(obs, space)
+    bundle = compile_front(res, mini_profiler, fused=False, warm=False,
+                           max_points=3)
+    kept = {p.rep for p in bundle.points}
+    front = res.pareto_observations()
+    assert len(bundle.points) == 3
+    assert front[0].x in kept, "low-cost extreme dropped"
+    assert front[-1].x in kept, "high-cost extreme dropped"
+    assert bundle.best_by_perf().rep == front[-1].x
+    assert bundle.best_by_cost().rep == front[0].x
+
+
+def test_knee_index_picks_the_elbow():
+    front = np.array([
+        [0.0, 1.00],
+        [0.1, 0.30],   # the elbow: big perf gain, small cost
+        [0.5, 0.25],
+        [1.0, 0.20],
+    ])
+    assert knee_index(front) == 1
+    assert knee_index(front[:1]) == 0
+    with pytest.raises(ValueError):
+        knee_index(np.zeros((0, 2)))
