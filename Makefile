@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-runtime bench-compare tune-smoke example-stream example-control \
-	example-tune
+	bench-runtime bench-compare tune-smoke trace-smoke example-stream \
+	example-control example-tune
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -37,6 +37,15 @@ bench-smoke-zipf:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke --shards 4 \
 		--scenario zipf --skew-gate \
 		--out results/BENCH_runtime_zipf.json
+
+# observability smoke (DESIGN.md §11): one instrumented 4-shard zipf
+# replay under the control plane — Chrome trace + stage breakdown +
+# bit-matched metrics snapshot + audit log from a single run — then the
+# overhead gate: tracing-disabled replay must stay within 5% of the
+# untraced baseline on this machine
+trace-smoke:
+	$(PYTHON) -m benchmarks.bench_runtime --trace results/trace_serving.json
+	$(PYTHON) -m benchmarks.trace_smoke --gate 5
 
 # multi-fidelity tuner gate: batched cheap->measured optimization vs the
 # sequential loop and every baseline, all through one shared memoized

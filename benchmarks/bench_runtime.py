@@ -22,10 +22,20 @@ static RETA vs the adaptive control plane — and `--skew-gate` asserts
 the control plane earns its keep: strictly lower `load_imbalance` than
 the static fleet and no lower median zero-loss pps (DESIGN.md §9).
 
+With `--trace PATH` the benchmark instead runs ONE fully instrumented
+replay (4-shard zipf under the control plane by default) and writes the
+unified observability artifacts from that single run (DESIGN.md §11):
+a Chrome-loadable trace at PATH (chrome://tracing / Perfetto), a
+per-stage latency-breakdown table and merged fleet metrics snapshot
+under `results/`, and the control plane's decision audit log as JSONL.
+The snapshot's counter totals are asserted bit-identical to the
+runtime's own `RuntimeMetrics` accounting before anything is written.
+
     python -m benchmarks.bench_runtime --smoke              # CI-sized
     python -m benchmarks.bench_runtime --smoke --shards 4   # sharded
     python -m benchmarks.bench_runtime --smoke --shards 4 \
         --scenario zipf --skew-gate                         # control plane
+    python -m benchmarks.bench_runtime --trace results/trace_serving.json
     python -m benchmarks.bench_runtime                      # full figure
 """
 from __future__ import annotations
@@ -116,6 +126,145 @@ def run(smoke: bool = False, use_case: str = "app", verbose: bool = True,
     return out
 
 
+def run_traced(trace_path, shards: int = 4, scenario: str = "zipf",
+               sample: float = 1.0, n_flows: int = 120, max_pkts: int = 256,
+               offered_pps: float = 2e5, verbose: bool = True) -> dict:
+    """One instrumented replay; every §11 artifact from a single run.
+
+    Replays a skewed scenario through a control-plane-managed fleet with
+    the full `Observability` bundle attached — flow-lifecycle and stage
+    span tracing (at `sample` flow rate), drift sketches, fleet metrics
+    registry, and the decision audit log — then writes:
+
+    - the Chrome trace-event file at `trace_path`;
+    - `results/trace_stage_breakdown.csv`: per-shard and fleet-level
+      ingest / infer / flush service-time shares;
+    - `results/obs_snapshot.json`: the merged fleet registry snapshot
+      plus control, drift, audit, and trace summaries;
+    - `results/audit_log.jsonl`: every rebalance / swap / scale decision
+      with before/after load snapshots and rationale.
+
+    Before writing, asserts the registry's counter totals bit-match the
+    runtime's own merged `RuntimeMetrics` (the §11.1 exactness claim)
+    and that the audit log saw every rebalance the plane counted.
+    """
+    import numpy as np
+
+    from repro.core.search_space import FeatureRep
+    from repro.serve.control import ControlConfig
+    from repro.serve.obs import DriftMonitor, Observability, Tracer
+    from repro.serve.runtime import (
+        PacketStream, ServiceModel, ShardedRuntime, replay,
+    )
+    from repro.serve.runtime.metrics import RuntimeMetrics
+    from repro.serve.obs import fleet_registry
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    from .common import RESULTS, emit
+
+    t0 = time.perf_counter()
+    ds = make_scenario_dataset("app-class", scenario, n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=8)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    pipe = build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    # deterministic constants at realistic magnitudes (same rationale as
+    # the control-plane tests): the trace should show plausible span
+    # durations, not calibration jitter
+    service = ServiceModel(
+        pkt_accum_ns=800.0, pkt_track_ns=200.0,
+        bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+        gather_ns_per_flow=200.0, source="synthetic",
+    )
+    obs = Observability(
+        tracer=Tracer(capacity=1 << 16, sample=sample),
+        drift=DriftMonitor(),
+    )
+    created = []
+
+    def make_runtime():
+        rt = ShardedRuntime(pipe, n_shards=shards, capacity=2048,
+                            max_batch=64, execute=True)
+        created.append(rt)
+        return rt
+
+    stats = replay(
+        stream, make_runtime, offered_pps, service,
+        control=ControlConfig(interval_pkts=512, imbalance_trigger=1.04),
+        obs=obs,
+    )
+    rt = created[-1]
+
+    # §11.1 exactness: the registry path must reproduce the runtime's own
+    # accounting bit-for-bit before any artifact is trusted
+    rebuilt = RuntimeMetrics.from_registry(fleet_registry(rt, per_shard=False))
+    mismatch = [
+        f for f in RuntimeMetrics.counter_fields()
+        if getattr(rebuilt, f) != getattr(stats.metrics, f)
+    ]
+    if mismatch:
+        raise SystemExit(
+            f"registry snapshot does not bit-match RuntimeMetrics: {mismatch}")
+    plane_summary = stats.control or {}
+    audited = obs.audit.summary()
+    if audited.get("rebalance", 0) != plane_summary.get("rebalances", 0):
+        raise SystemExit(
+            "audit log missed rebalances: "
+            f"{audited.get('rebalance', 0)} audited vs "
+            f"{plane_summary.get('rebalances', 0)} counted")
+
+    trace_path = pathlib.Path(trace_path)
+    obs.tracer.save(trace_path)
+    obs.audit.save(RESULTS / "audit_log.jsonl")
+
+    rows = [("agg", *(round(s, 4) for s in _shares(stats.stage_seconds)),
+             round(sum(stats.stage_seconds.values()), 6))]
+    for p in stats.per_shard:
+        ss = p.get("stage_seconds", {})
+        rows.append((p["shard"], *(round(s, 4) for s in _shares(ss)),
+                     round(sum(ss.values()), 6)))
+    emit(rows, ("shard", "share_ingest", "share_infer", "share_flush",
+                "busy_s"), "trace_stage_breakdown")
+
+    snapshot = obs.snapshot(rt)
+    snapshot["control"] = plane_summary
+    doc = {
+        "bench": "traced_replay",
+        "config": {"shards": shards, "scenario": scenario, "sample": sample,
+                   "n_flows": n_flows, "max_pkts": max_pkts,
+                   "offered_pps": offered_pps},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "drops": stats.drops,
+        "stage_shares": stats.stage_shares(),
+        "trace_file": str(trace_path),
+        "snapshot": snapshot,
+    }
+    out = pathlib.Path(RESULTS) / "obs_snapshot.json"
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    if verbose:
+        tr = obs.tracer.summary()
+        print(f"# wrote {trace_path} ({tr['retained']} events, "
+              f"{tr['dropped']} dropped), {out}, "
+              f"results/audit_log.jsonl ({len(obs.audit)} decisions)")
+        print(f"# registry bit-match OK; drops={stats.drops}; "
+              f"stage shares {stats.stage_shares()}")
+    return doc
+
+
+def _shares(stage_seconds: dict) -> tuple:
+    total = sum(stage_seconds.values()) if stage_seconds else 0.0
+    if total <= 0:
+        return (0.0, 0.0, 0.0)
+    return tuple(stage_seconds.get(k, 0.0) / total
+                 for k in ("ingest", "infer", "flush"))
+
+
 def check_speedup(sharded: dict, single_path: pathlib.Path,
                   min_speedup: float) -> int:
     """Gate: sharded aggregate median vs a same-config 1-shard datapoint."""
@@ -195,7 +344,20 @@ if __name__ == "__main__":
     p.add_argument("--min-speedup", type=float, default=0.0,
                    help="fail if sharded median speedup vs --single is below "
                    "this (0 disables)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="run one instrumented replay instead of the figure: "
+                   "write a Chrome trace to PATH plus stage-breakdown, "
+                   "metrics-snapshot, and audit-log artifacts in results/")
+    p.add_argument("--trace-sample", type=float, default=1.0,
+                   help="flow sampling rate for --trace (default: all flows)")
     args = p.parse_args()
+    if args.trace is not None:
+        run_traced(args.trace,
+                   shards=args.shards if args.shards > 1 else 4,
+                   scenario=args.scenario if args.scenario != "uniform"
+                   else "zipf",
+                   sample=args.trace_sample)
+        raise SystemExit(0)
     doc = run(smoke=args.smoke, use_case=args.use_case, out_path=args.out,
               shards=args.shards, scenario=args.scenario)
     if args.skew_gate:

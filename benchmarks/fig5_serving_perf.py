@@ -68,7 +68,21 @@ def space_cap(space, ds):
 
 REPLAYED_HEADER = ("method", "depth", "n_features", "f1", "zero_loss_gbps",
                    "zero_loss_pps", "p50_s", "p99_s", "drops", "compiles",
-                   "shard", "scenario", "control", "imbalance")
+                   "shard", "scenario", "control", "imbalance",
+                   "share_ingest", "share_infer", "share_flush")
+
+
+def _stage_share_cols(stage_seconds: dict) -> tuple:
+    """(ingest, infer, flush) service-time shares of one clock's stage
+    rollup (DESIGN.md §11.2), each rounded; zeros when the rollup is
+    missing (rows predating the stage accounting)."""
+    total = sum(stage_seconds.values()) if stage_seconds else 0.0
+    if total <= 0:
+        return (0.0, 0.0, 0.0)
+    return tuple(
+        round(stage_seconds.get(k, 0.0) / total, 4)
+        for k in ("ingest", "infer", "flush")
+    )
 
 
 def run_replayed(
@@ -133,7 +147,8 @@ def run_replayed(
                 round(gbps, 4), round(stats.offered_pps, 1),
                 round(stats.latency_p50_s, 6), round(stats.latency_p99_s, 6),
                 stats.drops, stats.metrics.compile_count(), "agg",
-                scenario, mode, round(stats.load_imbalance, 4))]
+                scenario, mode, round(stats.load_imbalance, 4),
+                *_stage_share_cols(stats.stage_seconds))]
         for p in stats.per_shard:
             share = p["pkts_total"] / max(stats.metrics.pkts_total, 1)
             out.append((label, rep.depth, len(rep.features), round(f1, 4),
@@ -142,7 +157,8 @@ def run_replayed(
                         round(p["latency_p99_s"], 6),
                         p["drops_ring"] + p["drops_table"],
                         stats.metrics.compile_count(), p["shard"],
-                        scenario, mode, round(stats.load_imbalance, 4)))
+                        scenario, mode, round(stats.load_imbalance, 4),
+                        *_stage_share_cols(p.get("stage_seconds", {}))))
         if verbose:
             extra = (f" shards={stats.n_shards} "
                      f"imb={stats.load_imbalance:.2f}"

@@ -1,0 +1,177 @@
+"""Observability overhead gate: tracing must be free when it is off.
+
+The §11 contract is that a runtime with no bundle attached — or with a
+disabled tracer injected — pays one ``is not None`` test per hook site
+and nothing else. This benchmark measures that claim on the actual
+replay hot path and fails the build when it stops holding:
+
+- **detached**: plain replay, no `Observability` bundle (the baseline
+  every serving measurement in this repo runs as);
+- **disabled**: bundle attached with `Tracer(enabled=False)` — the
+  configuration a fleet runs in production when tracing is off;
+- **enabled**: full flow-lifecycle + stage tracing at sample=1.0
+  (reported for context; never gated — tracing costs what it costs).
+
+Each round times all three modes back-to-back (order rotating) and the
+reported overhead is the **median over rounds of the same-round
+wall-clock ratio** — a slow host stretch inflates every mode of the
+round it lands on and cancels in the ratio, which best-of-K minima
+cannot do when noise is correlated over seconds. Timing-only runtimes
+keep jit jitter out of the measurement. `--gate` fails if
+disabled/detached exceeds the threshold on three independent
+measurement attempts (a real regression shifts every attempt; a
+shared-runner noise stretch does not); the CI bench job runs it with
+the default 5%.
+
+    python -m benchmarks.trace_smoke --gate 5
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import statistics
+import sys
+import time
+
+
+def _fixture(n_flows: int, max_pkts: int):
+    from repro.core.search_space import FeatureRep
+    from repro.serve.runtime import PacketStream, ServiceModel
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    ds = make_scenario_dataset("app-class", "zipf", n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=8)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    pipe = build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    service = ServiceModel(
+        pkt_accum_ns=800.0, pkt_track_ns=200.0,
+        bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+        gather_ns_per_flow=200.0, source="synthetic",
+    )
+    return pipe, stream, service
+
+
+def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
+        shards: int = 4, offered_pps: float = 2e5,
+        verbose: bool = True) -> dict:
+    from repro.serve.obs import Observability, Tracer
+    from repro.serve.runtime import ShardedRuntime, replay
+
+    pipe, stream, service = _fixture(n_flows, max_pkts)
+
+    def make_runtime():
+        # timing-only (execute=False): the gate measures the ingest /
+        # dispatch / clock hot path, not jit execution jitter
+        return ShardedRuntime(pipe, n_shards=shards, capacity=2048,
+                              max_batch=64, execute=False)
+
+    def bundle(mode: str):
+        if mode == "detached":
+            return None
+        return Observability(
+            tracer=Tracer(capacity=1 << 15, sample=1.0,
+                          enabled=(mode == "enabled")))
+
+    modes = ("detached", "disabled", "enabled")
+
+    def one(mode: str) -> float:
+        obs = bundle(mode)  # tracer allocation outside the timed region
+        gc.collect()  # prior runs' collector debt stays out of the gap
+        gc.disable()  # cyclic-GC pauses mid-replay dominate mode deltas
+        try:
+            t0 = time.perf_counter()
+            replay(stream, make_runtime, offered_pps, service, obs=obs)
+            return time.perf_counter() - t0
+        finally:
+            gc.enable()
+
+    # warmup pass (cold caches, lazy imports), then rounds: each round
+    # times every mode back-to-back (order rotating so no mode owns a
+    # slot) and contributes one same-round ratio per instrumented mode —
+    # host-load stretches slower than a round inflate the whole round
+    # and cancel in the ratio
+    for m in modes:
+        one(m)
+    walls = {m: float("inf") for m in modes}
+    ratios: dict[str, list[float]] = {"disabled": [], "enabled": []}
+    for r in range(repeats):
+        t: dict[str, float] = {}
+        for m in modes[r % len(modes):] + modes[:r % len(modes)]:
+            t[m] = one(m)
+            walls[m] = min(walls[m], t[m])
+        for m in ratios:
+            ratios[m].append(t[m] / t["detached"])
+    overhead = {m: statistics.median(rs) - 1.0 for m, rs in ratios.items()}
+    out = {
+        "bench": "trace_overhead",
+        "config": {"repeats": repeats, "n_flows": n_flows,
+                   "max_pkts": max_pkts, "shards": shards,
+                   "offered_pps": offered_pps,
+                   "events": int(stream.n_events)},
+        "wall_s": {m: round(w, 4) for m, w in walls.items()},
+        "overhead_pct": {m: round(100 * o, 2) for m, o in overhead.items()},
+    }
+    if verbose:
+        for m in ("detached", "disabled", "enabled"):
+            extra = (f"  ({out['overhead_pct'][m]:+.2f}% median same-round"
+                     " vs detached)" if m != "detached" else "")
+            print(f"{m:9s} best-of-{repeats}: {walls[m]*1e3:8.2f} ms{extra}")
+    return out
+
+
+def check_gate(doc: dict, gate_pct: float) -> int:
+    """Fail when the tracing-*disabled* path regresses replay wall-clock
+    beyond `gate_pct` percent of the untraced baseline. The enabled path
+    is informational only."""
+    over = doc["overhead_pct"]["disabled"]
+    n = len(doc.get("attempts", [over]))
+    if over > gate_pct:
+        print(f"FAIL: tracing-disabled replay is {over:+.2f}% vs untraced "
+              f"baseline (gate {gate_pct:.1f}%, {n} attempts)",
+              file=sys.stderr)
+        return 1
+    print(f"OK: tracing-disabled overhead {over:+.2f}% within "
+          f"{gate_pct:.1f}% gate")
+    return 0
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--repeats", type=int, default=5,
+                   help="paired measurement rounds (each times all modes)")
+    p.add_argument("--shards", type=int, default=4)
+    p.add_argument("--n-flows", type=int, default=1200)
+    p.add_argument("--max-pkts", type=int, default=128)
+    p.add_argument("--gate", type=float, default=None, metavar="PCT",
+                   help="fail if tracing-disabled wall-clock exceeds the "
+                   "untraced baseline by more than PCT percent")
+    p.add_argument("--out", default=None, help="output path (default: "
+                   "results/BENCH_trace.json)")
+    args = p.parse_args()
+    # a genuine hot-path regression shifts every measurement; shared-host
+    # noise stretches do not survive independent attempts — so the gate
+    # re-measures (up to 3x) and fails only on unanimous exceedance
+    attempts: list[float] = []
+    doc = {}
+    for k in range(3 if args.gate is not None else 1):
+        if k:
+            print(f"# over gate on attempt {k}; re-measuring")
+        doc = run(repeats=args.repeats, n_flows=args.n_flows,
+                  max_pkts=args.max_pkts, shards=args.shards)
+        attempts.append(doc["overhead_pct"]["disabled"])
+        if args.gate is None or attempts[-1] <= args.gate:
+            break
+    doc["attempts"] = attempts
+    from .common import write_datapoint
+
+    path = write_datapoint(doc, args.out, name="BENCH_trace.json")
+    print(f"# wrote {path}")
+    if args.gate is not None:
+        raise SystemExit(check_gate(doc, args.gate))

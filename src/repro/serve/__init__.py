@@ -59,8 +59,20 @@ _DEPLOY_EXPORTS = (
     "make_swap",
 )
 
+# unified serving observability (DESIGN.md §11): fleet-wide metrics
+# registry, flow/stage span tracing on the replay clock, control-plane
+# audit log, online drift signals
+_OBS_EXPORTS = (
+    "AuditLog",
+    "DriftMonitor",
+    "MetricsRegistry",
+    "Observability",
+    "Tracer",
+    "fleet_registry",
+)
+
 __all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS,
-           *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS]
+           *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS, *_OBS_EXPORTS]
 
 
 def __getattr__(name):
@@ -76,4 +88,8 @@ def __getattr__(name):
         from . import deploy
 
         return getattr(deploy, name)
+    if name in _OBS_EXPORTS:
+        from . import obs
+
+        return getattr(obs, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

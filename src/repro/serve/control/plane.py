@@ -137,11 +137,24 @@ class ControlPlane:
         runtime: ShardedRuntime,
         config: ControlConfig,
         service: ServiceModel,
+        *,
+        audit=None,
+        tracer=None,
     ):
         self.rt = runtime
         self.cfg = config
         self.service = service  # current constants (retargeted on swap)
         self.telemetry = BucketTelemetry(alpha=config.ewma_alpha)
+        # decision audit log (DESIGN.md §11.3): every actuation below is
+        # recorded with its rationale and before/after load snapshot; an
+        # external Observability bundle passes its own log in so one run
+        # yields one audit stream
+        if audit is None:
+            from repro.serve.obs.audit import AuditLog
+
+            audit = AuditLog()
+        self.audit = audit
+        self.tracer = tracer
         self._pkts_since = 0
         self._last_step_t: Optional[float] = None
         self._pps_ewma = 0.0
@@ -194,6 +207,7 @@ class ControlPlane:
         # 1. scheduled pipeline hot-swap
         if (cfg.swap is not None and not self._swapped
                 and self.telemetry.total_pkts >= cfg.swap.after_pkts):
+            before = self._loads_doc()
             recs = rt.hot_swap(cfg.swap.pipeline, now)
             self._merge_records(report, recs)
             for i in range(len(rt.shards)):
@@ -203,6 +217,17 @@ class ControlPlane:
             report.swapped = True
             self.n_swaps += 1
             self.swap_at_pkts = int(self.telemetry.total_pkts)
+            self._audit(
+                "hot_swap", now,
+                f"scheduled swap armed at {cfg.swap.after_pkts} pkts; fleet "
+                f"has ingested {self.swap_at_pkts}",
+                {
+                    "quiesce_flushes": sum(len(r) for r in recs.values()),
+                    "shards": len(rt.shards),
+                    "new_service": cfg.swap.service.source,
+                },
+                before=before,
+            )
 
         # 2. elastic fleet sizing
         if cfg.headroom is not None and self._pps_ewma > 0:
@@ -215,6 +240,8 @@ class ControlPlane:
             # the RETA is the steering quantum: more workers than entries
             # can never receive load (add_worker enforces the same bound)
             desired = min(desired, INDIRECTION_SIZE)
+            n_before = sum(rt.active)
+            size_before = (self._loads_doc() if desired != n_before else None)
             while desired > sum(rt.active):
                 # reactivate a drained retired worker before minting a new
                 # replica: flapping load must not grow the shard list
@@ -228,6 +255,20 @@ class ControlPlane:
                     break
                 report.workers_added.append(i)
                 self.workers_added += 1
+            if report.workers_added:
+                self._audit(
+                    "scale_out", now,
+                    f"offered {self._pps_ewma:.0f} pps vs {cap_pps:.0f} "
+                    f"pps/worker capacity wants {desired} workers "
+                    f"(had {n_before})",
+                    {
+                        "workers_added": list(report.workers_added),
+                        "pps_ewma": round(self._pps_ewma, 1),
+                        "cap_pps": round(cap_pps, 1),
+                        "desired": desired,
+                    },
+                    before=size_before,
+                )
             if desired < sum(rt.active):
                 # one retirement per step: pick the coldest active worker,
                 # evacuate its buckets, then mark it inactive
@@ -237,11 +278,27 @@ class ControlPlane:
                 coldest = min(act, key=lambda i: loads[i])
                 moves = plan_retirement(rates, rt.indirection, coldest,
                                         rt.active)
+                pre_fm = report.flows_migrated
                 self._apply_moves(report, moves, now)
                 if not np.any(rt.indirection == coldest):
                     rt.active[coldest] = False
                     report.workers_retired.append(coldest)
                     self.workers_retired += 1
+                    self._audit(
+                        "retire", now,
+                        f"load fits {desired} workers; evacuated coldest "
+                        f"worker {coldest} "
+                        f"(ewma load {float(loads[coldest]):.1f})",
+                        {
+                            "worker": coldest,
+                            "buckets_evacuated": len(moves),
+                            "flows_migrated":
+                                report.flows_migrated - pre_fm,
+                            "pps_ewma": round(self._pps_ewma, 1),
+                            "desired": desired,
+                        },
+                        before=size_before,
+                    )
 
         # 3. RETA rebalancing
         if cfg.rebalance:
@@ -251,8 +308,24 @@ class ControlPlane:
                 trigger=cfg.imbalance_trigger,
             )
             if moves:
+                before_rb = self._loads_doc()
+                pre_bm = report.buckets_moved
+                pre_fm = report.flows_migrated
                 self.n_rebalances += 1
                 self._apply_moves(report, moves, now)
+                self._audit(
+                    "rebalance", now,
+                    f"imbalance {before_rb['imbalance']:.3f} over trigger "
+                    f"{cfg.imbalance_trigger:.3f}; planned "
+                    f"{len(moves)} bucket moves",
+                    {
+                        "moves_planned": len(moves),
+                        "buckets_moved": report.buckets_moved - pre_bm,
+                        "flows_migrated": report.flows_migrated - pre_fm,
+                        "trigger": cfg.imbalance_trigger,
+                    },
+                    before=before_rb,
+                )
 
         if (report.buckets_moved or report.swapped or report.workers_added
                 or report.workers_retired):
@@ -267,6 +340,34 @@ class ControlPlane:
         return report
 
     # -- internals -----------------------------------------------------------
+
+    def _loads_doc(self) -> dict:
+        """Snapshot of the planner's view: per-shard EWMA load projected
+        through the current RETA, plus the imbalance statistic it acts
+        on. Attached to audit events as the before/after state."""
+        rt = self.rt
+        loads = self.telemetry.shard_loads(rt.indirection, len(rt.shards))
+        act = [i for i, a in enumerate(rt.active) if a]
+        mean = float(loads[act].mean()) if act else 0.0
+        return {
+            "shard_loads_ewma": [round(float(x), 3) for x in loads],
+            "active_workers": act,
+            "imbalance": round(float(loads[act].max() / mean), 4)
+            if act and mean > 0 else 1.0,
+        }
+
+    def _audit(self, kind: str, now: float, rationale: str,
+               detail: Optional[dict] = None, *, before=None,
+               after=None) -> None:
+        if after is None and before is not None:
+            after = self._loads_doc()
+        self.audit.record(kind, now, rationale, detail,
+                          before=before, after=after)
+        if self.tracer is not None and self.tracer.enabled:
+            from repro.serve.obs.trace import TID_CONTROL
+
+            self.tracer.instant(f"control.{kind}", now, pid=0,
+                                tid=TID_CONTROL)
 
     def _apply_moves(self, report: StepReport, moves: dict, now: float) -> None:
         rep = self.rt.migrate_buckets(moves, now)

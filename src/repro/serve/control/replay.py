@@ -43,12 +43,18 @@ def controlled_replay(
     control: ControlConfig,
     ring_capacity: int = 4096,
     evict_every: int = 512,
+    obs=None,
 ) -> ReplayStats:
     """Replay `stream` at `offered_pps` through a control-plane-managed
     sharded fleet. Same contract as `repro.serve.runtime.replay` (drops
     aggregate across shards; predictions bit-identical to an oracle
     single-worker run for every flow that completes under one pipeline
     configuration), plus a `control` activity summary on the stats.
+
+    Pass an `Observability` bundle as `obs` to trace flow lifecycles and
+    worker stage spans on the same virtual clock, feed the drift monitor
+    from dispatch outputs, and collect the control plane's audit log in
+    one stream (DESIGN.md §11).
     """
     rt = make_runtime()
     if not isinstance(rt, ShardedRuntime):
@@ -57,7 +63,15 @@ def controlled_replay(
             "actuates RETA entries and per-shard state, which a single "
             "worker does not have"
         )
-    plane = ControlPlane(rt, control, service)
+    tracer = None
+    if obs is not None:
+        obs.attach(rt)
+        tracer = obs.tracer
+    plane = ControlPlane(
+        rt, control, service,
+        audit=obs.audit if obs is not None else None,
+        tracer=tracer,
+    )
     t_e = stream.base_t * (stream.base_pps / offered_pps)
     t_end = float(t_e[-1]) + rt.flush_timeout_s if len(t_e) else 0.0
     duration = float(t_e[-1] - t_e[0]) if stream.n_events > 1 else 1.0
@@ -68,8 +82,9 @@ def controlled_replay(
     ev_key = stream.key[stream.fid]
 
     clocks = [
-        _WorkerClock(srt, service, ring_capacity, evict_every)
-        for srt in rt.shards
+        _WorkerClock(srt, service, ring_capacity, evict_every,
+                     pid=i, tracer=tracer)
+        for i, srt in enumerate(rt.shards)
     ]
     E = stream.n_events
     pos = 0
@@ -87,7 +102,8 @@ def controlled_replay(
             while len(clocks) < len(rt.shards):
                 clocks.append(_WorkerClock(
                     rt.shards[len(clocks)], plane.service,
-                    ring_capacity, evict_every))
+                    ring_capacity, evict_every,
+                    pid=len(clocks), tracer=tracer))
             # quiesce/swap flushes ran on the configuration that produced
             # them: charge before retargeting service constants
             for i, recs in step.records.items():
@@ -100,6 +116,13 @@ def controlled_replay(
 
     for clock in clocks:
         clock.finish(t_end)
+
+    stage_seconds: dict[str, float] = {}
+    shard_stages: dict[int, dict[str, float]] = {}
+    for i, clock in enumerate(clocks):
+        shard_stages[i] = dict(clock.stage_s)
+        for k, v in clock.stage_s.items():
+            stage_seconds[k] = stage_seconds.get(k, 0.0) + v
 
     agg = rt.metrics
     m = agg.merged()
@@ -118,6 +141,7 @@ def controlled_replay(
             "latency_p50_s": p.latency.percentile(50),
             "latency_p99_s": p.latency.percentile(99),
             "active": bool(rt.active[i]),
+            "stage_seconds": shard_stages.get(i, {}),
         }
         for i, p in enumerate(agg.parts)
     ]
@@ -136,4 +160,5 @@ def controlled_replay(
         load_imbalance=agg.load_imbalance(),
         per_shard=per_shard,
         control=plane.summary(),
+        stage_seconds=stage_seconds,
     )

@@ -64,3 +64,22 @@ class BucketTelemetry:
             np.asarray(indirection, np.int64), weights=self.ewma,
             minlength=n_shards,
         )
+
+    def to_registry(self, prefix: str = "control.telemetry.", registry=None):
+        """Project the telemetry view into the unified metrics namespace
+        (DESIGN.md §11.1): counters for rolls/packets, gauges for the
+        EWMA balance statistics the planner acts on."""
+        from repro.serve.obs.registry import MetricsRegistry
+
+        reg = registry if registry is not None else MetricsRegistry()
+        reg.set_counter(prefix + "total_pkts", self.total_pkts)
+        reg.set_counter(prefix + "rolls", self.rolls)
+        mean = float(self.ewma.mean())
+        reg.set_gauge(prefix + "ewma_max", float(self.ewma.max()), reduce="max")
+        reg.set_gauge(prefix + "ewma_mean", mean, reduce="mean")
+        reg.set_gauge(
+            prefix + "imbalance",
+            float(self.ewma.max() / mean) if mean > 0 else 1.0,
+            reduce="max",
+        )
+        return reg

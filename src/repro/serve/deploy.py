@@ -283,6 +283,7 @@ def make_swap(
     after_pkts: int = 0,
     runtime=None,
     service=None,
+    audit=None,
 ):
     """Schedule `point` as a zero-downtime `PipelineSwap` (DESIGN.md §9.3).
 
@@ -294,7 +295,8 @@ def make_swap(
     already-compiled bucket only replays a zero batch through the jit
     cache, so the ensure is cheap. `service` defaults to the modeled
     clock constants for the point's (F, n) — pass measured constants
-    for calibrated replay."""
+    for calibrated replay. Pass an `AuditLog` as `audit` to record the
+    scheduling decision (DESIGN.md §11.3)."""
     from repro.serve.control.plane import PipelineSwap
     from repro.serve.runtime.replay import ServiceModel
 
@@ -302,10 +304,26 @@ def make_swap(
     pipe.warm(warm_buckets_for(runtime))
     if service is None:
         service = ServiceModel.modeled(point.rep, point.forest())
+    if audit is not None:
+        audit.record(
+            "swap_scheduled", 0.0,
+            f"bundle point (|F|={len(point.rep.features)}, "
+            f"n={point.rep.depth}) armed to swap after "
+            f"{after_pkts} pkts",
+            {
+                "features": list(point.rep.features),
+                "depth": int(point.rep.depth),
+                "cost": float(point.cost),
+                "perf": float(point.perf),
+                "fidelity": point.fidelity,
+                "after_pkts": int(after_pkts),
+                "service": service.source,
+            },
+        )
     return PipelineSwap(pipeline=pipe, service=service, after_pkts=after_pkts)
 
 
-def deploy(point: BundlePoint, runtime, now: float):
+def deploy(point: BundlePoint, runtime, now: float, *, audit=None):
     """Hot-swap `point` into a live runtime immediately.
 
     `runtime` is a `StreamingRuntime` or `ShardedRuntime`; the swap goes
@@ -315,7 +333,25 @@ def deploy(point: BundlePoint, runtime, now: float):
     ensured first (see `make_swap`), so the swap pays no compile on the
     serving path. Returns the quiesce flush records (list for a single
     worker, {shard: records} for a fleet) so a replay clock can charge
-    them to the right lanes."""
+    them to the right lanes. Pass an `AuditLog` as `audit` to record
+    the deployment (DESIGN.md §11.3)."""
     pipe = point.pipeline or point.build(runtime=runtime, warm=False)
     pipe.warm(warm_buckets_for(runtime))
-    return runtime.hot_swap(pipe, now)
+    recs = runtime.hot_swap(pipe, now)
+    if audit is not None:
+        flushes = (sum(len(r) for r in recs.values())
+                   if isinstance(recs, dict) else len(recs))
+        audit.record(
+            "deploy", now,
+            f"immediate hot-swap of bundle point "
+            f"(|F|={len(point.rep.features)}, n={point.rep.depth})",
+            {
+                "features": list(point.rep.features),
+                "depth": int(point.rep.depth),
+                "cost": float(point.cost),
+                "perf": float(point.perf),
+                "fidelity": point.fidelity,
+                "quiesce_flushes": flushes,
+            },
+        )
+    return recs

@@ -1,0 +1,116 @@
+"""Unified serving observability (DESIGN.md §11).
+
+One subsystem spanning the serving stack, four pieces:
+
+- `registry` — the fleet-wide `MetricsRegistry`: every ad-hoc counter,
+  histogram, and telemetry view behind one dotted namespace with exact
+  snapshot/delta semantics and order-independent cross-shard merge.
+- `trace` — the bounded ring-buffer `Tracer`: per-flow lifecycle spans
+  and per-worker stage spans on the replay packet clock, sampled,
+  off by default, exported as Chrome trace-event JSON.
+- `audit` — the control-plane `AuditLog`: every rebalance / retire /
+  scale / hot-swap decision as a structured event with before/after
+  EWMA snapshots and the planner's rationale.
+- `drift` — the online `DriftMonitor`: class-mix and confidence EWMAs
+  plus streaming feature moments from dispatch outputs — the signal the
+  ROADMAP's self-optimizing fleet will threshold.
+
+`Observability` bundles the three live hooks and knows how to attach
+them to a runtime (single or sharded): attachment is attribute
+injection on the dispatchers, so a runtime with no bundle attached pays
+exactly one ``is not None`` test per hook site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .audit import AuditEvent, AuditLog
+from .drift import DriftMonitor, StreamingMoments
+from .registry import MetricsRegistry
+from .trace import Tracer, TID_CONTROL, TID_INFER, TID_INGEST
+
+__all__ = [
+    "AuditEvent",
+    "AuditLog",
+    "DriftMonitor",
+    "MetricsRegistry",
+    "Observability",
+    "StreamingMoments",
+    "Tracer",
+    "TID_CONTROL",
+    "TID_INFER",
+    "TID_INGEST",
+    "fleet_registry",
+]
+
+
+def fleet_registry(runtime, per_shard: bool = True) -> MetricsRegistry:
+    """The runtime's metrics as one registry — `ShardedRuntime` merges
+    its shards (with ``shard{i}.`` columns), a single `StreamingRuntime`
+    projects its one block — plus the live flow-table occupancy gauges
+    (point-in-time state the cumulative counters cannot carry)."""
+    agg = runtime.metrics
+    if hasattr(agg, "registry"):  # AggregateMetrics
+        reg = agg.registry(per_shard=per_shard)
+    else:
+        reg = agg.to_registry()
+    workers = getattr(runtime, "shards", [runtime])
+    occs = [w.table.occupancy() for w in workers]
+    reg.set_gauge("flow_table.n_active",
+                  float(sum(o["n_active"] for o in occs)), reduce="sum")
+    reg.set_gauge("flow_table.load_factor",
+                  max(o["load_factor"] for o in occs), reduce="max")
+    reg.set_gauge("flow_table.tombstones",
+                  float(sum(o["tombstones"] for o in occs)), reduce="sum")
+    if per_shard and len(workers) > 1:
+        for i, o in enumerate(occs):
+            reg.set_gauge(f"shard{i}.flow_table.load_factor",
+                          o["load_factor"], reduce="max")
+    return reg
+
+
+@dataclasses.dataclass
+class Observability:
+    """The attachable observability bundle for one runtime/replay.
+
+    Any piece may be None (and the tracer defaults to None — tracing is
+    opt-in); the audit log always exists because recording a decision is
+    cheap and losing one is not.
+    """
+
+    tracer: Optional[Tracer] = None
+    drift: Optional[DriftMonitor] = None
+    audit: AuditLog = dataclasses.field(default_factory=AuditLog)
+
+    def attach(self, runtime) -> "Observability":
+        """Inject the hooks into every worker's dispatcher. Idempotent;
+        returns self so ``Observability(...).attach(rt)`` chains."""
+        workers = getattr(runtime, "shards", [runtime])
+        for i, w in enumerate(workers):
+            self.attach_worker(w, i)
+        return self
+
+    def attach_worker(self, worker, shard_id: int) -> None:
+        """Hook one `StreamingRuntime` (elastic scale-out attaches late
+        workers through here so their spans carry the right shard pid)."""
+        disp = worker.dispatcher
+        disp.tracer = self.tracer
+        disp.drift = self.drift
+        disp.trace_pid = shard_id
+
+    def snapshot(self, runtime, control=None) -> dict:
+        """One frozen document for the whole run: the merged fleet
+        registry snapshot plus whatever else is live (control summary,
+        drift signal, audit and trace summaries)."""
+        out = {"registry": fleet_registry(runtime).snapshot()}
+        if control is not None:
+            out["control"] = control.summary()
+            out["control_registry"] = control.telemetry.to_registry().snapshot()
+        if self.drift is not None:
+            out["drift"] = self.drift.signal()
+        if self.audit is not None and len(self.audit):
+            out["audit"] = self.audit.summary()
+        if self.tracer is not None:
+            out["trace"] = self.tracer.summary()
+        return out

@@ -1,0 +1,123 @@
+"""Structured control-plane audit log (DESIGN.md §11.3).
+
+Every actuation the control plane performs — RETA rebalance, worker
+scale-out/retirement, pipeline hot-swap, compile-to-deploy push — is
+recorded as one `AuditEvent`: what was done, *why* the planner did it
+(its rationale, stated against the numbers it saw), and the before/after
+per-shard EWMA load snapshot. The log makes fleet behavior replayable
+and explainable: an operator can line audit events up against the trace
+timeline and the metrics deltas and reconstruct every decision.
+
+Events are plain data (JSONL round-trip via ``save``/``load``), appended
+in decision order with a monotone sequence number — the control plane is
+single-threaded per fleet, so the sequence *is* the causal order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["AuditEvent", "AuditLog"]
+
+KINDS = ("rebalance", "scale_out", "retire", "hot_swap", "swap_scheduled",
+         "deploy")
+
+
+def _jsonable(x):
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    return x
+
+
+@dataclasses.dataclass
+class AuditEvent:
+    """One control-plane decision, with its evidence."""
+
+    seq: int                    # monotone per-log decision order
+    t: float                    # virtual time of the decision
+    kind: str                   # one of KINDS
+    rationale: str              # the planner's reason, in its own numbers
+    detail: dict                # action-specific payload (moves, shard ids …)
+    before: Optional[dict] = None  # shard-load EWMA snapshot pre-actuation
+    after: Optional[dict] = None   # same, post-actuation
+
+    def to_doc(self) -> dict:
+        return _jsonable(dataclasses.asdict(self))
+
+    @classmethod
+    def from_doc(cls, d: dict) -> "AuditEvent":
+        return cls(
+            seq=int(d["seq"]), t=float(d["t"]), kind=d["kind"],
+            rationale=d["rationale"], detail=dict(d["detail"]),
+            before=d.get("before"), after=d.get("after"),
+        )
+
+
+class AuditLog:
+    def __init__(self) -> None:
+        self.events: list[AuditEvent] = []
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def record(
+        self,
+        kind: str,
+        t: float,
+        rationale: str,
+        detail: Optional[dict] = None,
+        *,
+        before: Optional[dict] = None,
+        after: Optional[dict] = None,
+    ) -> AuditEvent:
+        if kind not in KINDS:
+            raise ValueError(f"unknown audit kind {kind!r} (one of {KINDS})")
+        ev = AuditEvent(
+            seq=len(self.events), t=float(t), kind=kind, rationale=rationale,
+            detail=_jsonable(detail or {}), before=_jsonable(before),
+            after=_jsonable(after),
+        )
+        self.events.append(ev)
+        return ev
+
+    def of_kind(self, kind: str) -> list[AuditEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+    def summary(self) -> dict:
+        out: dict = {"events": len(self.events)}
+        for k in KINDS:
+            n = sum(1 for e in self.events if e.kind == k)
+            if n:
+                out[k] = n
+        return out
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path) -> pathlib.Path:
+        """One JSON document per line, in decision order."""
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("w") as f:
+            for e in self.events:
+                f.write(json.dumps(e.to_doc()) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "AuditLog":
+        log = cls()
+        for line in pathlib.Path(path).read_text().splitlines():
+            if line.strip():
+                log.events.append(AuditEvent.from_doc(json.loads(line)))
+        return log

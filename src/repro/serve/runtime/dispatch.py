@@ -157,6 +157,10 @@ class BatchRecord:
     shard: int = 0             # owning worker under a ShardedRuntime
     probs: Optional[object] = None   # in-flight device array
     preds: Optional[np.ndarray] = None
+    # flow ids sampled into the trace (the replay clock closes their
+    # lifecycle spans at this batch's service-completion edge); None when
+    # tracing is off or no flow in the batch was sampled
+    trace_ids: Optional[np.ndarray] = None
 
 
 class MicroBatchDispatcher:
@@ -189,6 +193,11 @@ class MicroBatchDispatcher:
         self._flag_scratch: dict[int, np.ndarray] = {}
         self.results: dict[int, object] = {}  # flow_id -> predicted class
         self.records: list[BatchRecord] = []
+        # observability hooks (repro.serve.obs): attribute injection, off
+        # by default — the untraced hot path pays one `is not None` test
+        self.tracer = None          # obs.Tracer
+        self.drift = None           # obs.DriftMonitor
+        self.trace_pid = 0          # shard id for trace process grouping
 
     # -- queue ---------------------------------------------------------------
 
@@ -305,8 +314,34 @@ class MicroBatchDispatcher:
             reason=reason,
             flush_idx=flush_idx,
         )
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            # sampled flow lifecycles: begin at first packet, milestones at
+            # ready and flush (vectorized per batch; slots still hold their
+            # ctrl rows — mark_predicted below may recycle them). The
+            # replay clock closes these spans at the batch's service edge.
+            keep = tr.sample_mask(rec.flow_ids)
+            if keep.any():
+                ids = rec.flow_ids[keep]
+                pid = self.trace_pid
+                tr.flow_begin(ids, self.table.ctrl["first_ts"][slots[keep]],
+                              pid=pid)
+                tr.flow_mark("ready", ids, ready[keep], pid=pid)
+                tr.flow_mark(f"flush.{reason}", ids,
+                             np.full(len(ids), now), pid=pid)
+                rec.trace_ids = ids
         if self.execute:
             ds = self.gather(slots, bucket)
+            if self.drift is not None:
+                # covariate-shift sketch: three cheap per-flow summaries
+                # reduced batch-at-once from the staged arena (obs.drift)
+                L = np.asarray(ds.flow_len[:n], np.float64)
+                Lc = np.maximum(L, 1.0)
+                self.drift.note_features(np.stack([
+                    L,
+                    ds.size[:n].sum(axis=1, dtype=np.float64) / Lc,
+                    ds.ts[:n].max(axis=1).astype(np.float64),
+                ], axis=1))
             # retire the oldest in-flight batch before submitting a new one:
             # at most `max_pending` batches overlap ingest at any time
             while len(self._pending) >= self.max_pending:
@@ -386,9 +421,19 @@ class MicroBatchDispatcher:
         return ds
 
     def _resolve(self, rec: BatchRecord) -> None:
+        dm = self.drift
+        conf = None
+        if dm is not None:
+            # top-class vote share = prediction confidence; materialized
+            # here (one host copy per batch) only when drift is attached
+            pnp = np.asarray(rec.probs)[: rec.n_real]
+            conf = pnp.max(axis=1) / np.maximum(
+                pnp.sum(axis=1), 1e-12)
         preds = self.pipeline.finalize(rec.probs)[: rec.n_real]
         rec.preds = preds
         rec.probs = None
+        if dm is not None:
+            dm.note_predictions(preds, conf)
         for fid, p in zip(rec.flow_ids, preds):
             # first prediction wins: a re-tenancy of the same 5-tuple (e.g.
             # a stray final ACK after close) must not overwrite the real
@@ -569,10 +614,13 @@ class StreamingRuntime:
             max_pending=disp.max_pending, execute=disp.execute,
             metrics=self.metrics,
         )
-        # predictions and the flush log are runtime-lifetime, not
-        # pipeline-lifetime: carry them over
+        # predictions, the flush log, and the observability hooks are
+        # runtime-lifetime, not pipeline-lifetime: carry them over
         new_disp.results = disp.results
         new_disp.records = disp.records
+        new_disp.tracer = disp.tracer
+        new_disp.drift = disp.drift
+        new_disp.trace_pid = disp.trace_pid
         ready = []
         for s in np.nonzero(old.ctrl["state"] != 0)[0]:
             ns = move_slot(old, table, int(s))

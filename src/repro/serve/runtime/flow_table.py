@@ -278,6 +278,17 @@ class FlowTable:
     def n_active(self) -> int:
         return self.capacity - len(self._free)
 
+    def occupancy(self) -> dict:
+        """Point-in-time table pressure, for the metrics registry's gauge
+        namespace (DESIGN.md §11.1). Gauges only — the cumulative story
+        (flows_seen, evictions, drops) lives in `RuntimeMetrics`."""
+        return {
+            "n_active": self.n_active,
+            "capacity": self.capacity,
+            "load_factor": self.n_active / self.capacity,
+            "tombstones": int(self._tombstones),
+        }
+
     def _alloc(self, key: int, t: float, flow_id: int) -> int:
         slot = self._free.pop()
         c = self.ctrl[slot]

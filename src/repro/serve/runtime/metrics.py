@@ -20,7 +20,7 @@ import math
 
 import numpy as np
 
-__all__ = ["LatencyHistogram", "RuntimeMetrics"]
+__all__ = ["LatencyHistogram", "RuntimeMetrics", "METRIC_NAMESPACE"]
 
 
 class LatencyHistogram:
@@ -175,6 +175,32 @@ class LatencyHistogram:
         }
 
 
+# canonical registry names for the counter fields below (DESIGN.md §11.1).
+# Fields added later without an entry here still aggregate — they fall
+# back to ``runtime.<field>`` — but the curated names are the public
+# namespace dashboards and tests key on.
+METRIC_NAMESPACE = {
+    "pkts_total": "ingest.pkts_total",
+    "pkts_accumulated": "ingest.pkts_accumulated",
+    "pkts_tracked": "ingest.pkts_tracked",
+    "drops_ring": "ingest.drops_ring",
+    "drops_table": "flow_table.drops",
+    "flows_seen": "flow_table.flows_seen",
+    "flows_evicted_idle": "flow_table.evictions",
+    "slots_recycled": "flow_table.slots_recycled",
+    "flows_migrated_out": "flow_table.migrated_out",
+    "flows_migrated_in": "flow_table.migrated_in",
+    "batches": "dispatch.batches",
+    "flushes_full": "dispatch.flushes_full",
+    "flushes_timeout": "dispatch.flushes_timeout",
+    "flushes_drain": "dispatch.flushes_drain",
+    "flushes_migrate": "dispatch.flushes_migrate",
+    "flushes_swap": "dispatch.flushes_swap",
+    "flows_predicted": "dispatch.flows_predicted",
+    "duplicate_predictions": "dispatch.duplicates",
+}
+
+
 @dataclasses.dataclass
 class RuntimeMetrics:
     """Shared counter block for one runtime instance / one replay run."""
@@ -211,29 +237,48 @@ class RuntimeMetrics:
         return self.drops_ring + self.drops_table
 
     @classmethod
-    def merged(cls, parts: "list[RuntimeMetrics]") -> "RuntimeMetrics":
-        """Aggregate view over per-shard metric blocks (DESIGN.md §8).
+    def counter_fields(cls) -> list[str]:
+        """Every plain-int counter field, by introspection — counters
+        added later are picked up by the registry bridge automatically."""
+        return [f.name for f in dataclasses.fields(cls)
+                if f.type in (int, "int")]
 
-        Counters sum (every int field, by introspection, so counters
-        added later are aggregated automatically), occupancy samples
-        concatenate (in shard order — the aggregate cares about the
-        distribution, not the interleaving), shape sets union (the jit
-        cache is shared across shards, so the union *is* the compile
-        bound), and latency histograms fold via `merge_from` (exact
-        counts always; raw samples stay capped). The parts are copied
-        out, not aliased: mutating the merged block never writes back
-        into a shard."""
-        agg = cls()
-        counter_names = [
-            f.name for f in dataclasses.fields(cls) if f.type in (int, "int")
-        ]
-        for p in parts:
-            for name in counter_names:
-                setattr(agg, name, getattr(agg, name) + getattr(p, name))
-            agg.batch_occupancy.extend(p.batch_occupancy)
-            agg.shapes_seen |= p.shapes_seen
-            agg.latency.merge_from(p.latency)
-        return agg
+    def to_registry(self, prefix: str = "", registry=None):
+        """Project this block into a `MetricsRegistry` namespace
+        (DESIGN.md §11.1): counters under their `METRIC_NAMESPACE` names
+        (``runtime.<field>`` fallback for unmapped ones), occupancy as
+        samples, the shape set as a set, and the latency histogram
+        attached live (snapshots copy; `MetricsRegistry.merge` folds via
+        `merge_from` into a fresh block, never aliasing this one)."""
+        from repro.serve.obs.registry import MetricsRegistry
+
+        reg = registry if registry is not None else MetricsRegistry()
+        for name in self.counter_fields():
+            canon = METRIC_NAMESPACE.get(name, f"runtime.{name}")
+            reg.set_counter(prefix + canon, getattr(self, name))
+        reg.extend_samples(prefix + "dispatch.batch_occupancy",
+                           self.batch_occupancy)
+        reg.union(prefix + "dispatch.shapes_seen", self.shapes_seen)
+        reg.attach_hist(prefix + "dispatch.latency", self.latency)
+        return reg
+
+    @classmethod
+    def from_registry(cls, reg) -> "RuntimeMetrics":
+        """Rebuild a metrics block from an (unprefixed) registry view —
+        the inverse of `to_registry`, used by the fleet aggregate so the
+        operator API keeps returning `RuntimeMetrics`. Adopts the
+        registry's histogram object: `MetricsRegistry.merge` constructs
+        fresh blocks, so the adopted histogram never aliases a shard's."""
+        m = cls()
+        for name in cls.counter_fields():
+            canon = METRIC_NAMESPACE.get(name, f"runtime.{name}")
+            setattr(m, name, reg.counter(canon))
+        m.batch_occupancy = list(
+            reg._samples.get("dispatch.batch_occupancy", []))
+        m.shapes_seen = set(reg._sets.get("dispatch.shapes_seen", set()))
+        if "dispatch.latency" in reg._hists:
+            m.latency = reg.hist("dispatch.latency")
+        return m
 
     def compile_count(self) -> int:
         """Distinct dispatch shapes == upper bound on new XLA executables."""

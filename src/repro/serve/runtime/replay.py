@@ -51,6 +51,8 @@ import numpy as np
 from repro.traffic.features import per_flow_ops_ns, per_packet_ops, FEATURES
 from repro.traffic.synth import FLAG_NAMES, TrafficDataset, scenario_flow_starts
 
+from repro.serve.obs.trace import TID_INFER, TID_INGEST
+
 from .dispatch import BatchRecord, StreamingRuntime
 from .flow_table import FlowTable, tuple_hash64
 from .metrics import RuntimeMetrics
@@ -339,6 +341,18 @@ class ReplayStats:
     per_shard: list = dataclasses.field(default_factory=list)
     # control-plane replay: rebalance/swap/elastic activity summary
     control: dict = dataclasses.field(default_factory=dict)
+    # virtual service seconds per stage, summed over workers (ingest =
+    # packet accumulation/tracking, infer = batched extract+inference,
+    # flush = gather/submit) — where a packet's time goes (DESIGN.md §11)
+    stage_seconds: dict = dataclasses.field(default_factory=dict)
+
+    def stage_shares(self) -> dict:
+        """Each stage's share of total charged service time (sums to 1
+        whenever any service was charged)."""
+        total = sum(self.stage_seconds.values())
+        if total <= 0:
+            return {k: 0.0 for k in self.stage_seconds}
+        return {k: v / total for k, v in self.stage_seconds.items()}
 
     def summary(self) -> dict:
         out = {
@@ -351,6 +365,9 @@ class ReplayStats:
             **{f"rt_{k}": v for k, v in self.metrics.summary().items()
                if not isinstance(v, dict)},
         }
+        if self.stage_seconds:
+            out["stage_seconds"] = dict(self.stage_seconds)
+            out["stage_shares"] = self.stage_shares()
         if self.n_shards > 1:
             out["n_shards"] = self.n_shards
             out["load_imbalance"] = self.load_imbalance
@@ -442,6 +459,9 @@ class _WorkerClock:
         service: ServiceModel,
         ring_capacity: int,
         evict_every: int,
+        *,
+        pid: int = 0,
+        tracer=None,
     ):
         self.rt = rt
         self.service = service
@@ -452,6 +472,12 @@ class _WorkerClock:
         self.ring = np.empty(0, np.float64)  # outstanding completions (sorted)
         self._since_poll = 0
         self.t = 0.0
+        # observability (repro.serve.obs): shard pid for trace grouping,
+        # optional span tracer, and the always-on per-stage service-time
+        # rollup (three float adds per block/batch — DESIGN.md §11)
+        self.pid = pid
+        self.tracer = tracer
+        self.stage_s = {"ingest": 0.0, "infer": 0.0, "flush": 0.0}
 
     def charge(self, recs: list[BatchRecord], charge_submit: bool = True) -> None:
         """Inference-lane accounting; optionally charge the ingest-lane
@@ -460,18 +486,33 @@ class _WorkerClock:
         charge quiesce/swap flushes to the worker that fired them."""
         service = self.service
         m = self.rt.metrics
+        tr = self.tracer
         for rec in recs:
             if charge_submit:
-                self.busy_ingest += service.submit_ns(rec.n_real) * 1e-9
-            done = max(rec.flush_ts, self.busy_infer) \
-                + service.batch_ns(rec.bucket) * 1e-9
+                sub = service.submit_ns(rec.n_real) * 1e-9
+                self.busy_ingest += sub
+                self.stage_s["flush"] += sub
+            svc = service.batch_ns(rec.bucket) * 1e-9
+            start = max(rec.flush_ts, self.busy_infer)
+            done = start + svc
             self.busy_infer = done
+            self.stage_s["infer"] += svc
             m.latency.record_many(done - rec.ready_ts)
+            if tr is not None and tr.enabled:
+                # one X span per batch on the inference lane; sampled flow
+                # lifecycles close at the same service-completion edge
+                tr.span(f"infer.{rec.reason}", start, svc,
+                        pid=self.pid, tid=TID_INFER)
+                if rec.trace_ids is not None:
+                    tr.flow_end(rec.trace_ids,
+                                np.full(len(rec.trace_ids), done),
+                                pid=self.pid)
 
     def charge_ingest(self, seconds: float) -> None:
         """Serialize extra work into the ingest lane (e.g. the per-flow
         state-copy cost of a RETA migration)."""
         self.busy_ingest += seconds
+        self.stage_s["ingest"] += seconds
 
     def feed(self, ev: _Events) -> None:
         """Drive one delivery-ordered event block through the worker."""
@@ -486,11 +527,13 @@ class _WorkerClock:
         sub_flow = service.gather_ns_per_flow * 1e-9
         evict_every = self.evict_every
 
+        tr = self.tracer
         pos = 0
         while pos < E:
             hi = min(pos + evict_every, E)
             tc = ev.t[pos:hi]
             n = hi - pos
+            busy_at_entry = self.busy_ingest
             # retire completed service (the scalar loop's per-arrival popleft)
             ring = self.ring[np.searchsorted(self.ring, tc[0], side="right"):]
 
@@ -509,6 +552,7 @@ class _WorkerClock:
                     ev.d_port[pos:hi], ev.fid[pos:hi], ev.fin[pos:hi],
                 )
                 s_i = np.where(accumulated, s_acc, s_trk)
+                self.stage_s["ingest"] += float(s_i.sum())
                 # exact lane recurrence, segmented at flush submits
                 b = np.empty(n)
                 seg_lo = 0
@@ -520,7 +564,9 @@ class _WorkerClock:
                             self.busy_ingest)
                         self.busy_ingest = b[k]
                         seg_lo = k + 1
-                    self.busy_ingest += service.submit_ns(rec.n_real) * 1e-9
+                    sub = service.submit_ns(rec.n_real) * 1e-9
+                    self.busy_ingest += sub
+                    self.stage_s["flush"] += sub
                 if seg_lo < n:
                     b[seg_lo:] = _lindley(tc[seg_lo:], s_i[seg_lo:],
                                           self.busy_ingest)
@@ -536,6 +582,7 @@ class _WorkerClock:
                 # -- fallback: per-packet loop, order-exact admission
                 rq: deque[float] = deque(ring.tolist())
                 ingest = rt.ingest_packet
+                ing_s = 0.0
                 for i in range(pos, hi):
                     t = self.t = ev.t[i]
                     while rq and rq[0] <= t:
@@ -560,14 +607,24 @@ class _WorkerClock:
                         int(ev.fid[i]), bool(ev.fin[i]),
                     )
                     start_srv = max(t, self.busy_ingest)
-                    self.busy_ingest = start_srv + service.packet_ns(
-                        m.pkts_accumulated > acc0) * 1e-9
+                    svc = service.packet_ns(m.pkts_accumulated > acc0) * 1e-9
+                    ing_s += svc
+                    self.busy_ingest = start_srv + svc
                     rq.append(self.busy_ingest)
                     if recs:
                         self.charge(recs)
                     if poll_due:
                         self.charge(rt.poll(t))
                 self.ring = np.asarray(rq, np.float64)
+                self.stage_s["ingest"] += ing_s
+            if tr is not None and tr.enabled and self.busy_ingest > busy_at_entry:
+                # ingest-lane busy envelope for this block: one X span from
+                # the lane's first possible service instant to its new busy
+                # edge (an envelope, not per-packet slices — block cost
+                # discipline; idle gaps inside a block are subsumed)
+                start = max(busy_at_entry, float(tc[0]))
+                tr.span("ingest.block", start, self.busy_ingest - start,
+                        pid=self.pid, tid=TID_INGEST)
             pos = hi
 
     def finish(self, t_end: float) -> None:
@@ -582,7 +639,10 @@ def _drive(
     ring_capacity: int,
     evict_every: int,
     t_end: float,
-) -> None:
+    *,
+    pid: int = 0,
+    tracer=None,
+) -> _WorkerClock:
     """Drive one worker's whole event stream: feed + drain (the static
     single-owner path; the control plane drives `_WorkerClock` directly).
 
@@ -592,11 +652,13 @@ def _drive(
     lanes never interact across shards (DESIGN.md §8). All effects
     accumulate in `rt` and its metrics; the final drain is clocked at the
     caller's `t_end` so every shard of a fleet stops on the same global
-    clock edge.
+    clock edge. Returns the clock (its stage rollup outlives the drive).
     """
-    clock = _WorkerClock(rt, service, ring_capacity, evict_every)
+    clock = _WorkerClock(rt, service, ring_capacity, evict_every,
+                         pid=pid, tracer=tracer)
     clock.feed(ev)
     clock.finish(t_end)
+    return clock
 
 
 def replay(
@@ -608,6 +670,7 @@ def replay(
     ring_capacity: int = 4096,
     evict_every: int = 512,
     control=None,
+    obs=None,
 ) -> ReplayStats:
     """Replay `stream` at `offered_pps` through a fresh runtime.
 
@@ -630,6 +693,10 @@ def replay(
     RETA rebalancing / hot-swap / elastic actions fire between blocks
     (DESIGN.md §9). Steering is then dynamic, so this path delegates to
     `repro.serve.control.replay.controlled_replay`.
+
+    `obs` (a `repro.serve.obs.Observability`) attaches this run's
+    observability hooks — flow/stage span tracing, drift sketches, and
+    (under `control`) the decision audit log (DESIGN.md §11).
     """
     if control is not None:
         from repro.serve.control.replay import controlled_replay
@@ -637,9 +704,13 @@ def replay(
         return controlled_replay(
             stream, make_runtime, offered_pps, service,
             control=control, ring_capacity=ring_capacity,
-            evict_every=evict_every,
+            evict_every=evict_every, obs=obs,
         )
     rt = make_runtime()
+    tracer = None
+    if obs is not None:
+        obs.attach(rt)
+        tracer = obs.tracer
     # tcpreplay-style clock compression: one factor scales delivery times
     t_e = stream.base_t * (stream.base_pps / offered_pps)
     # stop the clock one flush-timeout after the last packet: flows still
@@ -650,13 +721,23 @@ def replay(
     duration = float(t_e[-1] - t_e[0]) if stream.n_events > 1 else 1.0
     gbps = stream.total_bytes * 8.0 / max(duration, 1e-9) / 1e9
 
+    stage_seconds = {"ingest": 0.0, "infer": 0.0, "flush": 0.0}
+
+    def fold_stages(clock: _WorkerClock) -> dict:
+        for k, v in clock.stage_s.items():
+            stage_seconds[k] += v
+        return dict(clock.stage_s)
+
     if isinstance(rt, ShardedRuntime):
         shard_of_pkt = rt.steer_stream(stream)[stream.fid]
+        shard_stages: dict[int, dict] = {}
         for i, srt in enumerate(rt.shards):
             sel = np.flatnonzero(shard_of_pkt == i)
             if sel.size:
-                _drive(srt, _gather_events(stream, t_e, sel), service,
-                       ring_capacity, evict_every, t_end)
+                shard_stages[i] = fold_stages(_drive(
+                    srt, _gather_events(stream, t_e, sel), service,
+                    ring_capacity, evict_every, t_end,
+                    pid=i, tracer=tracer))
             else:
                 srt.drain(t_end)
         agg = rt.metrics
@@ -673,13 +754,14 @@ def replay(
                 "occupancy_mean": p.occupancy_stats()["mean"],
                 "latency_p50_s": p.latency.percentile(50),
                 "latency_p99_s": p.latency.percentile(99),
+                "stage_seconds": shard_stages.get(i, {}),
             }
             for i, p in enumerate(agg.parts)
         ]
         n_shards, imbalance = rt.n_shards, agg.load_imbalance()
     else:
-        _drive(rt, _gather_events(stream, t_e), service,
-               ring_capacity, evict_every, t_end)
+        fold_stages(_drive(rt, _gather_events(stream, t_e), service,
+                           ring_capacity, evict_every, t_end, tracer=tracer))
         m = rt.metrics
         per_shard, n_shards, imbalance = [], 1, 1.0
 
@@ -697,6 +779,7 @@ def replay(
         n_shards=n_shards,
         load_imbalance=imbalance,
         per_shard=per_shard,
+        stage_seconds=stage_seconds,
     )
 
 
@@ -711,6 +794,7 @@ def find_zero_loss_rate(
     ring_capacity: int = 4096,
     verbose: bool = False,
     control=None,
+    obs=None,
 ) -> tuple[float, ReplayStats]:
     """Bisect the highest offered rate with zero drops (Fig. 5c protocol).
 
@@ -726,6 +810,10 @@ def find_zero_loss_rate(
     probe replays under the control plane (fresh runtime, fresh
     telemetry), so the reported rate is the zero-loss throughput of the
     closed-loop system — rebalancing transients included.
+
+    `obs` attaches only to the final *executing* verification replay —
+    the bisection probes stay untraced (tracing a probe would record
+    thousands of spans for runs whose only output is a drop count).
     """
     def ring_guard(events_bound: int, scope: str) -> None:
         """The ring is per worker queue: the (sub-)trace offered to a
@@ -788,6 +876,6 @@ def find_zero_loss_rate(
             hi = mid
     final = replay(
         stream, lambda: make_runtime(True), lo, service,
-        ring_capacity=ring_capacity, control=control,
+        ring_capacity=ring_capacity, control=control, obs=obs,
     )
     return lo, final

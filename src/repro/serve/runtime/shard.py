@@ -94,8 +94,25 @@ class AggregateMetrics:
         self.parts = parts
         self.active = active if active is not None else [True] * len(parts)
 
+    def registry(self, per_shard: bool = True):
+        """The fleet `MetricsRegistry` (DESIGN.md §11.1): every shard's
+        block merged order-independently into one namespace, with
+        ``shard{i}.``-prefixed per-shard columns alongside the fleet
+        totals unless `per_shard=False`."""
+        from repro.serve.obs.registry import MetricsRegistry
+
+        return MetricsRegistry.merge(
+            [p.to_registry() for p in self.parts],
+            prefixes=[f"shard{i}." for i in range(len(self.parts))]
+            if per_shard else None,
+        )
+
     def merged(self) -> RuntimeMetrics:
-        return RuntimeMetrics.merged(self.parts)
+        """Summed fleet block, derived through the one merge path: the
+        per-shard registries fold via `MetricsRegistry.merge` and project
+        back to a `RuntimeMetrics` (bit-identical to per-field sums —
+        asserted by tests/test_obs.py)."""
+        return RuntimeMetrics.from_registry(self.registry(per_shard=False))
 
     @property
     def drops(self) -> int:
@@ -311,6 +328,12 @@ class ShardedRuntime:
         self.shards.append(StreamingRuntime(self.pipeline, **self._worker_kwargs))
         self.active.append(True)
         self.n_shards += 1
+        # late workers inherit the fleet's observability hooks (their
+        # spans must carry their own shard pid)
+        d0, dn = self.shards[0].dispatcher, self.shards[-1].dispatcher
+        dn.tracer = d0.tracer
+        dn.drift = d0.drift
+        dn.trace_pid = self.n_shards - 1
         return self.n_shards - 1
 
     def migrate_buckets(self, moves: dict, now: float) -> dict:

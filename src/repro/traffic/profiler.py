@@ -227,6 +227,7 @@ class TrafficProfiler:
         fused: bool = True,
         n_shards: int = 1,
         control=None,
+        obs=None,
     ):
         """Zero-loss throughput measured through the streaming runtime.
 
@@ -255,6 +256,11 @@ class TrafficProfiler:
         measurement runs under the adaptive control plane — dynamic RETA
         rebalancing and friends — instead of the static fleet
         (DESIGN.md §9).
+
+        Pass an `Observability` bundle as `obs` to instrument the final
+        zero-loss verification replay (tracing, drift, fleet registry,
+        audit — DESIGN.md §11); bisection probes stay uninstrumented so
+        the bundle captures exactly one run.
         """
         from repro.serve.runtime import (
             PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
@@ -322,6 +328,7 @@ class TrafficProfiler:
             stream, make_runtime, service,
             iters=self.bisect_iters if bisect_iters is None else bisect_iters,
             ring_capacity=ring_capacity, verbose=verbose, control=control,
+            obs=obs,
         )
         self.wallclock["measure_cost"] += time.perf_counter() - t0
         return stats.offered_gbps, stats
