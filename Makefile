@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-runtime bench-compare tune-smoke trace-smoke example-stream \
-	example-control example-tune
+	bench-smoke-reuse bench-runtime bench-compare tune-smoke trace-smoke \
+	example-stream example-control example-tune
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -37,6 +37,14 @@ bench-smoke-zipf:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke --shards 4 \
 		--scenario zipf --skew-gate \
 		--out results/BENCH_runtime_zipf.json
+
+# prediction-reuse gate (DESIGN.md §12): zipf 4-shard zero-loss A/B with
+# the drift-gated reuse path on vs off, same calibration and stream.
+# Fails unless reuse wins by >= 1.5x with zero drops on both arms and
+# threshold-0 predictions stay bit-identical to the non-reuse path
+bench-smoke-reuse:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario zipf \
+		--min-reuse-speedup 1.5
 
 # observability smoke (DESIGN.md §11): one instrumented 4-shard zipf
 # replay under the control plane — Chrome trace + stage breakdown +

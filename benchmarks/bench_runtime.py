@@ -257,6 +257,170 @@ def run_traced(trace_path, shards: int = 4, scenario: str = "zipf",
     return doc
 
 
+REUSE_BENCH = "BENCH_runtime_zipf.json"
+
+
+def run_reuse_gate(min_reuse_speedup: float = 0.0, smoke: bool = False,
+                   shards: int = 4, out_path: pathlib.Path | None = None,
+                   verbose: bool = True) -> dict:
+    """A/B the drift-gated prediction-reuse fast path under zipf traffic
+    (DESIGN.md §12) and write `results/BENCH_runtime_zipf.json`.
+
+    Three measurements against one zipf trace and one 4-shard fleet
+    configuration:
+
+    - **off**: reuse disabled — the PR 6 serving path, calibrated with
+      the honest warm tracker cost (`calibrate_warm=True`, not the
+      legacy 0.25x guess, so the comparison cannot win by flattering
+      the baseline);
+    - **on**: reuse enabled (drift threshold 0.05, refresh every 64
+      packets), same honest calibration — frozen packets charged the
+      measured amortized fold cost, refreshes charged per drift check;
+    - **parity**: an *executing* replay at drift threshold 0 (every
+      refresh re-infers) whose per-flow predictions must be bit-identical
+      to an executing reuse-off replay — the semantics guardrail that
+      keeps the fast path an optimization, not a model change.
+
+    `min_reuse_speedup` gates on/off zero-loss throughput (0 disables);
+    both arms must also report zero drops at their reported rate.
+    """
+    import numpy as np
+
+    from repro.core.search_space import FeatureRep
+    from repro.serve.runtime import (
+        PacketStream, ReuseConfig, ServiceModel, ShardedRuntime,
+        find_zero_loss_rate, replay,
+    )
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    t0 = time.perf_counter()
+    # smoke shrinks the flow count, not the elephants: reuse pays off on
+    # the post-classification tail of long flows, so max_pkts is the one
+    # knob that must stay at full scale for the A/B to mean anything
+    n_flows, max_pkts = (150, 4000) if smoke else (600, 4000)
+    bisect_iters = 6 if smoke else 8
+    drift_threshold, refresh_every = 0.1, 256
+    ds = make_scenario_dataset("app-class", "zipf", n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=8)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    pipe = build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    ring_capacity = max(64, min(6144, stream.n_events // 6))
+
+    # prompt-classification config (both arms, so the A/B stays fair):
+    # reuse only pays off once flows are classified and frozen, and at
+    # zero-loss rates the whole trace spans ~0.1 virtual seconds — a
+    # 64-flow batch with the default 50ms flush timeout would leave most
+    # flows READY (tracked at full eager-aggregate cost) for the bulk of
+    # the replay, measuring classification latency instead of reuse.
+    def make_runtime(ru):
+        def mk(execute):
+            return ShardedRuntime(pipe, n_shards=shards, capacity=2048,
+                                  max_batch=8, flush_timeout_s=2e-4,
+                                  execute=execute, reuse=ru)
+        return mk
+
+    arms = {}
+    for tag, ru in (
+        ("off", None),
+        ("on", ReuseConfig(enabled=True, drift_threshold=drift_threshold,
+                           refresh_every=refresh_every)),
+    ):
+        mk = make_runtime(ru)
+        # reps=5: the warm per-class constants decide the A/B verdict and
+        # measure() keeps the best-of-reps minimum, so extra reps strictly
+        # tighten the noise floor on shared machines
+        service = ServiceModel.measure(mk(True), stream, n_pkt_sample=16000,
+                                       reps=5, calibrate_warm=True)
+        pps, stats = find_zero_loss_rate(
+            stream, mk, service, iters=bisect_iters,
+            ring_capacity=ring_capacity)
+        m = stats.metrics
+        arms[tag] = {
+            "zero_loss_pps": round(pps, 1),
+            "zero_loss_gbps": round(stats.offered_gbps, 4),
+            "drops": stats.drops,
+            "pkt_track_ns": round(service.pkt_track_ns, 1),
+            "pkt_frozen_ns": (None if service.pkt_frozen_ns is None
+                              else round(service.pkt_frozen_ns, 1)),
+            "reuse_hits": m.reuse_hits,
+            "refreshes": m.refreshes,
+            "forced_reinfer": m.forced_reinfer,
+        }
+        if verbose:
+            print(f"# zipf {shards}-shard reuse={tag}: "
+                  f"{pps:,.0f} pps ({stats.offered_gbps:.3f} Gbps), "
+                  f"drops={stats.drops}, track={service.pkt_track_ns:.0f}ns, "
+                  f"frozen={service.pkt_frozen_ns}")
+
+    # parity: threshold 0 forces re-inference at every refresh, and results
+    # keep first-prediction-wins — predictions must be bit-identical to the
+    # reuse-off executing replay
+    svc = ServiceModel(pkt_accum_ns=800.0, pkt_track_ns=200.0,
+                       bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+                       gather_ns_per_flow=200.0, pkt_frozen_ns=100.0,
+                       source="synthetic")
+    base = replay(stream, lambda: make_runtime(None)(True),
+                  stream.base_pps, svc, ring_capacity=ring_capacity)
+    thr0 = replay(stream, lambda: make_runtime(
+        ReuseConfig(enabled=True, drift_threshold=0.0,
+                    refresh_every=refresh_every))(True),
+        stream.base_pps, svc, ring_capacity=ring_capacity)
+    parity_ok = (
+        set(base.predictions) == set(thr0.predictions)
+        and all(np.array_equal(base.predictions[k], thr0.predictions[k])
+                for k in base.predictions)
+    )
+    if verbose:
+        print(f"# threshold-0 bit-parity: {parity_ok} "
+              f"({len(base.predictions)} flows)")
+
+    speedup = (arms["on"]["zero_loss_pps"]
+               / max(arms["off"]["zero_loss_pps"], 1e-9))
+    doc = {
+        "bench": "runtime_zero_loss_reuse",
+        "smoke": smoke,
+        "config": {"scenario": "zipf", "shards": shards, "n_flows": n_flows,
+                   "max_pkts": max_pkts, "events": stream.n_events,
+                   "bisect_iters": bisect_iters,
+                   "ring_capacity": ring_capacity,
+                   "drift_threshold": drift_threshold,
+                   "refresh_every": refresh_every},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "arms": arms,
+        "reuse_speedup": round(speedup, 3),
+        "threshold0_bit_identical": bool(parity_ok),
+        "zero_drops_at_reported_rate": (arms["off"]["drops"] == 0
+                                        and arms["on"]["drops"] == 0),
+    }
+    from .common import write_datapoint
+
+    path = write_datapoint(doc, out_path, name=REUSE_BENCH)
+    if verbose:
+        print(f"# wrote {path} (wall {doc['wall_s']:.1f}s, "
+              f"reuse speedup {speedup:.2f}x)")
+    if not parity_ok:
+        print("FAIL: threshold-0 predictions diverge from reuse-off",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not doc["zero_drops_at_reported_rate"]:
+        print("FAIL: drops at reported zero-loss rate", file=sys.stderr)
+        raise SystemExit(1)
+    if min_reuse_speedup > 0 and speedup < min_reuse_speedup:
+        print(f"FAIL: reuse speedup {speedup:.2f}x < "
+              f"{min_reuse_speedup:.2f}x floor", file=sys.stderr)
+        raise SystemExit(1)
+    if verbose and min_reuse_speedup > 0:
+        print(f"OK: reuse speedup above {min_reuse_speedup:.2f}x floor")
+    return doc
+
+
 def _shares(stage_seconds: dict) -> tuple:
     total = sum(stage_seconds.values()) if stage_seconds else 0.0
     if total <= 0:
@@ -350,7 +514,20 @@ if __name__ == "__main__":
                    "metrics-snapshot, and audit-log artifacts in results/")
     p.add_argument("--trace-sample", type=float, default=1.0,
                    help="flow sampling rate for --trace (default: all flows)")
+    p.add_argument("--min-reuse-speedup", type=float, default=None,
+                   metavar="R", help="run the prediction-reuse A/B gate "
+                   "instead of the figure (DESIGN.md §12): measure zipf "
+                   "zero-loss throughput with reuse off and on, assert "
+                   "threshold-0 bit-parity + zero drops, fail if on/off "
+                   "speedup < R (0 measures without gating); writes "
+                   "results/BENCH_runtime_zipf.json")
     args = p.parse_args()
+    if args.min_reuse_speedup is not None:
+        run_reuse_gate(min_reuse_speedup=args.min_reuse_speedup,
+                       smoke=args.smoke,
+                       shards=args.shards if args.shards > 1 else 4,
+                       out_path=args.out)
+        raise SystemExit(0)
     if args.trace is not None:
         run_traced(args.trace,
                    shards=args.shards if args.shards > 1 else 4,

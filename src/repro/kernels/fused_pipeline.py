@@ -41,33 +41,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_forest_infer", "fused_pipeline_call"]
+__all__ = ["fused_agg_infer", "fused_forest_infer", "fused_pipeline_call"]
 
 
-def _fused_kernel(
-    ts_ref, size_ref, dir_ref, ttl_ref, win_ref, flags_ref, meta_ref,
-    f_ref, t_ref, l_ref, o_ref,
-    *, plan, depth: int, forest_depth: int, n_trees: int, block_t: int,
-    rescale: float,
-):
-    from repro.traffic.extraction import emit_feature_columns
+def _traverse(x, feat, thr, leaf, *, forest_depth: int, n_trees: int,
+              block_t: int, rescale: float):
+    """Dense level-order forest traversal over an in-register feature tile.
 
-    ts = ts_ref[...]            # (bn, P) float32
-    meta = meta_ref[...]        # (bn, 4) float32: flow_len, proto, s/d_port
-    cols = emit_feature_columns(
-        plan,
-        ts=ts, size=size_ref[...], direction=dir_ref[...], ttl=ttl_ref[...],
-        winsize=win_ref[...], flags=flags_ref[...], flow_len=meta[:, 0],
-        proto=meta[:, 1], s_port=meta[:, 2], d_port=meta[:, 3], depth=depth,
-    )
-    x = jnp.stack(cols, axis=1)                 # (bn, F) — in VMEM only
-
-    feat = f_ref[...]                           # (T, NI)
-    thr = t_ref[...]
-    leaf = l_ref[...]                           # (T, NL, K)
+    Shared by the window kernel and the aggregate kernel: bit-parity
+    between the two entries (and with `ops.forest_infer`) rests on both
+    tracing this exact block order, vote normalization, and rescale."""
     bn = x.shape[0]
     K = leaf.shape[2]
-
     acc = jnp.zeros((bn, K), jnp.float32)
     for j0 in range(0, n_trees, block_t):
         fj = feat[j0:j0 + block_t]              # static slices: (bt, NI)
@@ -95,7 +80,54 @@ def _fused_kernel(
             leaf_idx[:, :, None, None], axis=2,
         )[:, :, 0, :]                           # (bn, bt, K)
         acc = acc + votes.sum(axis=1) / n_trees
-    o_ref[...] = acc * rescale
+    return acc * rescale
+
+
+def _fused_kernel(
+    ts_ref, size_ref, dir_ref, ttl_ref, win_ref, flags_ref, meta_ref,
+    f_ref, t_ref, l_ref, o_ref,
+    *, plan, depth: int, forest_depth: int, n_trees: int, block_t: int,
+    rescale: float,
+):
+    from repro.traffic.extraction import emit_feature_columns
+
+    ts = ts_ref[...]            # (bn, P) float32
+    meta = meta_ref[...]        # (bn, 4) float32: flow_len, proto, s/d_port
+    cols = emit_feature_columns(
+        plan,
+        ts=ts, size=size_ref[...], direction=dir_ref[...], ttl=ttl_ref[...],
+        winsize=win_ref[...], flags=flags_ref[...], flow_len=meta[:, 0],
+        proto=meta[:, 1], s_port=meta[:, 2], d_port=meta[:, 3], depth=depth,
+    )
+    x = jnp.stack(cols, axis=1)                 # (bn, F) — in VMEM only
+    o_ref[...] = _traverse(
+        x, f_ref[...], t_ref[...], l_ref[...],
+        forest_depth=forest_depth, n_trees=n_trees, block_t=block_t,
+        rescale=rescale,
+    )
+
+
+def _agg_kernel(
+    agg_ref, meta_ref, f_ref, t_ref, l_ref, o_ref,
+    *, plan, forest_depth: int, n_trees: int, block_t: int, rescale: float,
+):
+    """Incremental entry (DESIGN.md §12): feature columns from the compact
+    per-flow aggregate block instead of the raw packet window — a
+    ``(bn, AGG_WIDTH)`` tile replaces six ``(bn, P[, 8])`` packet tensors,
+    so a refresh batch moves ~53 floats per flow regardless of how long
+    the flow has lived."""
+    from repro.traffic.extraction import emit_agg_features
+
+    agg = agg_ref[...]          # (bn, AGG_WIDTH) float32
+    meta = meta_ref[...]        # (bn, 3) float32: proto, s_port, d_port
+    cols = emit_agg_features(
+        plan, agg, proto=meta[:, 0], s_port=meta[:, 1], d_port=meta[:, 2])
+    x = jnp.stack(cols, axis=1)
+    o_ref[...] = _traverse(
+        x, f_ref[...], t_ref[...], l_ref[...],
+        forest_depth=forest_depth, n_trees=n_trees, block_t=block_t,
+        rescale=rescale,
+    )
 
 
 def fused_pipeline_call(
@@ -197,5 +229,87 @@ def fused_forest_infer(
         ts, size, direction.astype(jnp.float32), ttl, winsize,
         flags.astype(jnp.float32), meta, feature, threshold, leaf,
         plan=plan, depth=depth, forest_depth=forest_depth,
+        block_n=block_n, block_t=block_t, interpret=interpret,
+    )
+
+
+def fused_agg_call(
+    agg, meta, feature, threshold, leaf,
+    *, plan, forest_depth: int,
+    block_n: int = 256, block_t: int = 8, interpret: bool = False,
+):
+    """Raw pallas_call for the aggregate entry: one launch over flow tiles
+    of the compact ``(N, AGG_WIDTH)`` running-statistic block. Pads the
+    flow axis with all-zero rows (a zero aggregate has every count at 0,
+    so the emitter's masked reductions yield a defined all-zero feature
+    row) and the tree axis with pass-through trees, exactly as the window
+    entry does."""
+    N, W = agg.shape
+    T, NI = feature.shape
+    NL, K = leaf.shape[1], leaf.shape[2]
+    bn = min(block_n, N)
+    bt = min(block_t, T)
+
+    rem_n = (-N) % bn
+    if rem_n:
+        agg = jnp.pad(agg, ((0, rem_n), (0, 0)))
+        meta = jnp.pad(meta, ((0, rem_n), (0, 0)))
+    from .tree_infer import pad_forest_blocks
+
+    feature, threshold, leaf, rem_t = pad_forest_blocks(
+        feature, threshold, leaf, bt)
+    rescale = (T + rem_t) / T if rem_t else 1.0
+
+    kern = functools.partial(
+        _agg_kernel, plan=plan, forest_depth=forest_depth,
+        n_trees=T + rem_t, block_t=bt, rescale=rescale,
+    )
+
+    def tile(i):
+        return (i, 0)
+
+    def whole(i):
+        return (0, 0)
+
+    out = pl.pallas_call(
+        kern,
+        grid=((N + rem_n) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, W), tile),            # aggregate block
+            pl.BlockSpec((bn, 3), tile),            # proto, s_port, d_port
+            pl.BlockSpec((T + rem_t, NI), whole),   # forest: resident
+            pl.BlockSpec((T + rem_t, NI), whole),
+            pl.BlockSpec((T + rem_t, NL, K), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, K), tile),
+        out_shape=jax.ShapeDtypeStruct((N + rem_n, K), jnp.float32),
+        interpret=interpret,
+    )(agg, meta, feature, threshold, leaf)
+    return out[:N]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "forest_depth", "block_n", "block_t",
+                     "interpret"),
+)
+def fused_agg_infer(
+    agg, proto, s_port, d_port,
+    feature, threshold, leaf,
+    *, plan, forest_depth: int,
+    block_n: int = 256, block_t: int = 8, interpret: bool | None = None,
+):
+    """Jit'd incremental pipeline entry: aggregate rows -> class
+    probabilities, one launch. The refresh path is low-rate (one batch per
+    `refresh_every` packets of frozen traffic), so inputs are not donated:
+    the host-side staging block is reused synchronously by the dispatcher.
+    """
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    meta = jnp.stack([proto, s_port, d_port], axis=1)
+    return fused_agg_call(
+        agg.astype(jnp.float32), meta, feature, threshold, leaf,
+        plan=plan, forest_depth=forest_depth,
         block_n=block_n, block_t=block_t, interpret=interpret,
     )

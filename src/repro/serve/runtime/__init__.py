@@ -19,7 +19,13 @@ tables/dispatch/metrics with an aggregate view, and sharded zero-loss
 replay where a drop on any shard fails the trial — bit-identical
 predictions to the single-worker path by construction.
 """
-from .dispatch import BatchRecord, MicroBatchDispatcher, StreamingRuntime, next_bucket
+from .dispatch import (
+    BatchRecord,
+    MicroBatchDispatcher,
+    ReuseConfig,
+    StreamingRuntime,
+    next_bucket,
+)
 from .flow_table import (
     FlowStatus,
     FlowTable,
@@ -46,6 +52,7 @@ __all__ = [
     "MicroBatchDispatcher",
     "PacketStream",
     "ReplayStats",
+    "ReuseConfig",
     "RuntimeMetrics",
     "ServiceModel",
     "ShardedRuntime",

@@ -43,13 +43,46 @@ from typing import Optional
 
 import numpy as np
 
+from repro.traffic.extraction import (
+    AGG_WIDTH,
+    emit_agg_features,
+    plan_is_incremental,
+    stats_plan,
+)
 from repro.traffic.pipeline import ServingPipeline
 from repro.traffic.synth import TrafficDataset
 
 from .flow_table import FlowStatus, FlowTable
 from .metrics import RuntimeMetrics
 
-__all__ = ["BatchRecord", "MicroBatchDispatcher", "StreamingRuntime", "next_bucket"]
+__all__ = [
+    "BatchRecord",
+    "MicroBatchDispatcher",
+    "ReuseConfig",
+    "StreamingRuntime",
+    "next_bucket",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReuseConfig:
+    """Drift-gated prediction reuse for long-lived flows (DESIGN.md §12).
+
+    A PREDICTED flow that keeps receiving packets is *frozen*: ingest
+    updates only its incremental aggregates, and every ``refresh_every``
+    packets the dispatcher re-emits its feature vector from those
+    aggregates and compares it against the anchor snapped at
+    classification time. The flow is re-inferred only when the relative
+    drift of any feature exceeds ``drift_threshold``; otherwise the cached
+    prediction is reused. ``drift_threshold == 0`` forces re-inference at
+    every refresh — predictions stay bit-identical to the non-reuse path
+    (first prediction wins either way; refreshes land in
+    ``live_predictions``, never in ``results``).
+    """
+
+    enabled: bool = True
+    drift_threshold: float = 0.05
+    refresh_every: int = 64
 
 
 def next_bucket(n: int, min_bucket: int, max_batch: int) -> int:
@@ -152,9 +185,11 @@ class BatchRecord:
     flush_ts: float            # when the batch left the queue
     bucket: int                # padded batch size actually submitted
     n_real: int
-    reason: str                # "full" | "timeout" | "drain" | "migrate" | "swap"
+    reason: str                # "full" | "timeout" | "drain" | "migrate" | "swap" | "refresh"
     flush_idx: int = -1        # triggering packet index within an ingest block
     shard: int = 0             # owning worker under a ShardedRuntime
+    n_checked: int = 0         # reuse: frozen flows whose drift was evaluated
+    n_anchor: int = 0          # reuse: anchors snapped/re-snapped by this batch
     probs: Optional[object] = None   # in-flight device array
     preds: Optional[np.ndarray] = None
     # flow ids sampled into the trace (the replay clock closes their
@@ -175,6 +210,7 @@ class MicroBatchDispatcher:
         max_pending: int = 2,
         execute: bool = True,
         metrics: RuntimeMetrics | None = None,
+        reuse: ReuseConfig | None = None,
     ):
         if max_batch & (max_batch - 1) or min_bucket & (min_bucket - 1):
             raise ValueError("max_batch and min_bucket must be powers of two")
@@ -186,12 +222,20 @@ class MicroBatchDispatcher:
         self.max_pending = max_pending
         self.execute = execute
         self.metrics = metrics if metrics is not None else table.metrics
+        self.reuse = reuse  # active (already plan-gated) config, or None
+        self._agg_plan = (
+            stats_plan(pipeline.rep.features) if reuse is not None else None)
+        self._agg_arenas: dict[int, tuple] = {}
         self._queue = _ReadyQueue()
         self._pending: deque[BatchRecord] = deque()
         self._arenas: dict[int, list[TrafficDataset]] = {}
         self._arena_turn: dict[int, int] = {}
         self._flag_scratch: dict[int, np.ndarray] = {}
         self.results: dict[int, object] = {}  # flow_id -> predicted class
+        # refreshed predictions for still-live frozen flows: `results` keeps
+        # first-prediction-wins semantics (bit-identical to non-reuse runs),
+        # so drift-triggered re-inferences land here instead
+        self.live_predictions: dict[int, object] = {}
         self.records: list[BatchRecord] = []
         # observability hooks (repro.serve.obs): attribute injection, off
         # by default — the untraced hot path pays one `is not None` test
@@ -348,9 +392,141 @@ class MicroBatchDispatcher:
                 self._resolve(self._pending.popleft())
             rec.probs = self.pipeline.predict_async(ds)
             self._pending.append(rec)
+        if self.reuse is not None and n:
+            # snap the drift anchor at classification time, before
+            # mark_predicted: slots that recycle (FIN already seen) get the
+            # anchor cleared again by `_clear_slot`, so only flows that
+            # actually stay resident carry one
+            self._snap_anchors(slots)
+            rec.n_anchor = n
         # slots are safe to reuse once gathered (or immediately in timing-only
         # mode): finished flows recycle now, the rest become PREDICTED
         self.table.mark_predicted(slots)
+        self.records.append(rec)
+        return rec
+
+    # -- drift-gated prediction reuse (DESIGN.md §12) ------------------------
+
+    def _agg_features(self, slots: np.ndarray) -> np.ndarray:
+        """Feature matrix (n, F) float32 emitted from the incremental
+        aggregates — same `stats_plan` columns the window path computes."""
+        t = self.table
+        if t._abuf_n and t._ab_has[slots].any():
+            # packets of these slots may still be staged in the fold arena
+            # (every packet of a reuse table defers): their aggregates must
+            # be current before anchoring or drift-checking against them
+            t.flush_agg()
+        cols = emit_agg_features(
+            self._agg_plan, t.agg[slots],
+            proto=t.proto[slots], s_port=t.s_port[slots],
+            d_port=t.d_port[slots],
+        )
+        return np.stack([np.asarray(c, np.float32) for c in cols], axis=1)
+
+    def _snap_anchors(self, slots: np.ndarray) -> np.ndarray:
+        feats = self._agg_features(slots)
+        t = self.table
+        t.anchor[slots] = feats
+        t.anchor_valid[slots] = True
+        return feats
+
+    def _agg_arena(self, bucket: int) -> tuple:
+        """Padded staging block for `predict_agg`. Pad rows stay all-zero:
+        a zero aggregate row has every count at 0, so the emitter's masked
+        reductions produce a well-defined all-zero feature row (discarded
+        after finalize). No rotation: refresh batches resolve synchronously."""
+        ar = self._agg_arenas.get(bucket)
+        if ar is None:
+            ar = (
+                np.zeros((bucket, AGG_WIDTH), np.float64),
+                np.zeros(bucket, np.float32),
+                np.zeros(bucket, np.float32),
+                np.zeros(bucket, np.float32),
+            )
+            self._agg_arenas[bucket] = ar
+        return ar
+
+    def flush_refresh_all(
+        self, slots: np.ndarray, now: float
+    ) -> list[BatchRecord]:
+        """Chunk a refresh backlog to `max_batch`-sized batches. The drift
+        decision is per-slot, so splitting never changes which flows
+        re-infer — it only keeps each batch inside the arena/bucket bound
+        (a cadence burst can make more flows due than one batch holds)."""
+        return [
+            self.flush_refresh(slots[i:i + self.max_batch], now)
+            for i in range(0, len(slots), self.max_batch)
+        ]
+
+    def flush_refresh(self, slots: np.ndarray, now: float) -> BatchRecord:
+        """Evaluate drift for frozen flows whose refresh cadence fired and
+        re-infer only the ones past the threshold (threshold 0 ⇒ all).
+
+        Refreshed predictions go to `live_predictions` — `results` keeps
+        first-prediction-wins, so predictions are bit-identical to the
+        non-reuse path at any threshold. Anchors re-snap for every
+        re-inferred flow in both execute modes, keeping the drift decision
+        sequence execute-invariant (the replay's timing-only admission
+        probe must walk the same refresh schedule as the executing run)."""
+        cfg = self.reuse
+        t = self.table
+        k = len(slots)
+        feats = self._agg_features(slots)
+        anc = t.anchor[slots]
+        valid = t.anchor_valid[slots]
+        denom = np.maximum(np.abs(anc, dtype=np.float64), 1e-6)
+        drift = (np.abs(feats.astype(np.float64) - anc) / denom).max(axis=1)
+        re_inf = (~valid) | (drift >= cfg.drift_threshold)
+        n_re = int(re_inf.sum())
+
+        m = self.metrics
+        m.reuse_hits += k - n_re
+        if cfg.drift_threshold <= 0.0:
+            m.forced_reinfer += n_re
+        else:
+            m.refreshes += n_re
+
+        fids = t.ctrl["flow_id"][slots].copy()
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            keep = tr.sample_mask(fids)
+            pid = self.trace_pid
+            for name, mask in (("reuse", keep & ~re_inf), ("refresh", keep & re_inf)):
+                if mask.any():
+                    tr.flow_mark(name, fids[mask],
+                                 np.full(int(mask.sum()), now), pid=pid)
+
+        bucket = next_bucket(n_re, self.min_bucket, self.max_batch) if n_re else 0
+        rec = BatchRecord(
+            flow_ids=fids[re_inf],
+            ready_ts=np.full(n_re, now),
+            flush_ts=now,
+            bucket=bucket,
+            n_real=n_re,
+            reason="refresh",
+            n_checked=k,
+            n_anchor=n_re,
+        )
+        if n_re:
+            sl_re = slots[re_inf]
+            if self.execute and self.pipeline.supports_agg:
+                agg, proto, sp, dp = self._agg_arena(bucket)
+                agg[:n_re] = t.agg[sl_re]
+                agg[n_re:] = 0.0
+                proto[:n_re] = t.proto[sl_re]
+                proto[n_re:] = 0.0
+                sp[:n_re] = t.s_port[sl_re]
+                sp[n_re:] = 0.0
+                dp[:n_re] = t.d_port[sl_re]
+                dp[n_re:] = 0.0
+                probs = self.pipeline.predict_agg(agg, proto, sp, dp)
+                preds = self.pipeline.finalize(probs)[:n_re]
+                rec.preds = preds
+                for fid, p in zip(rec.flow_ids, preds):
+                    self.live_predictions[int(fid)] = p
+            # re-anchor at the refreshed state so the next drift comparison
+            # is against what was (or would have been) classified now
+            self._snap_anchors(sl_re)
         self.records.append(rec)
         return rec
 
@@ -471,15 +647,25 @@ class StreamingRuntime:
         pkt_depth: Optional[int] = None,
         load_factor: float = 0.5,
         rebuild_tombstone_frac: float = 0.25,
+        reuse: ReuseConfig | None = None,
     ):
         self.pipeline = pipeline
         depth = pkt_depth if pkt_depth is not None else pipeline.rep.depth
         self.metrics = RuntimeMetrics()
+        # the requested config is kept verbatim (hot_swap re-gates it on the
+        # new plan); the *active* config additionally requires every feature
+        # to be incrementally maintainable (no median-style stats)
+        self.reuse_cfg = reuse
+        active = self._gate_reuse(pipeline, reuse)
         self.table = FlowTable(
             capacity, depth, idle_timeout_s=idle_timeout_s,
             load_factor=load_factor,
             rebuild_tombstone_frac=rebuild_tombstone_frac,
             metrics=self.metrics,
+            track_agg=active is not None,
+            reuse=active is not None,
+            refresh_every=active.refresh_every if active is not None else 0,
+            anchor_dim=len(pipeline.rep.features) if active is not None else 0,
         )
         self.dispatcher = MicroBatchDispatcher(
             self.table,
@@ -490,7 +676,21 @@ class StreamingRuntime:
             max_pending=max_pending,
             execute=execute,
             metrics=self.metrics,
+            reuse=active,
         )
+        # per-packet frozen-fast-path mask of the last `ingest_packets`
+        # block (None when reuse is off): the replay clock reads it to
+        # charge frozen packets their cheaper aggregate-update cost
+        self.last_frozen_mask: Optional[np.ndarray] = None
+
+    @staticmethod
+    def _gate_reuse(pipeline: ServingPipeline,
+                    reuse: ReuseConfig | None) -> ReuseConfig | None:
+        if reuse is None or not reuse.enabled:
+            return None
+        if not plan_is_incremental(stats_plan(pipeline.rep.features)):
+            return None
+        return reuse
 
     @property
     def results(self) -> dict:
@@ -539,6 +739,7 @@ class StreamingRuntime:
         B = len(now)
         statuses = np.full(B, int(FlowStatus.TRACKED), np.uint8)
         accumulated = np.zeros(B, bool)
+        frozen = np.zeros(B, bool) if self.table.reuse else None
         recs: list[BatchRecord] = []
         lo = 0
         while lo < B:
@@ -551,10 +752,20 @@ class StreamingRuntime:
             )
             statuses[lo:hi] = st
             accumulated[lo:hi] = acc
+            if frozen is not None and self.table.last_frozen is not None:
+                frozen[lo:hi] = self.table.last_frozen
             for rec in self.dispatcher.ingest_ready(st, slots, now[lo:hi]):
                 rec.flush_idx += lo
                 recs.append(rec)
             lo = hi
+        self.last_frozen_mask = frozen
+        if self.table.reuse and B:
+            due = self.table.take_refresh_due()
+            if due:
+                for rec in self.dispatcher.flush_refresh_all(
+                        np.asarray(due, np.int64), float(now[B - 1])):
+                    rec.flush_idx = B - 1
+                    recs.append(rec)
         return statuses, accumulated, recs
 
     def ingest_packet(
@@ -567,7 +778,13 @@ class StreamingRuntime:
         )
         if status in (FlowStatus.READY, FlowStatus.READY_EOF):
             self.dispatcher.enqueue(slot, now)
-        return status, self.dispatcher.maybe_flush(now)
+        recs = self.dispatcher.maybe_flush(now)
+        if self.table.reuse and self.table._refresh_due:
+            due = self.table.take_refresh_due()
+            if due:
+                recs.extend(self.dispatcher.flush_refresh_all(
+                    np.asarray(due, np.int64), now))
+        return status, recs
 
     def poll(self, now: float) -> list[BatchRecord]:
         """Periodic maintenance: idle eviction + timeout flushes."""
@@ -600,11 +817,18 @@ class StreamingRuntime:
         disp.resolve_pending()
         old = self.table
         depth = pipeline.rep.depth
+        # reuse re-gates on the *new* plan: a swap onto a median-bearing
+        # feature set silently degrades to full recomputation
+        active = self._gate_reuse(pipeline, self.reuse_cfg)
         table = FlowTable(
             old.capacity, depth, idle_timeout_s=old.idle_timeout_s,
             load_factor=old.load_factor,
             rebuild_tombstone_frac=old.rebuild_tombstone_frac,
             metrics=self.metrics,
+            track_agg=active is not None,
+            reuse=active is not None,
+            refresh_every=active.refresh_every if active is not None else 0,
+            anchor_dim=len(pipeline.rep.features) if active is not None else 0,
         )
         from .flow_table import move_slot
 
@@ -612,11 +836,12 @@ class StreamingRuntime:
             table, pipeline, max_batch=disp.max_batch,
             min_bucket=disp.min_bucket, flush_timeout_s=disp.flush_timeout_s,
             max_pending=disp.max_pending, execute=disp.execute,
-            metrics=self.metrics,
+            metrics=self.metrics, reuse=active,
         )
         # predictions, the flush log, and the observability hooks are
         # runtime-lifetime, not pipeline-lifetime: carry them over
         new_disp.results = disp.results
+        new_disp.live_predictions = disp.live_predictions
         new_disp.records = disp.records
         new_disp.tracer = disp.tracer
         new_disp.drift = disp.drift
@@ -631,6 +856,11 @@ class StreamingRuntime:
                 ready.append(ns)
         for ns in ready:
             new_disp.enqueue(ns, now)
+        if table.anchor is not None:
+            # anchors are feature vectors under the *old* plan: invalidate
+            # them all so the first post-swap refresh re-infers and
+            # re-snaps against the new feature set
+            table.anchor_valid[:] = False
         self.table, self.dispatcher, self.pipeline = table, new_disp, pipeline
         recs.extend(new_disp.maybe_flush(now))
         return recs

@@ -31,6 +31,27 @@ import enum
 import numpy as np
 
 from repro.serve.runtime.metrics import RuntimeMetrics
+from repro.traffic.extraction import (
+    AGG_CNT,
+    AGG_DIR_STRIDE,
+    AGG_FAM_BASE,
+    AGG_FIRST_TS,
+    AGG_FLAGS,
+    AGG_HS_ACK,
+    AGG_HS_SYN,
+    AGG_HS_SYNACK,
+    AGG_IAT_CNT,
+    AGG_IAT_M2,
+    AGG_IAT_MAX,
+    AGG_IAT_MIN,
+    AGG_IAT_SUM,
+    AGG_LAST_TS,
+    AGG_TS_MAX,
+    AGG_TS_MIN,
+    AGG_WIDTH,
+    agg_init,
+)
+from repro.traffic.synth import FLAG_NAMES
 
 __all__ = [
     "FlowStatus",
@@ -67,6 +88,19 @@ class FlowStatus(enum.IntEnum):
 # (256, 8) lookup: packed TCP-flag byte -> FLAG_NAMES-ordered uint8 vector.
 _FLAG_LUT = ((np.arange(256, dtype=np.uint16)[:, None] >> np.arange(8)) & 1).astype(
     np.uint8
+)
+
+_SYN_BIT = FLAG_NAMES.index("syn")
+_ACK_BIT = FLAG_NAMES.index("ack")
+_AGG_BIG = 3.4e38  # same sentinel as the extraction emitter's _BIG
+
+# stacked-row layouts for the block aggregate fold (`_agg_update_sorted`):
+# handshake min-timestamp columns and per-direction family SUM offsets, in
+# the row order the fold stacks values (bytes, winsize, ttl)
+_HS_COLS = np.array([AGG_HS_SYN, AGG_HS_SYNACK, AGG_HS_ACK], dtype=np.int64)
+_FAM_COLS = np.array(
+    [AGG_FAM_BASE["bytes"], AGG_FAM_BASE["winsize"], AGG_FAM_BASE["ttl"]],
+    dtype=np.int64,
 )
 
 
@@ -152,6 +186,11 @@ class FlowTable:
         load_factor: float = 0.5,
         rebuild_tombstone_frac: float = 0.25,
         metrics: RuntimeMetrics | None = None,
+        track_agg: bool = False,
+        reuse: bool = False,
+        refresh_every: int = 0,
+        anchor_dim: int = 0,
+        agg_buffer: int = 4096,
     ):
         if capacity <= 0 or pkt_depth <= 0:
             raise ValueError("capacity and pkt_depth must be positive")
@@ -187,6 +226,54 @@ class FlowTable:
         self.s_port = np.zeros(capacity, dtype=np.float32)
         self.d_port = np.zeros(capacity, dtype=np.float32)
 
+        # incremental aggregate state (DESIGN.md §12): one float64 row of
+        # running statistics per slot, updated on every ingest when enabled.
+        # `reuse` additionally activates the frozen fast path for PREDICTED
+        # flows and the seen-counter refresh cadence.
+        self.track_agg = bool(track_agg or reuse)
+        self.reuse = bool(reuse)
+        self.refresh_every = int(refresh_every)
+        self.anchor_dim = int(anchor_dim)
+        if self.track_agg:
+            self._agg_init = agg_init()
+            self.agg = np.tile(self._agg_init, (capacity, 1))
+        else:
+            self._agg_init = None
+            self.agg = None
+        self.anchor = (
+            np.zeros((capacity, anchor_dim), np.float32) if anchor_dim else None
+        )
+        self.anchor_valid = np.zeros(capacity, bool)
+        # per-slot re-tenancy generation: a refresh scheduled for (slot, gen)
+        # is dropped if the slot was cleared (gen bumped) before it drains
+        self.gen = np.zeros(capacity, np.int64)
+        self.refresh_pending = np.zeros(capacity, bool)
+        self._refresh_due: list[tuple[int, int]] = []
+        # per-packet frozen-class mask of the last observe_batch (reuse on):
+        # the replay cost model charges these packets the frozen-path rate
+        self.last_frozen: np.ndarray | None = None
+        self.last1_frozen = False
+        # deferred-fold arena for the frozen fast path (DESIGN.md §12): a
+        # frozen packet costs one buffer append at ingest; the ~hundred-op
+        # aggregate fold runs once per `agg_buffer` packets (chunk-invariant
+        # fold boundaries — appends split exactly at capacity), amortizing
+        # numpy per-op overhead that would otherwise dominate small blocks.
+        # Any reader of a frozen slot's aggregates/tracker fields drains it
+        # first (`flush_agg`): refresh discovery, close, eviction, migration.
+        self._ab_cap = max(1, int(agg_buffer)) if reuse else 0
+        if self.reuse:
+            cap_b = self._ab_cap
+            self._ab_slot = np.zeros(cap_b, np.int64)
+            self._ab_t = np.zeros(cap_b, np.float64)
+            self._ab_rel = np.zeros(cap_b, np.float64)
+            self._ab_size = np.zeros(cap_b, np.float64)
+            self._ab_dir = np.zeros(cap_b, np.int64)
+            self._ab_ttl = np.zeros(cap_b, np.float64)
+            self._ab_win = np.zeros(cap_b, np.float64)
+            self._ab_fb = np.zeros(cap_b, np.int64)
+            self._ab_has = np.zeros(capacity, bool)  # slot has buffered pkts
+        self._abuf_n = 0
+
         # open-addressed index: power-of-two bucket array sized so a full
         # table stays at load <= load_factor (default 0.5)
         n_buckets = 1
@@ -207,14 +294,26 @@ class FlowTable:
 
         Replicates `_probe`'s traversal (linear probing, stored-key
         verification, tombstones skipped) with one numpy step per probe
-        distance across all still-unresolved keys.
+        distance across all still-unresolved keys. Probe distance 0 is
+        unrolled without the pending-index machinery: at sane load
+        factors nearly every key resolves in its home bucket, and this
+        probe sits on the frozen fast path's per-block budget.
         """
         U = len(keys)
-        res = np.full(U, -1, np.int64)
         if U == 0:
-            return res
+            return np.full(U, -1, np.int64)
         b = (keys & np.uint64(self._mask)).astype(np.int64)
-        pending = np.arange(U)
+        s = self._buckets[b]
+        live = s >= 0
+        match = live.copy()
+        if live.any():
+            match[live] = self.ctrl["key"][s[live]] == keys[live]
+        res = np.where(match, s, -1)
+        keep = ~match & (s != _EMPTY)  # tombstone / live mismatch: probe on
+        if not keep.any():
+            return res
+        pending = np.flatnonzero(keep)
+        b[pending] = (b[pending] + 1) & self._mask
         while pending.size:
             s = self._buckets[b[pending]]
             empty = s == _EMPTY
@@ -223,7 +322,7 @@ class FlowTable:
             if live.any():
                 match[live] = self.ctrl["key"][s[live]] == keys[pending[live]]
             res[pending[match]] = s[match]
-            keep = ~(empty | match)  # tombstone / live mismatch: probe on
+            keep = ~(empty | match)
             pending = pending[keep]
             b[pending] = (b[pending] + 1) & self._mask
         return res
@@ -313,22 +412,258 @@ class FlowTable:
         rebuild, and the rebuild must not re-insert the departing slot.
         Payload rows are zeroed so the next tenant starts from padding.
         """
+        if self.reuse and self._abuf_n and self._ab_has[slot]:
+            # fold pending frozen-path packets before the row resets, or a
+            # later drain would resurrect the departed tenant's statistics
+            # into whatever tenant holds the slot then
+            self.flush_agg()
         key = int(self.ctrl["key"][slot])
         self.ctrl["state"][slot] = 0
         self._index_remove(key)
-        self.ctrl["key"][slot] = 0
+        # zero the whole control row, not just key/state: a slot on the
+        # free list holds no trace of its previous tenant, so the audit can
+        # compare recycled slots bitwise against never-used ones
+        self.ctrl[slot] = np.zeros((), dtype=self.ctrl.dtype)[()]
         self.ts[slot] = 0.0
         self.size[slot] = 0.0
         self.direction[slot] = 0
         self.ttl[slot] = 0.0
         self.winsize[slot] = 0.0
         self.flags[slot] = 0
+        # 5-tuple metadata resets too: alloc happens to overwrite these, but
+        # a slot on the free list must hold NO previous tenant's state — the
+        # invariant the aggregate columns below depend on, audited by
+        # tests/test_reuse.py::test_recycle_resets_every_column
+        self.proto[slot] = 0.0
+        self.s_port[slot] = 0.0
+        self.d_port[slot] = 0.0
+        if self.agg is not None:
+            self.agg[slot] = self._agg_init
+        if self.anchor is not None:
+            self.anchor[slot] = 0.0
+        self.anchor_valid[slot] = False
+        self.refresh_pending[slot] = False
+        self.gen[slot] += 1
         self._free.append(slot)
 
     def recycle(self, slot: int) -> None:
         """Return a slot to the free list and clear its payload row."""
         self._clear_slot(slot)
         self.metrics.slots_recycled += 1
+
+    # -- incremental aggregates (DESIGN.md §12) ------------------------------
+
+    def _agg_update1(
+        self, slot, rel_ts, size, direction, ttl, winsize, flags_byte
+    ) -> None:
+        """Scalar Welford update of one slot's aggregate row.
+
+        The reference semantics: the block path (`_agg_update_sorted`,
+        Chan merges) must match this exactly for count/sum/min/max and to
+        ~1e-6 relative for the M2 cells (reassociation only).
+        """
+        a = self.agg[slot]
+        ts = float(rel_ts)
+        b = AGG_DIR_STRIDE * (int(direction) & 1)
+        if ts < a[AGG_TS_MIN]:
+            a[AGG_TS_MIN] = ts
+        if ts > a[AGG_TS_MAX]:
+            a[AGG_TS_MAX] = ts
+        fb = int(flags_byte)
+        a[AGG_FLAGS:AGG_FLAGS + 8] += _FLAG_LUT[fb]
+        syn = (fb >> _SYN_BIT) & 1
+        ack = (fb >> _ACK_BIT) & 1
+        if syn and not ack and ts < a[AGG_HS_SYN]:
+            a[AGG_HS_SYN] = ts
+        if syn and ack and ts < a[AGG_HS_SYNACK]:
+            a[AGG_HS_SYNACK] = ts
+        if ack and not syn and ts < a[AGG_HS_ACK]:
+            a[AGG_HS_ACK] = ts
+        # same-direction inter-arrival (uses the previous LAST_TS, so this
+        # runs before the timestamp cells are advanced). The stored sum
+        # telescopes to last - first: exact by construction, never drifts.
+        prev = a[b + AGG_LAST_TS]
+        if prev > -_AGG_BIG / 2:
+            x = ts - prev
+            n0 = a[b + AGG_IAT_CNT]
+            mean0 = a[b + AGG_IAT_SUM] / n0 if n0 > 0 else 0.0
+            delta = x - mean0
+            n1 = n0 + 1.0
+            a[b + AGG_IAT_CNT] = n1
+            if x < a[b + AGG_IAT_MIN]:
+                a[b + AGG_IAT_MIN] = x
+            if x > a[b + AGG_IAT_MAX]:
+                a[b + AGG_IAT_MAX] = x
+            a[b + AGG_IAT_SUM] = ts - a[b + AGG_FIRST_TS]
+            a[b + AGG_IAT_M2] += delta * (x - a[b + AGG_IAT_SUM] / n1)
+        else:
+            a[b + AGG_FIRST_TS] = ts
+        a[b + AGG_LAST_TS] = ts
+        n0 = a[b + AGG_CNT]
+        n1 = n0 + 1.0
+        a[b + AGG_CNT] = n1
+        for val, fam in (
+            (float(size), AGG_FAM_BASE["bytes"]),
+            (float(winsize), AGG_FAM_BASE["winsize"]),
+            (float(ttl), AGG_FAM_BASE["ttl"]),
+        ):
+            base = b + fam
+            s_old = a[base]
+            mean0 = s_old / n0 if n0 > 0 else 0.0
+            delta = val - mean0
+            s_new = s_old + val
+            a[base] = s_new
+            if val < a[base + 1]:
+                a[base + 1] = val
+            if val > a[base + 2]:
+                a[base + 2] = val
+            a[base + 3] += delta * (val - s_new / n1)
+
+    def _agg_update_sorted(
+        self, fs, g, uniq_g, start, counts, slots_g,
+        rel_ts, size, direction, ttl, winsize, flags_byte,
+    ) -> None:
+        """Block aggregate update over key-sorted packet positions `fs`.
+
+        `fs` must be time-ascending within each key group (the stable sort
+        `fast_apply` already produces). Per-(slot, direction) segment
+        statistics are computed two-pass and folded in with Chan's merge;
+        count/sum/min/max cells are exact vs the scalar path (integer-valued
+        payload fields sum exactly in float64, the iat sum telescopes), M2
+        differs only by reassociation.
+        """
+        agg = self.agg
+        flat = agg.reshape(-1)  # flat view: cell (slot, col) -> slot*W + col
+        W = AGG_WIDTH
+        rel = np.asarray(rel_ts, np.float64)[fs]
+        fb = flags_byte[fs]
+        ends = start + counts - 1
+        agg[slots_g, AGG_TS_MIN] = np.minimum(agg[slots_g, AGG_TS_MIN],
+                                              rel[start])
+        agg[slots_g, AGG_TS_MAX] = np.maximum(agg[slots_g, AGG_TS_MAX],
+                                              rel[ends])
+        flv = _FLAG_LUT[fb].astype(np.float64)
+        agg[slots_g, AGG_FLAGS:AGG_FLAGS + 8] += np.add.reduceat(
+            flv, start, axis=0)
+        syn = (fb >> _SYN_BIT) & 1
+        ack = (fb >> _ACK_BIT) & 1
+        conds = np.stack(((syn == 1) & (ack == 0),
+                          (syn == 1) & (ack == 1),
+                          (ack == 1) & (syn == 0)))
+        seg = np.minimum.reduceat(np.where(conds, rel[None, :], _AGG_BIG),
+                                  start, axis=1)
+        fi_hs = slots_g[None, :] * W + _HS_COLS[:, None]
+        flat[fi_hs] = np.minimum(flat[fi_hs], seg)
+
+        # (slot, direction) segments: stable re-sort keeps time order.
+        # Segment structure is derived from sorted-boundary masks + a
+        # cumsum segment index instead of np.unique/np.repeat, and the
+        # three payload families fold in one stacked (3, n) pass with
+        # flat-index gathers — per-op numpy overhead dominates small
+        # blocks, and this fold IS the frozen fast path.
+        dirb = direction[fs].astype(np.int64) & 1
+        g2 = g * 2 + dirb
+        o2 = np.argsort(g2, kind="stable")
+        g2s = g2[o2]
+        r2 = rel[o2]
+        n2 = g2s.size
+        bnd2 = np.empty(n2, bool)
+        bnd2[0] = True
+        np.not_equal(g2s[1:], g2s[:-1], out=bnd2[1:])
+        s2 = np.flatnonzero(bnd2)
+        c2 = np.diff(np.append(s2, n2))
+        seg2 = np.cumsum(bnd2) - 1  # per-element segment id
+        u2 = g2s[s2]
+        slots2 = slots_g[np.searchsorted(uniq_g, u2 >> 1)]
+        fiB = slots2 * W + (u2 & 1) * AGG_DIR_STRIDE  # flat base per segment
+        nb = c2.astype(np.float64)
+        n_old = flat[fiB + AGG_CNT]
+        n_new = n_old + nb
+        flat[fiB + AGG_CNT] = n_new
+        idx2 = fs[o2]
+        V = np.stack((np.asarray(size, np.float64)[idx2],
+                      np.asarray(winsize, np.float64)[idx2],
+                      np.asarray(ttl, np.float64)[idx2]))
+        sum_b = np.add.reduceat(V, s2, axis=1)
+        mean_b = sum_b / nb[None, :]
+        dif = V - mean_b[:, seg2]
+        m2_b = np.add.reduceat(dif * dif, s2, axis=1)
+        fi = fiB[None, :] + _FAM_COLS[:, None]  # (3, G2) flat SUM-cell index
+        s_old = flat[fi]
+        mean_old = s_old / np.maximum(n_old, 1.0)[None, :]
+        delta = mean_b - mean_old
+        flat[fi] = s_old + sum_b
+        flat[fi + 1] = np.minimum(flat[fi + 1],
+                                  np.minimum.reduceat(V, s2, axis=1))
+        flat[fi + 2] = np.maximum(flat[fi + 2],
+                                  np.maximum.reduceat(V, s2, axis=1))
+        flat[fi + 3] += m2_b + delta * delta * (n_old * nb / n_new)[None, :]
+
+        # inter-arrival: the segment's first sample bridges from the stored
+        # LAST_TS (when one exists); the rest are in-segment diffs
+        prev_last = flat[fiB + AGG_LAST_TS]
+        first_old = flat[fiB + AGG_FIRST_TS]
+        has_prev = prev_last > -_AGG_BIG / 2
+        seg_first = r2[s2]
+        seg_last = r2[s2 + c2 - 1]
+        iv = np.empty(r2.size, np.float64)
+        iv[1:] = r2[1:] - r2[:-1]
+        iv[s2] = seg_first - prev_last
+        validm = np.ones(r2.size, bool)
+        validm[s2] = has_prev
+        nbi = (c2 - 1 + has_prev).astype(np.float64)
+        prev_eff = np.where(has_prev, prev_last, seg_first)
+        # block mean telescopes exactly: (last - effective first) / count
+        mean_b = np.where(nbi > 0, (seg_last - prev_eff) / np.maximum(nbi, 1.0),
+                          0.0)
+        dif = np.where(validm, iv - mean_b[seg2], 0.0)
+        m2_b = np.add.reduceat(dif * dif, s2)
+        n_old_i = flat[fiB + AGG_IAT_CNT]
+        mean_old_i = flat[fiB + AGG_IAT_SUM] / np.maximum(n_old_i, 1.0)
+        n_new_i = n_old_i + nbi
+        delta = mean_b - mean_old_i
+        flat[fiB + AGG_IAT_M2] += np.where(
+            nbi > 0,
+            m2_b + delta * delta * n_old_i * nbi / np.maximum(n_new_i, 1.0),
+            0.0,
+        )
+        flat[fiB + AGG_IAT_CNT] = n_new_i
+        flat[fiB + AGG_IAT_MIN] = np.minimum(
+            flat[fiB + AGG_IAT_MIN],
+            np.minimum.reduceat(np.where(validm, iv, _AGG_BIG), s2))
+        flat[fiB + AGG_IAT_MAX] = np.maximum(
+            flat[fiB + AGG_IAT_MAX],
+            np.maximum.reduceat(np.where(validm, iv, -_AGG_BIG), s2))
+        first_new = np.minimum(first_old, seg_first)
+        flat[fiB + AGG_FIRST_TS] = first_new
+        flat[fiB + AGG_LAST_TS] = seg_last
+        flat[fiB + AGG_IAT_SUM] = np.where(
+            n_new_i > 0, seg_last - first_new, 0.0)
+
+    def _note_refresh(self, slots, old_seen, new_seen) -> None:
+        """Schedule drift checks for slots whose seen counter crossed a
+        refresh_every boundary — chunk-invariant: any split of the same
+        packet sequence schedules the same refreshes."""
+        K = self.refresh_every
+        cross = (old_seen // K) != (new_seen // K)
+        sel = cross & ~self.refresh_pending[slots]
+        for s in slots[sel].tolist():
+            self._refresh_due.append((s, int(self.gen[s])))
+        self.refresh_pending[slots[sel]] = True
+
+    def take_refresh_due(self) -> list[int]:
+        """Drain scheduled drift checks. Entries whose slot was cleared or
+        re-tenanted since scheduling (generation mismatch) or is no longer
+        PREDICTED are dropped — a refresh must never touch another flow."""
+        if not self._refresh_due:
+            return []
+        out = []
+        for s, gen in self._refresh_due:
+            self.refresh_pending[s] = False
+            if self.gen[s] == gen and self.ctrl["state"][s] == 3:
+                out.append(s)
+        self._refresh_due.clear()
+        return out
 
     # -- hot path ------------------------------------------------------------
 
@@ -362,6 +697,7 @@ class FlowTable:
         """`observe` body without the pkts_total bump (observe_batch adds
         the whole block's count up front)."""
         m = self.metrics
+        self.last1_frozen = False
         slot, bucket = self._probe(key)
         if slot < 0:
             if not self._free:
@@ -372,10 +708,26 @@ class FlowTable:
             self.proto[slot] = proto
             self.s_port[slot] = s_port
             self.d_port[slot] = d_port
+        elif self.reuse and self.ctrl["state"][slot] == 3 and not fin:
+            # frozen fast path, scalar cadence: defer the tracker touch
+            # and aggregate update to the shared fold arena
+            m.pkts_tracked += 1
+            self.last1_frozen = True
+            self._ab_append1(slot, t, rel_ts, size, direction, ttl,
+                             winsize, flags_byte)
+            return FlowStatus.TRACKED, slot
+        if self.reuse and self._abuf_n and self._ab_has[slot]:
+            # the eager path below writes seen/last_ts/agg directly: any
+            # staged packets of this slot must fold first or the updates
+            # would land out of arrival order
+            self.flush_agg()
 
         c = self.ctrl[slot]
         c["last_ts"] = t
         c["seen"] += 1
+        if self.track_agg:
+            self._agg_update1(slot, rel_ts, size, direction, ttl, winsize,
+                              flags_byte)
         state = int(c["state"])
         if fin:
             # per-direction FIN: a half-close (one side done, the other
@@ -409,6 +761,15 @@ class FlowTable:
         if closed and state == 3:  # PREDICTED: flow over, reclaim now
             self.recycle(slot)
             return FlowStatus.CLOSED, slot
+        if state == 3 and self.reuse and self.refresh_every > 0:
+            # only FIN-bearing packets of a PREDICTED flow reach here (the
+            # frozen carve above returns early otherwise): keep the eager
+            # seen bump's refresh crossing, matching `fast_apply`'s noting
+            sn = int(c["seen"])
+            K = self.refresh_every
+            if (sn - 1) // K != sn // K and not self.refresh_pending[slot]:
+                self._refresh_due.append((slot, int(self.gen[slot])))
+                self.refresh_pending[slot] = True
         return FlowStatus.TRACKED, slot
 
     def observe_batch(
@@ -453,16 +814,218 @@ class FlowTable:
         Returns ``(statuses, slots, accumulated)`` — per-packet FlowStatus
         values, slot ids (-1 on drop), and whether the packet landed in the
         dense payload (the replay clock's per-packet cost class).
+
+        Under reuse (DESIGN.md §12) the block is first split by a
+        per-packet probe: packets of resident PREDICTED keys with no FIN
+        in the block take the *frozen fast path* — they are staged in the
+        deferred fold arena (`_ab_append`) and their seen/last_ts and
+        aggregate updates land at the next `flush_agg`, amortizing the
+        numpy fold over ~`agg_buffer` packets — and never enter the
+        three-phase machinery; only the remainder pays the general path's
+        per-key partitioning. A PREDICTED key cannot change state
+        mid-block except through a FIN (those keys are excluded whole, and
+        drain any staged state for their slot first), so the split
+        decision at block start is exact, and frozen slots are disjoint
+        from every slot the remainder can touch (no allocation lands on
+        an occupied slot), so processing the carve first preserves the
+        scalar cadence.
         """
         key = np.asarray(key, np.uint64)
         B = len(key)
-        m = self.metrics
-        m.pkts_total += B
+        self.metrics.pkts_total += B
+        self.last_frozen = None
+        if B == 0:
+            return (np.full(0, int(FlowStatus.TRACKED), np.uint8),
+                    np.full(0, -1, np.int64), np.zeros(0, bool))
+        if not self.reuse:
+            return self._observe_general(
+                key, t, rel_ts, size, direction, ttl, winsize, flags_byte,
+                proto, s_port, d_port, flow_id, fin)
+        slots_pp = self._probe_many(key)
+        miss = slots_pp < 0
+        if not miss.any():
+            frzm = self.ctrl["state"][slots_pp] == 3
+            if frzm.all() and not np.asarray(fin, bool).any():
+                # all-frozen lane: the steady state under skewed traffic.
+                # Every packet is a buffer append (slice copies, no
+                # gathers); slots_pp is freshly allocated so it doubles
+                # as the returned slot array
+                self.metrics.pkts_tracked += B
+                self._ab_append_all(slots_pp, t, rel_ts, size, direction,
+                                    ttl, winsize, flags_byte)
+                self.last_frozen = frzm
+                return (np.full(B, int(FlowStatus.TRACKED), np.uint8),
+                        slots_pp, np.zeros(B, bool))
+        else:
+            frzm = ~miss
+            res = np.flatnonzero(frzm)
+            frzm[res] = self.ctrl["state"][slots_pp[res]] == 3
+        if frzm.any():
+            bad = frzm & np.asarray(fin, bool)
+            if bad.any():
+                # a FIN on a predicted key: the whole key group goes to
+                # the general path (close accounting, recycling)
+                badslot = np.zeros(self.capacity, bool)
+                badslot[slots_pp[bad]] = True
+                res = np.flatnonzero(~miss)
+                excl = np.zeros(B, bool)
+                excl[res] = badslot[slots_pp[res]]
+                frzm &= ~excl
+                if self._abuf_n and self._ab_has[slots_pp[bad]].any():
+                    # close accounting needs these slots' statistics current
+                    self.flush_agg()
+        if not frzm.any():
+            out = self._observe_general(
+                key, t, rel_ts, size, direction, ttl, winsize, flags_byte,
+                proto, s_port, d_port, flow_id, fin)
+            self.last_frozen = frzm
+            return out
         statuses = np.full(B, int(FlowStatus.TRACKED), np.uint8)
         slots_out = np.full(B, -1, np.int64)
         accumulated = np.zeros(B, bool)
-        if B == 0:
-            return statuses, slots_out, accumulated
+        frz = np.flatnonzero(frzm)
+        slots_out[frz] = slots_pp[frz]
+        self.metrics.pkts_tracked += frz.size
+        self._ab_append(frz, slots_pp[frz], t, rel_ts, size, direction,
+                        ttl, winsize, flags_byte)
+        rem = np.flatnonzero(~frzm)
+        if rem.size:
+            st, sl, acc = self._observe_general(
+                key[rem], t[rem], rel_ts[rem], size[rem], direction[rem],
+                ttl[rem], winsize[rem], flags_byte[rem], proto[rem],
+                s_port[rem], d_port[rem], flow_id[rem], fin[rem])
+            statuses[rem] = st
+            slots_out[rem] = sl
+            accumulated[rem] = acc
+        self.last_frozen = frzm
+        return statuses, slots_out, accumulated
+
+    def _ab_append1(self, slot, t, rel_ts, size, direction, ttl, winsize,
+                    flags_byte) -> None:
+        """Stage one frozen-path packet in the fold arena (scalar cadence)."""
+        i = self._abuf_n
+        self._ab_slot[i] = slot
+        self._ab_t[i] = t
+        self._ab_rel[i] = rel_ts
+        self._ab_size[i] = size
+        self._ab_dir[i] = direction
+        self._ab_ttl[i] = ttl
+        self._ab_win[i] = winsize
+        self._ab_fb[i] = flags_byte
+        self._ab_has[slot] = True
+        self._abuf_n = i + 1
+        if self._abuf_n == self._ab_cap:
+            self.flush_agg()
+
+    def _ab_append(self, frz, sl, t, rel_ts, size, direction, ttl, winsize,
+                   flags_byte) -> None:
+        """Stage a block's frozen carve in the fold arena.
+
+        Appends split exactly at arena capacity so fold boundaries land on
+        the same packet positions regardless of how the stream was chunked
+        — the scalar cadence and any block cadence stage and fold the same
+        packet sequence at the same points (refresh scheduling and the
+        buffered/current split stay chunk-invariant)."""
+        n = frz.size
+        off = 0
+        while off < n:
+            take = min(n - off, self._ab_cap - self._abuf_n)
+            i = self._abuf_n
+            sel = frz[off:off + take]
+            sls = sl[off:off + take]
+            self._ab_slot[i:i + take] = sls
+            self._ab_t[i:i + take] = t[sel]
+            self._ab_rel[i:i + take] = rel_ts[sel]
+            self._ab_size[i:i + take] = size[sel]
+            self._ab_dir[i:i + take] = direction[sel]
+            self._ab_ttl[i:i + take] = ttl[sel]
+            self._ab_win[i:i + take] = winsize[sel]
+            self._ab_fb[i:i + take] = flags_byte[sel]
+            self._ab_has[sls] = True
+            self._abuf_n = i + take
+            off += take
+            if self._abuf_n == self._ab_cap:
+                self.flush_agg()
+
+    def _ab_append_all(self, sl, t, rel_ts, size, direction, ttl, winsize,
+                       flags_byte) -> None:
+        """`_ab_append` when the whole block is frozen: contiguous slice
+        copies instead of fancy gathers (the steady-state hot path)."""
+        n = sl.size
+        off = 0
+        while off < n:
+            take = min(n - off, self._ab_cap - self._abuf_n)
+            i = self._abuf_n
+            j = i + take
+            p = off + take
+            sls = sl[off:p]
+            self._ab_slot[i:j] = sls
+            self._ab_t[i:j] = t[off:p]
+            self._ab_rel[i:j] = rel_ts[off:p]
+            self._ab_size[i:j] = size[off:p]
+            self._ab_dir[i:j] = direction[off:p]
+            self._ab_ttl[i:j] = ttl[off:p]
+            self._ab_win[i:j] = winsize[off:p]
+            self._ab_fb[i:j] = flags_byte[off:p]
+            self._ab_has[sls] = True
+            self._abuf_n = j
+            off = p
+            if j == self._ab_cap:
+                self.flush_agg()
+
+    def flush_agg(self) -> None:
+        """Fold every arena-staged packet into seen/last_ts and the
+        aggregate columns, in arrival order.
+
+        One stable sort groups the arena by slot (time order preserved
+        within each group); the fold is the same Chan-merge
+        `_agg_update_sorted` the general path uses, so a table that drains
+        here is bit-comparable to one that folded eagerly — exact on every
+        count/sum/min/max cell, with M2 differing only by float merge
+        order (~1e-15 rel). Refresh crossings are detected at fold time
+        from the per-slot seen span."""
+        n = self._abuf_n
+        if not n:
+            return
+        self._abuf_n = 0
+        sl = self._ab_slot[:n]
+        order = np.argsort(sl, kind="stable")
+        sls = sl[order]
+        bnd = np.empty(n, bool)
+        bnd[0] = True
+        np.not_equal(sls[1:], sls[:-1], out=bnd[1:])
+        start = np.flatnonzero(bnd)
+        counts = np.diff(np.append(start, n))
+        slots_g = sls[start]
+        segidx = np.cumsum(bnd) - 1
+        old_seen = self.ctrl["seen"][slots_g].astype(np.int64)
+        new_seen = old_seen + counts
+        self.ctrl["seen"][slots_g] = new_seen
+        self.ctrl["last_ts"][slots_g] = self._ab_t[order[start + counts - 1]]
+        self._agg_update_sorted(
+            order, segidx, np.arange(len(start)), start, counts, slots_g,
+            self._ab_rel[:n], self._ab_size[:n], self._ab_dir[:n],
+            self._ab_ttl[:n], self._ab_win[:n], self._ab_fb[:n])
+        self._ab_has.fill(False)
+        if self.refresh_every > 0:
+            # the arena stages packets of any live flow, but only
+            # PREDICTED flows are on a drift-refresh cadence
+            pred = self.ctrl["state"][slots_g] == 3
+            if pred.any():
+                self._note_refresh(slots_g[pred], old_seen[pred],
+                                   new_seen[pred])
+
+    def _observe_general(
+        self, key, t, rel_ts, size, direction, ttl, winsize, flags_byte,
+        proto, s_port, d_port, flow_id, fin,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The three-phase block machinery (`observe_batch`'s docstring);
+        under reuse it runs on the non-frozen remainder only."""
+        B = len(key)
+        m = self.metrics
+        statuses = np.full(B, int(FlowStatus.TRACKED), np.uint8)
+        slots_out = np.full(B, -1, np.int64)
+        accumulated = np.zeros(B, bool)
 
         uk, firstpos, inv = np.unique(key, return_index=True,
                                       return_inverse=True)
@@ -510,8 +1073,23 @@ class FlowTable:
             slots_out[fs] = np.repeat(slots_g, counts)
 
             # tracker touch: every packet updates seen/last_ts
-            self.ctrl["seen"][slots_g] += counts
-            self.ctrl["last_ts"][slots_g] = t[fs[start + counts - 1]]
+            if self.reuse:
+                # deferred-fold lane for every non-structural packet of a
+                # reuse table, not just frozen ones: seen/last_ts and the
+                # aggregate columns fold in arena order (the structural
+                # scalar path and every agg reader flush first, so per-slot
+                # ordering stays exact). This keeps the pre-classification
+                # phase as cheap as plain tracking — the eager per-chunk
+                # Chan fold is what the arena exists to amortize.
+                self._ab_append(fs, np.repeat(slots_g, counts), t, rel_ts,
+                                size, direction, ttl, winsize, flags_byte)
+            else:
+                self.ctrl["seen"][slots_g] += counts
+                self.ctrl["last_ts"][slots_g] = t[fs[start + counts - 1]]
+                if self.track_agg:
+                    self._agg_update_sorted(fs, g, uniq_g, start, counts,
+                                            slots_g, rel_ts, size, direction,
+                                            ttl, winsize, flags_byte)
 
             # ACTIVE flows accumulate their first (pkt_depth - count) packets
             c0 = self.ctrl["count"][slots_g].astype(np.int64)
@@ -575,6 +1153,7 @@ class FlowTable:
                     slot_of_key = uslot.copy()
                     slot_of_key[nk] = self._probe_many(uk[nk])
             fast_apply(np.flatnonzero(bulk), slot_of_key)
+
         return statuses, slots_out, accumulated
 
     # -- maintenance ---------------------------------------------------------
@@ -607,6 +1186,9 @@ class FlowTable:
         can enqueue them for a late flush. READY flows are left to the
         dispatcher's flush timeout.
         """
+        if self.reuse and self._abuf_n:
+            # idleness reads last_ts, which may still be staged in the arena
+            self.flush_agg()
         state = self.ctrl["state"]
         idle = (now - self.ctrl["last_ts"]) > self.idle_timeout_s
         for s in np.nonzero((state == 3) & idle)[0]:
@@ -624,6 +1206,8 @@ class FlowTable:
 
     def flush_all(self, now: float) -> list[int]:
         """End-of-stream drain: queue every still-active flow with data."""
+        if self.reuse and self._abuf_n:
+            self.flush_agg()
         late = []
         for s in np.nonzero(self.ctrl["state"] == 1)[0]:
             if self.ctrl["count"][s] > 0:
@@ -659,6 +1243,10 @@ def move_slot(src: FlowTable, dst: FlowTable, slot: int) -> int:
     """
     if not dst._free:
         return -1
+    if src.reuse and src._abuf_n and src._ab_has[slot]:
+        # the migrating flow has staged frozen-path packets: fold them on
+        # the source first so ctrl/agg copy the complete statistics
+        src.flush_agg()
     key = int(src.ctrl["key"][slot])
     found, bucket = dst._probe(key)
     if found >= 0:
@@ -681,6 +1269,16 @@ def move_slot(src: FlowTable, dst: FlowTable, slot: int) -> int:
     dst.proto[dslot] = src.proto[slot]
     dst.s_port[dslot] = src.s_port[slot]
     dst.d_port[dslot] = src.d_port[slot]
+    # incremental aggregates are depth-independent whole-lifetime state:
+    # they migrate bit-exactly. Anchors only transfer between same-plan
+    # tables (matching anchor width) — a hot-swap to a different feature
+    # plan clears them on the caller's side instead.
+    if src.agg is not None and dst.agg is not None:
+        dst.agg[dslot] = src.agg[slot]
+    if (src.anchor is not None and dst.anchor is not None
+            and src.anchor.shape[1] == dst.anchor.shape[1]):
+        dst.anchor[dslot] = src.anchor[slot]
+        dst.anchor_valid[dslot] = src.anchor_valid[slot]
     dst._index_insert(key, dslot, bucket)
     src.detach_slot(slot)
     src.metrics.flows_migrated_out += 1

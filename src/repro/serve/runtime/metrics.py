@@ -198,6 +198,9 @@ METRIC_NAMESPACE = {
     "flushes_swap": "dispatch.flushes_swap",
     "flows_predicted": "dispatch.flows_predicted",
     "duplicate_predictions": "dispatch.duplicates",
+    "reuse_hits": "cache.reuse_hits",
+    "refreshes": "cache.refreshes",
+    "forced_reinfer": "cache.forced_reinfer",
 }
 
 
@@ -227,6 +230,10 @@ class RuntimeMetrics:
     flushes_swap: int = 0          # quiesce flush ahead of a pipeline hot-swap
     flows_predicted: int = 0
     duplicate_predictions: int = 0  # re-tenancy fragments, first wins
+    # prediction reuse (DESIGN.md §12)
+    reuse_hits: int = 0            # refresh checks that kept the cached pred
+    refreshes: int = 0             # drift-triggered re-inferences
+    forced_reinfer: int = 0        # threshold-0 re-inferences (parity mode)
     batch_occupancy: list = dataclasses.field(default_factory=list)
     shapes_seen: set = dataclasses.field(default_factory=set)
     latency: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
@@ -315,6 +322,9 @@ class RuntimeMetrics:
             "flushes_drain": self.flushes_drain,
             "flushes_migrate": self.flushes_migrate,
             "flushes_swap": self.flushes_swap,
+            "reuse_hits": self.reuse_hits,
+            "refreshes": self.refreshes,
+            "forced_reinfer": self.forced_reinfer,
             "compile_count": self.compile_count(),
             "batch_occupancy": self.occupancy_stats(),
             "latency": self.latency.summary(),

@@ -199,6 +199,7 @@ class ShardedRuntime:
         pkt_depth: Optional[int] = None,
         load_factor: float = 0.5,
         rebuild_tombstone_frac: float = 0.25,
+        reuse=None,
     ):
         if n_shards < 1:
             raise ValueError(
@@ -242,6 +243,7 @@ class ShardedRuntime:
             pkt_depth=pkt_depth,
             load_factor=load_factor,
             rebuild_tombstone_frac=rebuild_tombstone_frac,
+            reuse=reuse,
         )
         self.shards = [
             StreamingRuntime(pipeline, **self._worker_kwargs)
@@ -259,6 +261,9 @@ class ShardedRuntime:
         # bucket (it stores the asymmetric identity hash, and the raw
         # endpoints needed for the symmetric hash are not payload).
         self._bucket_of_key: dict[int, int] = {}
+        # frozen-fast-path mask of the last facade `ingest_packets` block
+        # (scattered from the per-worker masks; None when reuse is off)
+        self.last_frozen_mask: Optional[np.ndarray] = None
 
     # -- steering ------------------------------------------------------------
 
@@ -513,6 +518,7 @@ class ShardedRuntime:
         B = len(now)
         statuses = np.zeros(B, np.uint8)
         accumulated = np.zeros(B, bool)
+        frozen: Optional[np.ndarray] = None
         recs: list[BatchRecord] = []
         for i, rt in enumerate(self.shards):
             idx = np.flatnonzero(shard == i)
@@ -535,11 +541,16 @@ class ShardedRuntime:
             )
             statuses[idx] = st
             accumulated[idx] = acc
+            if rt.last_frozen_mask is not None:
+                if frozen is None:
+                    frozen = np.zeros(B, bool)
+                frozen[idx] = rt.last_frozen_mask
             for rec in sub:
                 rec.shard = i
                 if rec.flush_idx >= 0:
                     rec.flush_idx = int(idx[rec.flush_idx])
                 recs.append(rec)
+        self.last_frozen_mask = frozen
         return statuses, accumulated, recs
 
     def ingest_steered(

@@ -37,6 +37,10 @@ __all__ = [
     "extraction_fn",
     "stats_plan",
     "emit_feature_columns",
+    "emit_agg_features",
+    "plan_is_incremental",
+    "agg_init",
+    "AGG_WIDTH",
 ]
 
 # python float, not a jnp scalar: weak-typed promotion lands on the same
@@ -213,6 +217,166 @@ def emit_feature_columns(
                 v, m = fields[fam], dir_mask[d]
             c = _STATS[stat](v, m)
         cols.append(c.astype(jnp.float32))
+    return cols
+
+
+# ---------------------------------------------------------------------------
+# incremental aggregate state (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+# Per-slot running statistics maintained by the flow table on every ingest:
+# enough state to reproduce every incrementally-computable `stats_plan`
+# column over the flow's WHOLE lifetime (the live view — deliberately not
+# clipped to the dispatch window, which is what the classification path
+# keeps using). Layout: one float64 row of AGG_WIDTH columns per slot.
+#
+# Per direction d in {0 (src), 1 (dst)} at base d*AGG_DIR_STRIDE:
+#   CNT, then for each of bytes/winsize/ttl: SUM, MIN, MAX, M2 (sum of
+#   squared deviations — Welford on the scalar path, Chan merge on the
+#   block path), then the inter-arrival block (IAT_CNT, IAT_SUM, IAT_MIN,
+#   IAT_MAX, IAT_M2 — the sum telescopes to LAST_TS - FIRST_TS, which is
+#   what keeps it exact), then FIRST_TS/LAST_TS (LAST_TS doubles as the
+#   previous same-direction timestamp for the next iat sample).
+# Globals: TS_MIN/TS_MAX over all valid packets, first-match handshake
+# timestamps (monotone ts => first == min, so they merge commutatively),
+# and the 8 flag counters.
+# Sentinels: min-style cells init to +_BIG, max-style to -_BIG; emission
+# maps "never matched" back to the window emitter's 0.0-on-empty.
+
+AGG_DIR_STRIDE = 20
+AGG_CNT = 0
+AGG_FAM_BASE = {"bytes": 1, "winsize": 5, "ttl": 9}   # +0 SUM +1 MIN +2 MAX +3 M2
+AGG_IAT_CNT = 13
+AGG_IAT_SUM = 14
+AGG_IAT_MIN = 15
+AGG_IAT_MAX = 16
+AGG_IAT_M2 = 17
+AGG_FIRST_TS = 18
+AGG_LAST_TS = 19
+AGG_TS_MIN = 40
+AGG_TS_MAX = 41
+AGG_HS_SYN = 42
+AGG_HS_SYNACK = 43
+AGG_HS_ACK = 44
+AGG_FLAGS = 45
+AGG_WIDTH = 53
+
+_DIR_OF = {"s": 0, "d": 1}
+
+
+def agg_init() -> np.ndarray:
+    """Pristine per-slot aggregate row (the `_clear_slot` reset value)."""
+    v = np.zeros(AGG_WIDTH, np.float64)
+    for d in (0, 1):
+        b = AGG_DIR_STRIDE * d
+        for fb in AGG_FAM_BASE.values():
+            v[b + fb + 1] = _BIG
+            v[b + fb + 2] = -_BIG
+        v[b + AGG_IAT_MIN] = _BIG
+        v[b + AGG_IAT_MAX] = -_BIG
+        v[b + AGG_FIRST_TS] = _BIG
+        v[b + AGG_LAST_TS] = -_BIG
+    v[AGG_TS_MIN] = _BIG
+    v[AGG_TS_MAX] = -_BIG
+    v[AGG_HS_SYN] = _BIG
+    v[AGG_HS_SYNACK] = _BIG
+    v[AGG_HS_ACK] = _BIG
+    return v
+
+
+AGG_INIT = agg_init()
+
+
+def plan_is_incremental(plan: tuple[tuple, ...]) -> bool:
+    """True iff every plan column is computable from the aggregate row.
+
+    Medians are the one window statistic with no bounded incremental
+    form — a plan containing one disables the reuse fast path entirely
+    (the runtime falls back to full-window recomputation everywhere).
+    """
+    return all(not (e[0] == "stat" and e[3] == "med") for e in plan)
+
+
+def emit_agg_features(plan: tuple[tuple, ...], agg, *, proto, s_port, d_port):
+    """Trace the plan's feature columns over (rows, AGG_WIDTH) aggregates.
+
+    The incremental twin of `emit_feature_columns`: same plan, same
+    empty-mask semantics (0.0 when a direction/condition never matched),
+    but reading the flow table's running statistics instead of the raw
+    packet window. Works on numpy arrays (host drift checks, float64) and
+    traced jax arrays (the incremental Pallas kernel and its unfused
+    reference — both trace THIS emitter, which is what makes them
+    bit-identical to each other). Returns float32 (rows,) columns in plan
+    order. Raises on a non-incremental plan entry ("med").
+    """
+    xp = np if isinstance(agg, np.ndarray) else jnp
+
+    def col(i):
+        return agg[:, i]
+
+    def dcol(d, i):
+        return agg[:, AGG_DIR_STRIDE * d + i]
+
+    cnt = {k: dcol(v, AGG_CNT) for k, v in _DIR_OF.items()}
+    n_any = cnt["s"] + cnt["d"]
+    dur = xp.where(n_any > 0, col(AGG_TS_MAX) - col(AGG_TS_MIN), 0.0)
+
+    def fam_stat(d, fam, stat):
+        di = _DIR_OF[d]
+        if fam == "iat":
+            c = dcol(di, AGG_IAT_CNT)
+            cells = {"sum": AGG_IAT_SUM, "min": AGG_IAT_MIN,
+                     "max": AGG_IAT_MAX}
+            m2 = dcol(di, AGG_IAT_M2)
+        else:
+            c = cnt[d]
+            fb = AGG_FAM_BASE[fam]
+            cells = {"sum": fb, "min": fb + 1, "max": fb + 2}
+            m2 = dcol(di, fb + 3)
+        if stat == "sum":
+            return dcol(di, cells["sum"])
+        if stat == "mean":
+            return xp.where(
+                c > 0, dcol(di, cells["sum"]) / xp.maximum(c, 1.0), 0.0)
+        if stat in ("min", "max"):
+            return xp.where(c > 0, dcol(di, cells[stat]), 0.0)
+        if stat == "std":
+            var = m2 / xp.maximum(c, 1.0)
+            return xp.where(c > 0, xp.sqrt(xp.maximum(var, 0.0)), 0.0)
+        raise ValueError(f"stat {stat!r} has no incremental form")
+
+    def hs(i):
+        v = col(i)
+        return xp.where(v < _BIG / 2, v, 0.0)
+
+    meta = {"proto": proto, "s_port": s_port, "d_port": d_port}
+    cols = []
+    for entry in plan:
+        kind = entry[0]
+        if kind == "dur":
+            c = dur
+        elif kind == "meta":
+            c = meta[entry[1]]
+        elif kind == "load":
+            byt = dcol(_DIR_OF[entry[1]], AGG_FAM_BASE["bytes"])
+            c = xp.where(dur > 0, byt * 8.0 / xp.maximum(dur, 1e-9), 0.0)
+        elif kind == "pkt_cnt":
+            c = cnt[entry[1]]
+        elif kind == "handshake":
+            t_syn = hs(AGG_HS_SYN)
+            t_synack = hs(AGG_HS_SYNACK)
+            t_ack = hs(AGG_HS_ACK)
+            if entry[1] == "tcp_rtt":
+                c = xp.maximum(t_ack - t_syn, 0.0)
+            elif entry[1] == "syn_ack":
+                c = xp.maximum(t_synack - t_syn, 0.0)
+            else:
+                c = xp.maximum(t_ack - t_synack, 0.0)
+        elif kind == "flag_cnt":
+            c = col(AGG_FLAGS + entry[1])
+        else:  # ("stat", dir, family, stat)
+            _, d, fam, stat = entry
+            c = fam_stat(d, fam, stat)
+        cols.append(xp.asarray(c, xp.float32))
     return cols
 
 

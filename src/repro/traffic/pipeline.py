@@ -25,8 +25,9 @@ This is the deployable artifact — `examples/deploy_pipeline.py` drives it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +37,20 @@ from repro.core.forest import DenseForest
 from repro.core.search_space import FeatureRep
 from repro.kernels import ops
 
-from .extraction import extraction_fn, stats_plan
+from .extraction import emit_agg_features, extraction_fn, stats_plan
 from .synth import TrafficDataset
 
 __all__ = ["ServingPipeline", "build_pipeline"]
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _agg_extract(agg, proto, s_port, d_port, *, plan):
+    """Feature matrix from incremental aggregate rows (DESIGN.md §12):
+    the same static-plan column emitter the window path traces, evaluated
+    over per-flow running statistics instead of the raw packet window."""
+    cols = emit_agg_features(plan, agg, proto=proto, s_port=s_port,
+                             d_port=d_port)
+    return jnp.stack(cols, axis=1)
 
 
 @dataclasses.dataclass
@@ -48,10 +59,28 @@ class ServingPipeline:
     forest: DenseForest
     _fn: Callable
     fused: bool = False
+    _agg_fn: Optional[Callable] = None
 
     def __call__(self, ds: TrafficDataset) -> np.ndarray:
         """Predicted class ids for every flow in the batch."""
         return self.finalize(self.predict_async(ds))
+
+    @property
+    def supports_agg(self) -> bool:
+        """True when this pipeline has an incremental (aggregate-block)
+        inference entry — i.e. every feature in the plan is maintainable
+        as a running statistic (no median-style order stats)."""
+        return self._agg_fn is not None
+
+    def predict_agg(self, agg, proto, s_port, d_port) -> jax.Array:
+        """Infer from per-flow incremental aggregate rows (n, AGG_WIDTH)
+        instead of the raw packet window; resolves via `finalize` like any
+        other submission. Bit-identical column semantics to the window
+        path for whole-flow windows (both trace the shared stats plan)."""
+        if self._agg_fn is None:
+            raise ValueError(
+                "pipeline has no incremental entry (plan not incremental)")
+        return self._agg_fn(agg, proto, s_port, d_port)
 
     def predict_async(self, ds: TrafficDataset) -> jax.Array:
         """Submit the batch and return the (unresolved) device array.
@@ -125,10 +154,17 @@ def build_pipeline(
     leaf_t = jnp.asarray(forest.leaf)
     depth = forest.depth
 
-    if fused:
-        from repro.kernels.fused_pipeline import fused_forest_infer
+    from .extraction import plan_is_incremental
 
-        plan = stats_plan(rep.features)
+    plan = stats_plan(rep.features)
+    incremental = plan_is_incremental(plan)
+
+    if fused:
+        from repro.kernels.fused_pipeline import (
+            fused_agg_infer,
+            fused_forest_infer,
+        )
+
         conn_depth = int(rep.depth)
 
         def run(ds: TrafficDataset):
@@ -145,7 +181,17 @@ def build_pipeline(
                     plan=plan, depth=conn_depth, forest_depth=depth,
                 )
 
-        return ServingPipeline(rep, forest, run, fused=True)
+        run_agg = None
+        if incremental:
+            def run_agg(agg, proto, s_port, d_port):
+                return fused_agg_infer(
+                    jnp.asarray(agg), jnp.asarray(proto),
+                    jnp.asarray(s_port), jnp.asarray(d_port),
+                    feat_t, thr_t, leaf_t,
+                    plan=plan, forest_depth=depth,
+                )
+
+        return ServingPipeline(rep, forest, run, fused=True, _agg_fn=run_agg)
 
     extract = extraction_fn(rep.features, rep.depth, max_pkts)
 
@@ -157,4 +203,16 @@ def build_pipeline(
 
         return ref.forest_infer_ref(x, feat_t, thr_t, leaf_t, depth)
 
-    return ServingPipeline(rep, forest, run)
+    run_agg = None
+    if incremental:
+        def run_agg(agg, proto, s_port, d_port):
+            x = _agg_extract(
+                jnp.asarray(agg), jnp.asarray(proto), jnp.asarray(s_port),
+                jnp.asarray(d_port), plan=plan)
+            if use_kernel:
+                return ops.forest_infer(x, feat_t, thr_t, leaf_t, depth)
+            from repro.kernels import ref
+
+            return ref.forest_infer_ref(x, feat_t, thr_t, leaf_t, depth)
+
+    return ServingPipeline(rep, forest, run, _agg_fn=run_agg)

@@ -73,6 +73,9 @@ __all__ = ["ProfileResult", "TrafficProfiler"]
 
 _CAPTURE_NS = 2.0  # connection-tracking cost per packet beyond depth n
 _TREE_NODE_NS = 1.2  # per level per tree during inference
+# frozen-path / tracked-path cost ratio assumed by the modeled fidelity
+# before any measured calibration has timed the frozen path (DESIGN.md §12)
+_REUSE_DISCOUNT_DEFAULT = 0.5
 
 
 @dataclasses.dataclass
@@ -99,6 +102,8 @@ class TrafficProfiler:
         test_frac: float = 0.2,
         seed: int = 0,
         cache: bool = True,
+        reuse=None,                       # ReuseConfig: replay + model with
+                                          # drift-gated prediction reuse on
     ):
         self.dataset = dataset
         self.feature_names = tuple(feature_names)
@@ -107,6 +112,7 @@ class TrafficProfiler:
         self.cost_mode = cost_mode
         self.n_shards = n_shards
         self.scenario = scenario
+        self.reuse = reuse
         self.bisect_iters = bisect_iters
         self.seed = seed
         self.train_ds, self.test_ds = dataset.split(test_frac, seed)
@@ -209,10 +215,37 @@ class TrafficProfiler:
             exec_ns = self.measured_exec_us(x, forest) * 1e3
         else:
             exec_ns = self.modeled_exec_us(x, forest) * 1e3
-        # packets past the inference point still transit connection tracking
-        drain_ns = exec_ns + max(0.0, mean_len - n_eff) * _CAPTURE_NS
+        # packets past the inference point still transit connection tracking;
+        # under reuse they take the cheaper frozen fast path instead
+        # (DESIGN.md §12), discounted by the learned frozen/track ratio
+        tail_ns = max(0.0, mean_len - n_eff) * _CAPTURE_NS
+        drain_ns = exec_ns + tail_ns * self.reuse_discount()
         bytes_per_flow = float((ds.size * ds.valid_mask()).sum() / ds.n_flows)
         return bytes_per_flow * 8.0 / drain_ns  # Gbit/s (bits per ns)
+
+    def reuse_discount(self, reuse="profiler") -> float:
+        """Frozen-path discount the modeled fidelity applies to packets past
+        the inference point when prediction reuse is on.
+
+        Learned, not guessed, whenever possible: any measured service
+        calibration in this profiler's cache that timed the frozen path
+        (`calibrate_warm`) contributes its frozen/track ratio — the cheap
+        fidelity absorbs the expensive fidelity's measurement, keeping the
+        multi-fidelity surrogate's two views of one config commensurable.
+        Falls back to the deterministic default before any measurement
+        exists, and to 1.0 (no discount) with reuse off."""
+        if reuse == "profiler":
+            reuse = self.reuse
+        if reuse is None or not getattr(reuse, "enabled", False):
+            return 1.0
+        ratios = [
+            sm.pkt_frozen_ns / sm.pkt_track_ns
+            for sm in self._service_cache.values()
+            if sm.pkt_frozen_ns is not None and sm.pkt_track_ns > 0
+        ]
+        if ratios:
+            return float(min(1.0, sum(ratios) / len(ratios)))
+        return _REUSE_DISCOUNT_DEFAULT
 
     def replayed_throughput_gbps(
         self,
@@ -228,6 +261,8 @@ class TrafficProfiler:
         n_shards: int = 1,
         control=None,
         obs=None,
+        reuse="profiler",
+        calibrate_warm: Optional[bool] = None,
     ):
         """Zero-loss throughput measured through the streaming runtime.
 
@@ -261,6 +296,15 @@ class TrafficProfiler:
         zero-loss verification replay (tracing, drift, fleet registry,
         audit — DESIGN.md §11); bisection probes stay uninstrumented so
         the bundle captures exactly one run.
+
+        `reuse` overrides the profiler's own reuse configuration for this
+        measurement (a `ReuseConfig` or None; the default inherits
+        `self.reuse`). With reuse on, the measured calibration always
+        times the steady-state warm paths (`calibrate_warm`) so the
+        replay clock charges frozen packets their real amortized cost;
+        pass `calibrate_warm=True` to force the honest warm calibration
+        for a reuse-off arm too (an apples-to-apples A/B needs both arms
+        on measured constants, not one on the legacy 0.25x guess).
         """
         from repro.serve.runtime import (
             PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
@@ -299,16 +343,21 @@ class TrafficProfiler:
             ring_capacity = min(ring_capacity, max(1, events_bound - 1))
         self.wallclock["pipeline_gen"] += time.perf_counter() - t0
 
+        ru = self.reuse if reuse == "profiler" else reuse
+        if calibrate_warm is None:
+            calibrate_warm = ru is not None and getattr(ru, "enabled", False)
+
         def make_runtime(execute: bool) -> StreamingRuntime:
             if n_shards > 1:
                 return ShardedRuntime(
                     pipe, n_shards=n_shards, capacity=capacity,
                     max_batch=max_batch, flush_timeout_s=0.05,
-                    idle_timeout_s=60.0, execute=execute,
+                    idle_timeout_s=60.0, execute=execute, reuse=ru,
                 )
             return StreamingRuntime(
                 pipe, capacity=capacity, max_batch=max_batch,
                 flush_timeout_s=0.05, idle_timeout_s=60.0, execute=execute,
+                reuse=ru,
             )
 
         t0 = time.perf_counter()
@@ -316,13 +365,18 @@ class TrafficProfiler:
         # same (F, n) — e.g. a static-vs-controlled comparison — must share
         # clock constants, or calibration jitter masquerades as a
         # configuration effect
-        skey = (x.key(), self.cost_mode)
+        skey = (x.key(), self.cost_mode, calibrate_warm,
+                None if ru is None else (getattr(ru, "enabled", False),
+                                         getattr(ru, "drift_threshold", 0.0),
+                                         getattr(ru, "refresh_every", 0)))
         service = self._service_cache.get(skey)
         if service is None:
             if self.cost_mode == "measured":
-                service = ServiceModel.measure(make_runtime(True), stream)
+                service = ServiceModel.measure(
+                    make_runtime(True), stream, calibrate_warm=calibrate_warm)
             else:
-                service = ServiceModel.modeled(x, forest)
+                service = ServiceModel.modeled(
+                    x, forest, reuse_discount=self.reuse_discount(ru))
             self._service_cache[skey] = service
         rate_pps, stats = find_zero_loss_rate(
             stream, make_runtime, service,

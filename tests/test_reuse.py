@@ -1,0 +1,353 @@
+"""Incremental aggregate state and drift-gated prediction reuse
+(DESIGN.md §12).
+
+The contracts under test:
+
+- slot hygiene: recycling a slot resets *every* per-slot column, so a
+  re-tenant flow can never inherit aggregate (or any other) state;
+- incremental ≡ full recompute: a reuse table's deferred-fold arena
+  produces the same aggregate block as the eager per-packet Welford
+  reference — exact for count/sum/min/max cells, ≤1e-6 relative for the
+  variance-carrying M2 cells (Chan merge reassociates the float sums) —
+  across arena overflow, idle eviction, FIN re-tenancy and `move_slot`
+  migration;
+- chunk invariance: scalar `observe` and `observe_batch` at any chunking
+  agree on all control/payload state and on the aggregate block;
+- threshold-0 parity: drift threshold 0 forces re-inference at every
+  refresh, and the runtime's per-flow predictions are bit-identical to
+  the non-reuse path (first prediction wins either way);
+- the incremental inference entry: the fused kernel's aggregate-block
+  path matches the unfused reference path on the same rows.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve.runtime import (
+    FlowStatus,
+    FlowTable,
+    PacketStream,
+    ReuseConfig,
+    RuntimeMetrics,
+    ServiceModel,
+    StreamingRuntime,
+    move_slot,
+    replay,
+)
+from repro.traffic import extract_features, make_dataset
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+
+# variance-carrying cells of the aggregate block: per-direction M2 for
+# bytes/winsize/ttl and IAT (base d*20 + {4, 8, 12, 17})
+M2_COLS = (4, 8, 12, 17, 24, 28, 32, 37)
+
+DEPTH = 8
+
+
+def _synth_packets(n_flows=60, n_pkts=4000, seed=0, fin_flows=15):
+    """Zipf-ish interleaved packet arrays with mid-stream double-FIN
+    closes on the hottest flows (forces recycle + re-tenancy)."""
+    rng = np.random.default_rng(seed)
+    keys_pool = rng.integers(1, 2**63, n_flows).astype(np.uint64)
+    w = 1.0 / np.arange(1, n_flows + 1) ** 1.1
+    w /= w.sum()
+    fidx = rng.choice(n_flows, n_pkts, p=w)
+    t = np.cumsum(rng.random(n_pkts) * 1e-4)
+    fin = np.zeros(n_pkts, bool)
+    dirn = rng.integers(0, 2, n_pkts).astype(np.int64)
+    for f in range(fin_flows):
+        hits = np.flatnonzero(fidx == f)
+        if hits.size > 20:
+            mid = hits[hits.size // 2]
+            fin[mid] = True
+            dirn[mid] = 0
+            later = hits[hits > mid]
+            if later.size:
+                fin[later[0]] = True
+                dirn[later[0]] = 1
+    return dict(
+        key=keys_pool[fidx],
+        t=t,
+        rel=t.astype(np.float32).astype(np.float64),
+        size=rng.integers(40, 1500, n_pkts).astype(np.float64),
+        dirn=dirn,
+        ttl=rng.integers(30, 128, n_pkts).astype(np.float64),
+        win=rng.integers(0, 65535, n_pkts).astype(np.float64),
+        fb=rng.integers(0, 256, n_pkts).astype(np.int64),
+        fin=fin,
+        proto=np.full(n_pkts, 6.0),
+        sp=rng.integers(1024, 65535, n_pkts).astype(np.float64),
+        dp=np.full(n_pkts, 443.0),
+        fid=fidx.astype(np.int64),
+    )
+
+
+def _feed_block(tbl, p, lo, hi):
+    s = slice(lo, hi)
+    st, sl, _ = tbl.observe_batch(
+        p["key"][s], p["t"][s], p["rel"][s], p["size"][s], p["dirn"][s],
+        p["ttl"][s], p["win"][s], p["fb"][s], p["proto"][s], p["sp"][s],
+        p["dp"][s], p["fid"][s], p["fin"][s])
+    ready = np.flatnonzero((st == int(FlowStatus.READY))
+                           | (st == int(FlowStatus.READY_EOF)))
+    if ready.size:
+        tbl.mark_predicted(sl[ready])
+    tbl.take_refresh_due()
+
+
+def _feed_scalar(tbl, p, lo, hi):
+    for i in range(lo, hi):
+        st, sl = tbl.observe(
+            int(p["key"][i]), float(p["t"][i]), float(p["rel"][i]),
+            float(p["size"][i]), int(p["dirn"][i]), float(p["ttl"][i]),
+            float(p["win"][i]), int(p["fb"][i]), float(p["proto"][i]),
+            float(p["sp"][i]), float(p["dp"][i]), int(p["fid"][i]),
+            bool(p["fin"][i]))
+        if st in (FlowStatus.READY, FlowStatus.READY_EOF):
+            tbl.mark_predicted(np.array([sl]))
+        tbl.take_refresh_due()
+
+
+def _assert_agg_close(a, b, tag=""):
+    ex = np.ones(a.shape[1], bool)
+    ex[list(M2_COLS)] = False
+    assert np.array_equal(a[:, ex], b[:, ex]), f"{tag}: non-M2 agg cells"
+    d = np.abs(a[:, ~ex] - b[:, ~ex])
+    r = d / np.maximum(np.abs(a[:, ~ex]), 1e-30)
+    assert not ((d > 1e-9) & (r > 1e-6)).any(), f"{tag}: M2 drifted"
+
+
+# ---------------------------------------------------------------------------
+# slot hygiene
+# ---------------------------------------------------------------------------
+
+def test_recycle_resets_every_column():
+    """Allocate, dirty every per-slot surface, recycle, re-allocate: the
+    re-tenant's slot state must be bitwise what a fresh table produces."""
+    p = _synth_packets(n_flows=6, n_pkts=600, seed=3, fin_flows=6)
+    dirty = FlowTable(64, DEPTH, reuse=True, refresh_every=16, agg_buffer=64)
+    _feed_block(dirty, p, 0, 600)  # FINs inside recycle predicted flows
+    assert dirty.metrics.slots_recycled > 0
+
+    # second tenancy: a fresh key stream into the dirtied table vs a
+    # pristine table — every per-slot array must agree at the new slots
+    q = _synth_packets(n_flows=6, n_pkts=400, seed=11, fin_flows=0)
+    q["key"] = q["key"] + np.uint64(7)  # distinct tenancy keys
+    fresh = FlowTable(64, DEPTH, reuse=True, refresh_every=16, agg_buffer=64)
+    _feed_block(dirty, q, 0, 400)
+    _feed_block(fresh, q, 0, 400)
+    dirty.flush_agg()
+    fresh.flush_agg()
+
+    for k in np.unique(q["key"]):
+        sd = int(np.flatnonzero(dirty.ctrl["key"] == k)[0])
+        sf = int(np.flatnonzero(fresh.ctrl["key"] == k)[0])
+        assert dirty.ctrl[sd] == fresh.ctrl[sf]
+        for f in ("ts", "size", "direction", "ttl", "winsize", "flags",
+                  "proto", "s_port", "d_port", "agg", "anchor"):
+            a, b = getattr(dirty, f), getattr(fresh, f)
+            if a is None:  # anchor only allocated when anchor_dim > 0
+                assert b is None
+                continue
+            assert np.array_equal(a[sd], b[sf]), f
+        assert dirty.anchor_valid[sd] == fresh.anchor_valid[sf]
+        assert dirty.refresh_pending[sd] == fresh.refresh_pending[sf]
+
+
+def test_clear_slot_restores_pristine_row():
+    """A recycled slot's aggregate/anchor rows equal a never-used slot's."""
+    p = _synth_packets(n_flows=3, n_pkts=200, seed=5, fin_flows=0)
+    tbl = FlowTable(64, DEPTH, reuse=True, refresh_every=8, agg_buffer=32,
+                    anchor_dim=5)
+    _feed_block(tbl, p, 0, 200)
+    tbl.flush_agg()
+    used = int(np.flatnonzero(tbl.ctrl["state"] != 0)[0])
+    never = int(np.flatnonzero(tbl.ctrl["state"] == 0)[-1])
+    tbl.anchor[used] = 3.25  # dirty the drift anchor too
+    tbl.anchor_valid[used] = True
+    assert not np.array_equal(tbl.agg[used], tbl.agg[never])
+    tbl.recycle(used)
+    assert np.array_equal(tbl.agg[used], tbl.agg[never])
+    assert np.array_equal(tbl.anchor[used], tbl.anchor[never])
+    assert not tbl.anchor_valid[used]
+    assert tbl.ctrl[used] == tbl.ctrl[never]
+
+
+# ---------------------------------------------------------------------------
+# incremental ≡ full recompute / chunk invariance
+# ---------------------------------------------------------------------------
+
+def _cmp_tables(a, b, tag):
+    for f in ("key", "state", "seen", "count", "fin_mask", "last_ts",
+              "flow_id"):
+        assert np.array_equal(a.ctrl[f], b.ctrl[f]), f"{tag}: ctrl[{f}]"
+    for f in ("ts", "size", "direction", "ttl", "winsize", "flags",
+              "proto", "s_port", "d_port"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f"{tag}: {f}"
+    _assert_agg_close(a.agg, b.agg, tag)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 257])
+def test_deferred_fold_matches_eager_reference(chunk):
+    """Reuse table (deferred-fold arena, odd capacity to force overflow
+    splits) vs the eager per-packet Welford reference (track_agg only),
+    same stream with FIN re-tenancy and mid-stream idle eviction."""
+    p = _synth_packets()
+    n = len(p["t"])
+    ref = FlowTable(256, DEPTH, idle_timeout_s=0.05, track_agg=True,
+                    metrics=RuntimeMetrics())
+    inc = FlowTable(256, DEPTH, idle_timeout_s=0.05, reuse=True,
+                    refresh_every=32, agg_buffer=257,
+                    metrics=RuntimeMetrics())
+    evict_at = {n // 3, 2 * n // 3}
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        _feed_block(ref, p, lo, hi)
+        _feed_block(inc, p, lo, hi)
+        if any(lo < e <= hi for e in evict_at):
+            now = float(p["t"][hi - 1])
+            ref.evict_idle(now)
+            inc.evict_idle(now)
+    inc.flush_agg()
+    _cmp_tables(ref, inc, f"chunk={chunk}")
+
+
+def test_scalar_and_block_agree_across_chunkings():
+    """observe() vs observe_batch at several chunk sizes: identical
+    control/payload state, identical aggregates up to M2 merge order."""
+    p = _synth_packets()
+    base = FlowTable(256, DEPTH, reuse=True, refresh_every=32,
+                     agg_buffer=257, metrics=RuntimeMetrics())
+    _feed_scalar(base, p, 0, len(p["t"]))
+    base.flush_agg()
+    for chunk in (1, 128, 512):
+        tbl = FlowTable(256, DEPTH, reuse=True, refresh_every=32,
+                        agg_buffer=257, metrics=RuntimeMetrics())
+        for lo in range(0, len(p["t"]), chunk):
+            _feed_block(tbl, p, lo, min(lo + chunk, len(p["t"])))
+        tbl.flush_agg()
+        _cmp_tables(base, tbl, f"chunk={chunk}")
+
+
+def test_move_slot_migrates_aggregates():
+    """Mid-stream migration of every live flow to a fresh table: the
+    migrated fleet finishes with the same aggregates as an unmigrated
+    eager reference."""
+    p = _synth_packets(n_flows=24, n_pkts=2400, seed=7)
+    n = len(p["t"])
+    ref = FlowTable(256, DEPTH, track_agg=True, metrics=RuntimeMetrics())
+    src = FlowTable(256, DEPTH, reuse=True, refresh_every=32, agg_buffer=97,
+                    metrics=RuntimeMetrics())
+    _feed_block(ref, p, 0, n // 2)
+    _feed_block(src, p, 0, n // 2)
+
+    dst = FlowTable(256, DEPTH, reuse=True, refresh_every=32, agg_buffer=97,
+                    metrics=RuntimeMetrics())
+    for s in np.flatnonzero(src.ctrl["state"] != 0):
+        move_slot(src, dst, int(s))
+    assert src.metrics.flows_migrated_out == dst.metrics.flows_migrated_in > 0
+
+    _feed_block(ref, p, n // 2, n)
+    _feed_block(dst, p, n // 2, n)
+    ref.flush_agg()
+    dst.flush_agg()
+    for k in np.unique(p["key"]):
+        rs = np.flatnonzero(ref.ctrl["key"] == k)
+        ds_ = np.flatnonzero(dst.ctrl["key"] == k)
+        if not rs.size or not ds_.size:
+            assert rs.size == ds_.size, f"key {k} liveness diverged"
+            continue
+        a, b = ref.agg[rs[0]][None, :], dst.agg[ds_[0]][None, :]
+        _assert_agg_close(a, b, f"key {k}")
+        assert ref.ctrl["seen"][rs[0]] == dst.ctrl["seen"][ds_[0]]
+
+
+# ---------------------------------------------------------------------------
+# threshold-0 bit parity / incremental inference entry
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("app-class", n_flows=200, max_pkts=48, seed=9)
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=1)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=DEPTH)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+
+
+def test_threshold_zero_predictions_bit_identical(pipeline, stream):
+    """Drift threshold 0 re-infers at every refresh, and `results` keeps
+    first-prediction-wins: executing replays with and without reuse must
+    emit bit-identical per-flow predictions."""
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+
+    def mk(ru):
+        return lambda: StreamingRuntime(
+            pipeline, capacity=1024, max_batch=16, execute=True, reuse=ru)
+
+    base = replay(stream, mk(None), stream.base_pps, svc, ring_capacity=512)
+    thr0 = replay(
+        stream,
+        mk(ReuseConfig(enabled=True, drift_threshold=0.0, refresh_every=16)),
+        stream.base_pps, svc, ring_capacity=512)
+    assert thr0.metrics.forced_reinfer > 0  # the parity mode actually ran
+    assert set(base.predictions) == set(thr0.predictions)
+    for k in base.predictions:
+        assert np.array_equal(base.predictions[k], thr0.predictions[k]), k
+
+
+def test_reuse_counters_and_registry_names(pipeline, stream):
+    """A drifting-threshold run populates the cache.* counters and the
+    registry bridge exports them under their canonical names."""
+    svc = ServiceModel.modeled(pipeline.rep, pipeline.forest)
+    st = replay(
+        stream,
+        lambda: StreamingRuntime(
+            pipeline, capacity=1024, max_batch=16, execute=True,
+            reuse=ReuseConfig(enabled=True, drift_threshold=0.5,
+                              refresh_every=16)),
+        stream.base_pps, svc, ring_capacity=512)
+    m = st.metrics
+    assert m.reuse_hits + m.refreshes > 0
+    assert m.forced_reinfer == 0  # threshold > 0 never forces
+    reg = m.to_registry()
+    for name in ("cache.reuse_hits", "cache.refreshes",
+                 "cache.forced_reinfer"):
+        assert reg.counter(name) == getattr(
+            m, name.removeprefix("cache.")), name
+
+
+def test_fused_agg_entry_matches_unfused(ds):
+    """The fused kernel's incremental (aggregate-block) inference entry
+    agrees with the unfused reference on real table rows."""
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=DEPTH)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    unfused = build_pipeline(rep, forest, max_pkts=rep.depth,
+                             use_kernel=False)
+    fused = build_pipeline(rep, forest, max_pkts=rep.depth, fused=True)
+    assert unfused.supports_agg and fused.supports_agg
+
+    p = _synth_packets(n_flows=40, n_pkts=3000, seed=13)
+    tbl = FlowTable(256, DEPTH, reuse=True, refresh_every=32, agg_buffer=256)
+    _feed_block(tbl, p, 0, len(p["t"]))
+    tbl.flush_agg()
+    slots = np.flatnonzero(tbl.ctrl["state"] != 0)[:32]
+    args = (tbl.agg[slots], tbl.proto[slots], tbl.s_port[slots],
+            tbl.d_port[slots])
+    a = np.asarray(unfused.predict_agg(*args))
+    b = np.asarray(fused.predict_agg(*args))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
