@@ -2,8 +2,9 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-smoke-reuse bench-runtime bench-compare tune-smoke trace-smoke \
-	example-stream example-control example-tune
+	bench-smoke-reuse bench-smoke-selftune bench-runtime bench-compare \
+	tune-smoke trace-smoke example-stream example-control example-tune \
+	example-selftune
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -46,6 +47,15 @@ bench-smoke-reuse:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario zipf \
 		--min-reuse-speedup 1.5
 
+# self-optimizing-fleet gate (DESIGN.md §13): drift-scenario controlled
+# replay where a drift-triggered reoptimizer re-tunes and hot-swaps the
+# knee autonomously — must fire exactly one audited episode, lose zero
+# packets through the swap, beat the frozen knee on post-drift macro-F1,
+# and stay silent on a uniform control arm
+bench-smoke-selftune:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario drift \
+		--selftune
+
 # observability smoke (DESIGN.md §11): one instrumented 4-shard zipf
 # replay under the control plane — Chrome trace + stage breakdown +
 # bit-matched metrics snapshot + audit log from a single run — then the
@@ -82,3 +92,8 @@ example-control:
 # the knee point into a live sharded replay (DESIGN.md §10)
 example-tune:
 	$(PYTHON) examples/tune_serving.py
+
+# the loop closing itself: drift-triggered re-optimization with an
+# autonomous hot-swap mid-replay (DESIGN.md §13)
+example-selftune:
+	$(PYTHON) examples/selftune_fleet.py

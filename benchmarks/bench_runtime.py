@@ -151,13 +151,11 @@ def run_traced(trace_path, shards: int = 4, scenario: str = "zipf",
     import numpy as np
 
     from repro.core.search_space import FeatureRep
-    from repro.serve.control import ControlConfig
-    from repro.serve.obs import DriftMonitor, Observability, Tracer
-    from repro.serve.runtime import (
-        PacketStream, ServiceModel, ShardedRuntime, replay,
+    from repro.serve import (
+        ControlConfig, DriftMonitor, Observability, PacketStream,
+        RuntimeMetrics, ServeSession, ServiceModel, ShardedRuntime, Tracer,
+        fleet_registry, replay,
     )
-    from repro.serve.runtime.metrics import RuntimeMetrics
-    from repro.serve.obs import fleet_registry
     from repro.traffic import extract_features
     from repro.traffic.models import train_traffic_model
     from repro.traffic.pipeline import build_pipeline
@@ -196,8 +194,9 @@ def run_traced(trace_path, shards: int = 4, scenario: str = "zipf",
 
     stats = replay(
         stream, make_runtime, offered_pps, service,
-        control=ControlConfig(interval_pkts=512, imbalance_trigger=1.04),
-        obs=obs,
+        session=ServeSession(
+            control=ControlConfig(interval_pkts=512, imbalance_trigger=1.04),
+            obs=obs),
     )
     rt = created[-1]
 
@@ -287,7 +286,7 @@ def run_reuse_gate(min_reuse_speedup: float = 0.0, smoke: bool = False,
     import numpy as np
 
     from repro.core.search_space import FeatureRep
-    from repro.serve.runtime import (
+    from repro.serve import (
         PacketStream, ReuseConfig, ServiceModel, ShardedRuntime,
         find_zero_loss_rate, replay,
     )
@@ -421,6 +420,198 @@ def run_reuse_gate(min_reuse_speedup: float = 0.0, smoke: bool = False,
     return doc
 
 
+SELFTUNE_BENCH = "BENCH_selftune.json"
+
+
+def _macro_f1(y_true, y_pred) -> float:
+    """Macro-averaged F1 over the classes present in `y_true`/`y_pred`."""
+    import numpy as np
+
+    f1s = []
+    for c in np.union1d(np.unique(y_true), np.unique(y_pred)):
+        tp = float(np.sum((y_pred == c) & (y_true == c)))
+        fp = float(np.sum((y_pred == c) & (y_true != c)))
+        fn = float(np.sum((y_pred != c) & (y_true == c)))
+        if tp + fp + fn == 0:
+            continue
+        f1s.append(2 * tp / max(2 * tp + fp + fn, 1e-9))
+    return float(np.mean(f1s)) if f1s else 0.0
+
+
+def run_selftune_gate(smoke: bool = False,
+                      out_path: pathlib.Path | None = None,
+                      verbose: bool = True) -> dict:
+    """A/B the self-optimizing fleet on the drift scenario (DESIGN.md §13)
+    and write `results/BENCH_selftune.json`.
+
+    The drift scenario reorders flows by class rank, so an in-order
+    arrival process sees the class mix slide across the trace. The
+    deployed bundle is trained on the *pre-drift window only* (the first
+    40% of packets) — the stale knee a fleet optimized yesterday would
+    be serving today. Three controlled replays:
+
+    - **frozen**: the stale bundle with the control plane but no
+      reoptimizer — what PR 7's fleet would do;
+    - **selftuned**: same bundle and stream, plus a `ReoptimizerPolicy`
+      whose retune refits on the full corpus — the drift monitor must
+      trigger mid-run, the policy must hot-swap the re-optimized knee,
+      and post-drift flows must classify through the new pipeline;
+    - **uniform control**: the identical policy on a uniform replay —
+      zero episodes, or the trigger is noise-driven.
+
+    Gates: >= 1 audited reopt episode on the drift arm, zero episodes
+    on the uniform arm, zero drops everywhere (the swap may not lose a
+    packet), and the self-tuned arm's macro-F1 over the post-drift
+    segment (flows first seen in the trace's last third) strictly above
+    the frozen arm's.
+    """
+    import numpy as np
+
+    from repro.core.search_space import FeatureRep
+    from repro.serve import (
+        ControlConfig, DriftMonitor, Observability, PacketStream,
+        ReoptOutcome, ReoptimizerConfig, ReoptimizerPolicy, ServeSession,
+        ServiceModel, ShardedRuntime, replay,
+    )
+    from repro.serve.deploy import BundlePoint
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    t0 = time.perf_counter()
+    n_flows, max_pkts, pps = (600, 32, 2e5)
+    rep_a = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                        "ack_cnt"), depth=8)
+    rep_b = FeatureRep(("dur", "s_load", "s_pkt_cnt", "d_bytes_med",
+                        "psh_cnt"), depth=12)
+    service = ServiceModel(pkt_accum_ns=800.0, pkt_track_ns=200.0,
+                           bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+                           gather_ns_per_flow=200.0, source="synthetic")
+    # threshold 0.35 sits between small-batch mix noise (~0.25 TV at
+    # max_batch=16) and the drift excursion (>0.6); max_batch must be
+    # small enough that micro-batches resolve (and feed the drift
+    # monitor) mid-run rather than at drain
+    policy_cfg = ReoptimizerConfig(class_threshold=0.35, min_dwell_pkts=256,
+                                   cooldown_pkts=1 << 20, max_episodes=1)
+
+    def fleet(pipe):
+        return lambda: ShardedRuntime(pipe, n_shards=2, capacity=2048,
+                                      max_batch=16, execute=True)
+
+    def stale_and_retuned(ds, stream):
+        """The pre-drift-trained deployed bundle + a full-corpus retune."""
+        first_pkt = np.full(ds.n_flows, stream.n_events)
+        np.minimum.at(first_pkt, stream.fid, np.arange(stream.n_events))
+        pre = np.nonzero(first_pkt < 0.4 * stream.n_events)[0]
+        Xa = extract_features(ds, rep_a.features, rep_a.depth)
+        fa, _ = train_traffic_model(Xa[pre], ds.label[pre],
+                                    model="tree-fast", seed=0)
+        stale = build_pipeline(rep_a, fa, max_pkts=rep_a.depth,
+                               use_kernel=False)
+
+        def retune(trigger):
+            Xb = extract_features(ds, rep_b.features, rep_b.depth)
+            fb, _ = train_traffic_model(Xb, ds.label, model="tree-fast",
+                                        seed=0)
+            pipe_b = build_pipeline(rep_b, fb, max_pkts=rep_b.depth,
+                                    use_kernel=False)
+            point = BundlePoint(rep=rep_b, cost=1.0, perf=0.95,
+                                fidelity="measured", aux={},
+                                compile_meta={"fused": False},
+                                forest_doc=None, pipeline=pipe_b)
+            return ReoptOutcome(point=point, service=service)
+
+        return stale, retune, first_pkt
+
+    def session(retune=None):
+        s = ServeSession(obs=Observability(drift=DriftMonitor()),
+                         control=ControlConfig(interval_pkts=256,
+                                               rebalance=False))
+        if retune is not None:
+            s.reopt = ReoptimizerPolicy(retune, policy_cfg)
+        return s
+
+    ds = make_scenario_dataset("app-class", "drift", n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    stale, retune, first_pkt = stale_and_retuned(ds, stream)
+    frozen = replay(stream, fleet(stale), pps, service, session=session())
+    tuned_session = session(retune)
+    tuned = replay(stream, fleet(stale), pps, service, session=tuned_session)
+
+    # post-drift segment: flows first seen in the trace's last third
+    post = np.nonzero(first_pkt >= (2 / 3) * stream.n_events)[0]
+    f1 = {
+        tag: _macro_f1(ds.label[post],
+                       np.array([st.predictions[f] for f in post]))
+        for tag, st in (("frozen", frozen), ("selftuned", tuned))
+    }
+    episodes = tuned.control["reopt"]["episodes"]
+    reopt_events = tuned_session.resolve_audit().of_kind("reopt")
+    if verbose:
+        print(f"# drift 2-shard: post-drift macro-F1 frozen "
+              f"{f1['frozen']:.3f} vs selftuned {f1['selftuned']:.3f}, "
+              f"episodes={episodes}, "
+              f"swap_at={tuned.control['swap_at_pkts']}, "
+              f"drops={frozen.drops}/{tuned.drops}")
+
+    # uniform control arm: same policy, stationary mix -> zero episodes
+    ds_u = make_scenario_dataset("app-class", "uniform", n_flows=n_flows,
+                                 max_pkts=max_pkts, seed=3)
+    stream_u = PacketStream.from_dataset(ds_u, seed=0)
+    stale_u, retune_u, _ = stale_and_retuned(ds_u, stream_u)
+    uniform = replay(stream_u, fleet(stale_u), pps, service,
+                     session=session(retune_u))
+    if verbose:
+        print(f"# uniform control arm: episodes="
+              f"{uniform.control['reopt']['episodes']}, "
+              f"drops={uniform.drops}")
+
+    doc = {
+        "bench": "selftune_drift",
+        "smoke": smoke,
+        "config": {"scenario": "drift", "shards": 2, "n_flows": n_flows,
+                   "max_pkts": max_pkts, "events": stream.n_events,
+                   "pps": pps, "class_threshold": 0.35,
+                   "min_dwell_pkts": 256, "interval_pkts": 256,
+                   "max_batch": 16},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "post_drift_f1": {k: round(v, 4) for k, v in f1.items()},
+        "episodes": episodes,
+        "swap_at_pkts": tuned.control["swap_at_pkts"],
+        "reopt_audited": len(reopt_events),
+        "uniform_episodes": uniform.control["reopt"]["episodes"],
+        "drops": {"frozen": frozen.drops, "selftuned": tuned.drops,
+                  "uniform": uniform.drops},
+        "reopt_summary": tuned.control["reopt"],
+    }
+    from .common import write_datapoint
+
+    path = write_datapoint(doc, out_path, name=SELFTUNE_BENCH)
+    if verbose:
+        print(f"# wrote {path} (wall {doc['wall_s']:.1f}s)")
+    if episodes < 1 or len(reopt_events) < 1:
+        print("FAIL: drift arm fired no audited reopt episode",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if doc["uniform_episodes"] != 0:
+        print("FAIL: uniform arm fired a reopt episode (noise trigger)",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if frozen.drops or tuned.drops or uniform.drops:
+        print("FAIL: drops during a gated replay (swap lost packets?)",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not f1["selftuned"] > f1["frozen"]:
+        print(f"FAIL: post-drift F1 selftuned {f1['selftuned']:.3f} not "
+              f"above frozen {f1['frozen']:.3f}", file=sys.stderr)
+        raise SystemExit(1)
+    if verbose:
+        print("OK: self-tuned fleet beats the frozen knee post-drift")
+    return doc
+
+
 def _shares(stage_seconds: dict) -> tuple:
     total = sum(stage_seconds.values()) if stage_seconds else 0.0
     if total <= 0:
@@ -521,7 +712,18 @@ if __name__ == "__main__":
                    "threshold-0 bit-parity + zero drops, fail if on/off "
                    "speedup < R (0 measures without gating); writes "
                    "results/BENCH_runtime_zipf.json")
+    p.add_argument("--selftune", action="store_true",
+                   help="run the self-optimizing-fleet gate instead of the "
+                   "figure (DESIGN.md §13): drift-scenario controlled replay "
+                   "with a drift-triggered reoptimizer vs the frozen knee — "
+                   "assert >= 1 audited reopt episode, zero drops through "
+                   "the hot-swap, strictly better post-drift macro-F1, and "
+                   "zero episodes on a uniform control arm; writes "
+                   "results/BENCH_selftune.json")
     args = p.parse_args()
+    if args.selftune:
+        run_selftune_gate(smoke=args.smoke, out_path=args.out)
+        raise SystemExit(0)
     if args.min_reuse_speedup is not None:
         run_reuse_gate(min_reuse_speedup=args.min_reuse_speedup,
                        smoke=args.smoke,

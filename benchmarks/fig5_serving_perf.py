@@ -138,7 +138,7 @@ def run_replayed(
         if shards < 2:
             raise ValueError("control=True needs shards > 1 (the control "
                              "plane actuates a sharded fleet)")
-        from repro.serve.control import ControlConfig
+        from repro.serve import ControlConfig
 
         control_cfg = ControlConfig(interval_pkts=512, imbalance_trigger=1.04)
 

@@ -36,7 +36,7 @@ import time
 
 def _fixture(n_flows: int, max_pkts: int):
     from repro.core.search_space import FeatureRep
-    from repro.serve.runtime import PacketStream, ServiceModel
+    from repro.serve import PacketStream, ServiceModel
     from repro.traffic import extract_features
     from repro.traffic.models import train_traffic_model
     from repro.traffic.pipeline import build_pipeline
@@ -61,8 +61,8 @@ def _fixture(n_flows: int, max_pkts: int):
 def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
         shards: int = 4, offered_pps: float = 2e5,
         verbose: bool = True) -> dict:
-    from repro.serve.obs import Observability, Tracer
-    from repro.serve.runtime import ShardedRuntime, replay
+    from repro.serve import (Observability, ServeSession, ShardedRuntime,
+                             Tracer, replay)
 
     pipe, stream, service = _fixture(n_flows, max_pkts)
 
@@ -87,7 +87,8 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
         gc.disable()  # cyclic-GC pauses mid-replay dominate mode deltas
         try:
             t0 = time.perf_counter()
-            replay(stream, make_runtime, offered_pps, service, obs=obs)
+            replay(stream, make_runtime, offered_pps, service,
+                   session=None if obs is None else ServeSession(obs=obs))
             return time.perf_counter() - t0
         finally:
             gc.enable()

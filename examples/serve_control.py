@@ -24,9 +24,12 @@ reproduce bit-for-bit on any machine.
 import numpy as np
 
 from repro.core import FeatureRep
-from repro.serve.control import ControlConfig, HeadroomPolicy, PipelineSwap
-from repro.serve.runtime import (
+from repro.serve import (
+    ControlConfig,
+    HeadroomPolicy,
     PacketStream,
+    PipelineSwap,
+    ServeSession,
     ServiceModel,
     ShardedRuntime,
     StreamingRuntime,
@@ -79,7 +82,8 @@ def main():
     r_st, s_st = find_zero_loss_rate(stream, fleet, svc_a, iters=8,
                                      ring_capacity=ring)
     r_dy, s_dy = find_zero_loss_rate(stream, fleet, svc_a, iters=8,
-                                     ring_capacity=ring, control=cfg)
+                                     ring_capacity=ring,
+                                     session=ServeSession(control=cfg))
     print(f"\nstatic RETA : zero-loss {r_st:12,.0f} pps  "
           f"load imbalance {s_st.load_imbalance:.2f}")
     print(f"dynamic RETA: zero-loss {r_dy:12,.0f} pps  "
@@ -102,7 +106,7 @@ def main():
         swap=PipelineSwap(pipe_b, svc_b,
                           after_pkts=stream.n_events // 2))
     swapped = replay(stream, lambda: fleet(True), stream.base_pps, svc_a,
-                     control=swap_cfg)
+                     session=ServeSession(control=swap_cfg))
     m = swapped.metrics
     print(f"\nhot-swap at mid-trace: drops {swapped.drops}, "
           f"{len(swapped.predictions)}/{ds.n_flows} flows predicted "
@@ -135,8 +139,10 @@ def main():
         return ShardedRuntime(pipe_a, n_shards=2, capacity=4096,
                               max_batch=64, execute=False)
 
-    hot = replay(stream, small_fleet, 4e6, svc_a, control=elastic)
-    cold = replay(stream, small_fleet, 1e5, svc_a, control=elastic)
+    hot = replay(stream, small_fleet, 4e6, svc_a,
+                 session=ServeSession(control=elastic))
+    cold = replay(stream, small_fleet, 1e5, svc_a,
+                  session=ServeSession(control=elastic))
     print(f"\nelastic: at 4.0M pps the 2-worker fleet grew to "
           f"{hot.control['active_workers']} active workers "
           f"(+{hot.control['workers_added']}), zero drops: "

@@ -26,7 +26,7 @@ from repro.core import FeatureRep
 from repro.traffic import extract_features, make_dataset
 from repro.traffic.models import macro_f1, train_traffic_model
 from repro.traffic.pipeline import build_pipeline
-from repro.serve.runtime import (
+from repro.serve import (
     PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
     find_zero_loss_rate,
 )

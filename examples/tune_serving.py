@@ -34,11 +34,18 @@ import numpy as np
 
 from repro.core import CatoOptimizer, MemoizedEvaluator, SearchSpace
 from repro.core.priors import build_priors
-from repro.serve.control import ControlConfig
-from repro.serve.deploy import (
-    ParetoBundle, compile_front, make_swap, warm_buckets_for,
+from repro.serve import (
+    ControlConfig,
+    PacketStream,
+    ParetoBundle,
+    ServeSession,
+    ServiceModel,
+    ShardedRuntime,
+    compile_front,
+    make_swap,
+    replay,
+    warm_buckets_for,
 )
-from repro.serve.runtime import PacketStream, ServiceModel, ShardedRuntime, replay
 from repro.traffic import FEATURE_NAMES, TrafficProfiler, backend_suite
 from repro.traffic.synth import make_scenario_dataset
 
@@ -115,7 +122,8 @@ def main():
     swap = make_swap(knee, after_pkts=stream.n_events // 2, runtime=template)
     cfg = ControlConfig(interval_pkts=256, rebalance=False, swap=swap)
 
-    stats = replay(stream, fleet, stream.base_pps, svc_start, control=cfg)
+    stats = replay(stream, fleet, stream.base_pps, svc_start,
+                   session=ServeSession(control=cfg))
     m = stats.metrics
     print(f"\n== deploy: knee hot-swapped into a live {N_SHARDS}-shard "
           f"replay at mid-trace ==")

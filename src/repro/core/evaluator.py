@@ -70,6 +70,7 @@ class MemoizedEvaluator:
         self.n_calls = {f: 0 for f in self._backends}   # real measurements
         self.n_hits = {f: 0 for f in self._backends}    # memoized returns
         self.wall_s = {f: 0.0 for f in self._backends}  # measurement wall
+        self.n_seeded = {f: 0 for f in self._backends}  # pre-loaded results
 
     # -- fidelity spectrum ---------------------------------------------------
     @property
@@ -89,6 +90,38 @@ class MemoizedEvaluator:
     @property
     def multi_fidelity(self) -> bool:
         return len(self._backends) > 1
+
+    # -- cache seeding (shadow-evaluation warm start) ------------------------
+    def seed(self, x: Any, result: Any, fidelity: str | None = None) -> bool:
+        """Pre-load the memo cache with a known (config, fidelity) result.
+
+        The self-optimizing fleet's shadow re-tune seeds its evaluator
+        from the deployed bundle's observations so already-paid
+        measurements are never re-bought inside an episode. Seeding never
+        overwrites: a result this evaluator measured itself wins over an
+        imported one. Returns True when the seed was installed."""
+        fid = self.measured if fidelity is None else fidelity
+        if fid not in self._backends:
+            raise KeyError(
+                f"unknown fidelity {fid!r}; evaluator has {self.fidelities}")
+        key = (canonical_key(x), fid)
+        if key in self._cache:
+            return False
+        self._cache[key] = result
+        self.n_seeded[fid] += 1
+        return True
+
+    def seed_from(self, observations, fidelity: str | None = None) -> int:
+        """Seed the cache from prior `Observation`s (or anything with
+        ``.x``/``.cost``/``.perf``). Every observation lands at `fidelity`
+        (default: the expensive backend) regardless of the fidelity tag it
+        carries — the caller asserts the old measurements are still valid
+        at that level. Returns the number of fresh seeds installed."""
+        n = 0
+        for o in observations:
+            if self.seed(o.x, o, fidelity):
+                n += 1
+        return n
 
     # -- evaluation ----------------------------------------------------------
     def profile(self, x: Any, fidelity: str | None = None) -> tuple[Any, float]:
@@ -142,6 +175,7 @@ class MemoizedEvaluator:
             f: {
                 "measurements": self.n_calls[f],
                 "memo_hits": self.n_hits[f],
+                "seeded": self.n_seeded[f],
                 "wall_s": round(self.wall_s[f], 4),
             }
             for f in self._backends

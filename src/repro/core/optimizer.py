@@ -150,6 +150,33 @@ class CatoOptimizer:
         self.fallback_iterations: list[int] = []
         self._seen: set = set()
 
+    # -- warm start (shadow re-optimization episodes) ------------------------
+    def warm_start(self, observations, *, tag: str = "warm") -> int:
+        """Inject prior observations to warm-start the surrogate.
+
+        The self-optimizing fleet's re-tune episodes start from the
+        deployed bundle's observations instead of a cold posterior: the
+        injected points join `self.observations` (so the surrogate and
+        the exploitation pool see them) and mark their configs as seen
+        (so proposals spend no budget re-discovering them).
+
+        Each injected observation is re-tagged with fidelity
+        ``"{tag}:{original}"`` — a level that matches no live measurement
+        backend — so warm points inform the fidelity-aware posterior as
+        low-fidelity context but can never pollute the cheap promotion
+        front, the measured Pareto set, or the measurement budget
+        accounting. Returns the number of observations injected."""
+        n = 0
+        for o in observations:
+            k = self._key(o.x)
+            if k in self._seen:
+                continue
+            self.observations.append(dataclasses.replace(
+                o, aux=dict(o.aux), fidelity=f"{tag}:{o.fidelity}"))
+            self._seen.add(k)
+            n += 1
+        return n
+
     # -- evaluation ----------------------------------------------------------
     def _evaluate(
         self, x: Any, iteration: int, fidelity: Optional[str] = None

@@ -15,13 +15,24 @@ Two serving stacks live here:
   rebalancing, zero-downtime pipeline hot-swap, elastic worker sizing —
   plus the compile-to-deploy layer (`deploy.py`, §10.4) that turns an
   optimized Pareto front into warmed pipelines, a serializable
-  `ParetoBundle`, and a live hot-swap into the fleet.
+  `ParetoBundle`, and a live hot-swap into the fleet, and the
+  drift-triggered re-optimization policy (`control/reoptimizer.py`,
+  §13) that closes the measure → optimize → compile → deploy → adapt
+  loop autonomously.
 
-The runtime/control re-exports resolve lazily (PEP 562): `from repro.serve
-import make_serve_step` must not drag in the traffic/extraction stack, and
-the traffic package must stay importable without touching this one.
+This module is the **public serving namespace**: everything a serving
+consumer (examples, benchmarks, downstream users) needs is re-exported
+here, threaded through one attachment carrier (`ServeSession`) — reach
+into submodules only for internals. The re-exports resolve lazily
+(PEP 562): `from repro.serve import make_serve_step` must not drag in
+the traffic/extraction stack, and the traffic package must stay
+importable without touching this one.
 """
 from .serve_step import make_serve_step, make_prefill
+
+_SESSION_EXPORTS = (
+    "ServeSession",
+)
 
 _RUNTIME_EXPORTS = (
     "BatchRecord",
@@ -31,6 +42,7 @@ _RUNTIME_EXPORTS = (
     "MicroBatchDispatcher",
     "PacketStream",
     "ReplayStats",
+    "ReuseConfig",
     "RuntimeMetrics",
     "ServiceModel",
     "ShardedRuntime",
@@ -46,6 +58,10 @@ _CONTROL_EXPORTS = (
     "ControlPlane",
     "HeadroomPolicy",
     "PipelineSwap",
+    "ReoptOutcome",
+    "ReoptimizerConfig",
+    "ReoptimizerPolicy",
+    "cato_retuner",
     "controlled_replay",
 )
 
@@ -57,6 +73,7 @@ _DEPLOY_EXPORTS = (
     "compile_front",
     "deploy",
     "make_swap",
+    "warm_buckets_for",
 )
 
 # unified serving observability (DESIGN.md §11): fleet-wide metrics
@@ -65,31 +82,44 @@ _DEPLOY_EXPORTS = (
 _OBS_EXPORTS = (
     "AuditLog",
     "DriftMonitor",
+    "DriftVerdict",
     "MetricsRegistry",
     "Observability",
     "Tracer",
     "fleet_registry",
 )
 
-__all__ = ["make_serve_step", "make_prefill", *_RUNTIME_EXPORTS,
-           *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS, *_OBS_EXPORTS]
+__all__ = ["make_serve_step", "make_prefill", *_SESSION_EXPORTS,
+           *_RUNTIME_EXPORTS, *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS,
+           *_OBS_EXPORTS]
+
+
+_EXPORT_HOMES = {
+    **{n: "session" for n in _SESSION_EXPORTS},
+    **{n: "runtime" for n in _RUNTIME_EXPORTS},
+    **{n: "control" for n in _CONTROL_EXPORTS},
+    **{n: "deploy" for n in _DEPLOY_EXPORTS},
+    **{n: "obs" for n in _OBS_EXPORTS},
+}
 
 
 def __getattr__(name):
-    if name in _RUNTIME_EXPORTS:
-        from . import runtime
+    # importlib (not ``from . import x``): an export sharing its
+    # submodule's name (``deploy``) would recurse through the
+    # fromlist's hasattr probe otherwise
+    home = _EXPORT_HOMES.get(name)
+    if home is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
 
-        return getattr(runtime, name)
-    if name in _CONTROL_EXPORTS:
-        from . import control
+    return getattr(importlib.import_module(f"{__name__}.{home}"), name)
 
-        return getattr(control, name)
-    if name in _DEPLOY_EXPORTS:
-        from . import deploy
 
-        return getattr(deploy, name)
-    if name in _OBS_EXPORTS:
-        from . import obs
-
-        return getattr(obs, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+# The ``deploy`` *function* shares its submodule's name. Whenever any
+# import touches the ``repro.serve.deploy`` submodule, the import system
+# binds that submodule as an attribute of this package — which would
+# shadow the lazy export and make ``from repro.serve import deploy``
+# yield the module. Bind the function eagerly; the ``from`` rebind runs
+# after the submodule's setattr, so the function wins and stays won.
+from .deploy import deploy as deploy  # noqa: E402

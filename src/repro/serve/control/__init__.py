@@ -13,7 +13,11 @@ the sharded serving fleet:
   new Pareto-optimal (F, n) pipeline deploys with zero drops;
 - **measurement** (`controlled_replay`): the offered-load replay driver
   for the adaptive fleet — interleaved per-shard clocks, control steps
-  between blocks, zero-loss bisection compatible.
+  between blocks, zero-loss bisection compatible;
+- **re-optimization** (`ReoptimizerPolicy` + `cato_retuner`): the
+  drift-triggered episode state machine (DESIGN.md §13) that closes the
+  outer loop — drift excursion → budgeted shadow re-tune → audited
+  hot-swap through the same `schedule_swap` path as operator deploys.
 
 The invariant every piece preserves: control actions permute *where* and
 *when* work happens, never *what* is predicted — flows that complete
@@ -22,6 +26,12 @@ oracle single-worker run (tests/test_control.py).
 """
 from .plane import ControlConfig, ControlPlane, PipelineSwap, StepReport
 from .planner import HeadroomPolicy, plan_rebalance, plan_retirement
+from .reoptimizer import (
+    ReoptimizerConfig,
+    ReoptimizerPolicy,
+    ReoptOutcome,
+    cato_retuner,
+)
 from .replay import controlled_replay
 from .telemetry import BucketTelemetry
 
@@ -31,7 +41,11 @@ __all__ = [
     "ControlPlane",
     "HeadroomPolicy",
     "PipelineSwap",
+    "ReoptOutcome",
+    "ReoptimizerConfig",
+    "ReoptimizerPolicy",
     "StepReport",
+    "cato_retuner",
     "controlled_replay",
     "plan_rebalance",
     "plan_retirement",

@@ -23,6 +23,20 @@ migration costs to the right worker's lanes, retargeting service
 constants after a swap. Control cadence is counted in *packets*, not
 seconds, so decisions are invariant under replay clock compression and
 zero-loss bisection probes stay comparable across offered rates.
+
+**The clock argument (`now_pkts`) — canonical definition.** Every time
+value crossing the control surface (`maybe_step`, audit events, tracer
+instants, `deploy`) is the *replay packet clock*: virtual time, in
+seconds at the offered rate, advanced only by packet deliveries — never
+wall time. The name carries the provenance (the packet stream drives
+it), the unit stays seconds so durations and rates divide out naturally.
+Workers' internal lane clocks (`dispatch.py`, `flow_table.py`) keep
+their own `now` — they never cross this surface. Under a `ReoptimizerPolicy`
+(`reoptimizer.py`) the plane also closes the adaptation loop: after its
+own actuations each step, it lets the policy threshold the run's drift
+signal, and a fired episode schedules its re-optimized pipeline through
+`schedule_swap` — so autonomous re-deployments ride the same audited,
+packet-counted swap path as operator-scheduled ones.
 """
 from __future__ import annotations
 
@@ -140,25 +154,37 @@ class ControlPlane:
         *,
         audit=None,
         tracer=None,
+        session=None,
     ):
+        from repro.serve.session import ServeSession
+
+        session = ServeSession.coerce(session, audit=audit, tracer=tracer,
+                                      warn=False)
         self.rt = runtime
         self.cfg = config
         self.service = service  # current constants (retargeted on swap)
         self.telemetry = BucketTelemetry(alpha=config.ewma_alpha)
         # decision audit log (DESIGN.md §11.3): every actuation below is
         # recorded with its rationale and before/after load snapshot; an
-        # external Observability bundle passes its own log in so one run
-        # yields one audit stream
+        # external Observability bundle (via the session) passes its own
+        # log in so one run yields one audit stream
+        audit = session.resolve_audit()
         if audit is None:
             from repro.serve.obs.audit import AuditLog
 
             audit = AuditLog()
         self.audit = audit
-        self.tracer = tracer
+        self.tracer = session.tracer
+        # drift-triggered re-optimization (DESIGN.md §13): the policy is
+        # reset per plane (one plane = one run), bound to the session's
+        # drift monitor — the same sketches the dispatchers feed
+        self.reopt = session.reopt
+        if self.reopt is not None:
+            self.reopt.reset(drift=session.drift)
+        self._pending_swap: Optional[PipelineSwap] = config.swap
         self._pkts_since = 0
         self._last_step_t: Optional[float] = None
         self._pps_ewma = 0.0
-        self._swapped = False
         # counters for the run summary
         self.n_steps = 0
         self.n_rebalances = 0
@@ -183,8 +209,24 @@ class ControlPlane:
         self.telemetry.note(buckets)
         self._pkts_since += len(buckets)
 
-    def maybe_step(self, now: float) -> Optional[StepReport]:
-        """Run a control step if a full interval of packets has arrived."""
+    def schedule_swap(self, swap: PipelineSwap) -> None:
+        """Arm a pipeline swap to fire once the fleet's ingested-packet
+        count reaches ``swap.after_pkts`` (checked on control-step
+        cadence, so the actual fire point lands on the next step
+        boundary at or after it). One swap may be pending at a time —
+        the plane refuses to silently drop an armed deployment."""
+        if self._pending_swap is not None:
+            raise RuntimeError(
+                "a pipeline swap is already pending (after_pkts="
+                f"{self._pending_swap.after_pkts}); the armed deployment "
+                "must fire or be cleared before another is scheduled")
+        self._pending_swap = swap
+
+    def maybe_step(self, now_pkts: float) -> Optional[StepReport]:
+        """Run a control step if a full interval of packets has arrived.
+
+        `now_pkts` is the replay packet clock (module docstring) — the
+        virtual time of the block edge that completed the interval."""
         if self._pkts_since < self.cfg.interval_pkts:
             return None
         cfg = self.cfg
@@ -192,39 +234,40 @@ class ControlPlane:
         window_pkts = self._pkts_since
         rates = self.telemetry.roll()
         self._pkts_since = 0
-        report = StepReport(t=now)
+        report = StepReport(t=now_pkts)
         self.n_steps += 1
 
         # offered-rate estimate for the headroom policy (EWMA of pps over
         # the interval wall time; first step has no baseline interval)
-        if self._last_step_t is not None and now > self._last_step_t:
-            win_pps = window_pkts / (now - self._last_step_t)
+        if self._last_step_t is not None and now_pkts > self._last_step_t:
+            win_pps = window_pkts / (now_pkts - self._last_step_t)
             self._pps_ewma = (cfg.ewma_alpha * win_pps
                               + (1 - cfg.ewma_alpha) * self._pps_ewma
                               if self._pps_ewma > 0 else win_pps)
-        self._last_step_t = now
+        self._last_step_t = now_pkts
 
-        # 1. scheduled pipeline hot-swap
-        if (cfg.swap is not None and not self._swapped
-                and self.telemetry.total_pkts >= cfg.swap.after_pkts):
+        # 1. pending pipeline hot-swap (operator-scheduled via the config,
+        # or armed mid-run by the reoptimizer through schedule_swap)
+        swap = self._pending_swap
+        if swap is not None and self.telemetry.total_pkts >= swap.after_pkts:
             before = self._loads_doc()
-            recs = rt.hot_swap(cfg.swap.pipeline, now)
+            recs = rt.hot_swap(swap.pipeline, now_pkts)
             self._merge_records(report, recs)
             for i in range(len(rt.shards)):
-                report.service_switch[i] = cfg.swap.service
-            self.service = cfg.swap.service
-            self._swapped = True
+                report.service_switch[i] = swap.service
+            self.service = swap.service
+            self._pending_swap = None
             report.swapped = True
             self.n_swaps += 1
             self.swap_at_pkts = int(self.telemetry.total_pkts)
             self._audit(
-                "hot_swap", now,
-                f"scheduled swap armed at {cfg.swap.after_pkts} pkts; fleet "
+                "hot_swap", now_pkts,
+                f"scheduled swap armed at {swap.after_pkts} pkts; fleet "
                 f"has ingested {self.swap_at_pkts}",
                 {
                     "quiesce_flushes": sum(len(r) for r in recs.values()),
                     "shards": len(rt.shards),
-                    "new_service": cfg.swap.service.source,
+                    "new_service": swap.service.source,
                 },
                 before=before,
             )
@@ -257,7 +300,7 @@ class ControlPlane:
                 self.workers_added += 1
             if report.workers_added:
                 self._audit(
-                    "scale_out", now,
+                    "scale_out", now_pkts,
                     f"offered {self._pps_ewma:.0f} pps vs {cap_pps:.0f} "
                     f"pps/worker capacity wants {desired} workers "
                     f"(had {n_before})",
@@ -279,13 +322,13 @@ class ControlPlane:
                 moves = plan_retirement(rates, rt.indirection, coldest,
                                         rt.active)
                 pre_fm = report.flows_migrated
-                self._apply_moves(report, moves, now)
+                self._apply_moves(report, moves, now_pkts)
                 if not np.any(rt.indirection == coldest):
                     rt.active[coldest] = False
                     report.workers_retired.append(coldest)
                     self.workers_retired += 1
                     self._audit(
-                        "retire", now,
+                        "retire", now_pkts,
                         f"load fits {desired} workers; evacuated coldest "
                         f"worker {coldest} "
                         f"(ewma load {float(loads[coldest]):.1f})",
@@ -312,9 +355,9 @@ class ControlPlane:
                 pre_bm = report.buckets_moved
                 pre_fm = report.flows_migrated
                 self.n_rebalances += 1
-                self._apply_moves(report, moves, now)
+                self._apply_moves(report, moves, now_pkts)
                 self._audit(
-                    "rebalance", now,
+                    "rebalance", now_pkts,
                     f"imbalance {before_rb['imbalance']:.3f} over trigger "
                     f"{cfg.imbalance_trigger:.3f}; planned "
                     f"{len(moves)} bucket moves",
@@ -327,10 +370,19 @@ class ControlPlane:
                     before=before_rb,
                 )
 
+        # 4. drift-triggered re-optimization (DESIGN.md §13): after this
+        # step's actuations, let the policy read the drift sketches and —
+        # when an excursion has dwelt long enough — run its shadow
+        # re-tune and arm the resulting swap. The swap itself fires
+        # through section 1 on a *later* step, so episodes interleave
+        # with the replay packet clock exactly like operator swaps.
+        if self.reopt is not None:
+            self.reopt.maybe_step(self, now_pkts)
+
         if (report.buckets_moved or report.swapped or report.workers_added
                 or report.workers_retired):
             self.log.append({
-                "t": now,
+                "now_pkts": now_pkts,
                 "buckets_moved": report.buckets_moved,
                 "flows_migrated": report.flows_migrated,
                 "swapped": report.swapped,
@@ -356,21 +408,22 @@ class ControlPlane:
             if act and mean > 0 else 1.0,
         }
 
-    def _audit(self, kind: str, now: float, rationale: str,
+    def _audit(self, kind: str, now_pkts: float, rationale: str,
                detail: Optional[dict] = None, *, before=None,
                after=None) -> None:
         if after is None and before is not None:
             after = self._loads_doc()
-        self.audit.record(kind, now, rationale, detail,
+        self.audit.record(kind, now_pkts, rationale, detail,
                           before=before, after=after)
         if self.tracer is not None and self.tracer.enabled:
             from repro.serve.obs.trace import TID_CONTROL
 
-            self.tracer.instant(f"control.{kind}", now, pid=0,
+            self.tracer.instant(f"control.{kind}", now_pkts, pid=0,
                                 tid=TID_CONTROL)
 
-    def _apply_moves(self, report: StepReport, moves: dict, now: float) -> None:
-        rep = self.rt.migrate_buckets(moves, now)
+    def _apply_moves(self, report: StepReport, moves: dict,
+                     now_pkts: float) -> None:
+        rep = self.rt.migrate_buckets(moves, now_pkts)
         for shard, recs in rep["records"].items():
             report.records.setdefault(shard, []).extend(recs)
         cost = (self.cfg.migrate_cost_pkts
@@ -393,7 +446,7 @@ class ControlPlane:
             report.records.setdefault(shard, []).extend(rs)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "steps": self.n_steps,
             "rebalances": self.n_rebalances,
             "buckets_moved": self.buckets_moved,
@@ -405,3 +458,6 @@ class ControlPlane:
             "workers_retired": self.workers_retired,
             "active_workers": sum(self.rt.active),
         }
+        if self.reopt is not None:
+            out["reopt"] = self.reopt.summary()
+        return out

@@ -40,10 +40,11 @@ def controlled_replay(
     offered_pps: float,
     service: ServiceModel,
     *,
-    control: ControlConfig,
+    control: ControlConfig = None,
     ring_capacity: int = 4096,
     evict_every: int = 512,
     obs=None,
+    session=None,
 ) -> ReplayStats:
     """Replay `stream` at `offered_pps` through a control-plane-managed
     sharded fleet. Same contract as `repro.serve.runtime.replay` (drops
@@ -51,11 +52,24 @@ def controlled_replay(
     single-worker run for every flow that completes under one pipeline
     configuration), plus a `control` activity summary on the stats.
 
-    Pass an `Observability` bundle as `obs` to trace flow lifecycles and
-    worker stage spans on the same virtual clock, feed the drift monitor
-    from dispatch outputs, and collect the control plane's audit log in
-    one stream (DESIGN.md §11).
+    `session` (a `repro.serve.ServeSession`) carries the attachments: a
+    `ControlConfig` (required here — the control plane is this driver's
+    point), an `Observability` bundle to trace flow lifecycles and worker
+    stage spans on the same virtual clock, feed the drift monitor from
+    dispatch outputs, and collect the control plane's audit log in one
+    stream (DESIGN.md §11), and optionally a `ReoptimizerPolicy` for
+    drift-triggered background re-optimization (DESIGN.md §13). The
+    bare `control=` / `obs=` keywords are the deprecated pre-session
+    spellings of the same thing.
     """
+    from repro.serve.session import ServeSession
+
+    session = ServeSession.coerce(session, control=control, obs=obs)
+    if session.control is None:
+        raise TypeError(
+            "controlled_replay needs a ControlConfig on the session: "
+            "without one, use repro.serve.replay")
+    obs = session.obs
     rt = make_runtime()
     if not isinstance(rt, ShardedRuntime):
         raise TypeError(
@@ -67,11 +81,7 @@ def controlled_replay(
     if obs is not None:
         obs.attach(rt)
         tracer = obs.tracer
-    plane = ControlPlane(
-        rt, control, service,
-        audit=obs.audit if obs is not None else None,
-        tracer=tracer,
-    )
+    plane = ControlPlane(rt, session.control, service, session=session)
     t_e = stream.base_t * (stream.base_pps / offered_pps)
     t_end = float(t_e[-1]) + rt.flush_timeout_s if len(t_e) else 0.0
     duration = float(t_e[-1] - t_e[0]) if stream.n_events > 1 else 1.0

@@ -284,6 +284,8 @@ def make_swap(
     runtime=None,
     service=None,
     audit=None,
+    session=None,
+    now_pkts: float = 0.0,
 ):
     """Schedule `point` as a zero-downtime `PipelineSwap` (DESIGN.md §9.3).
 
@@ -295,18 +297,23 @@ def make_swap(
     already-compiled bucket only replays a zero batch through the jit
     cache, so the ensure is cheap. `service` defaults to the modeled
     clock constants for the point's (F, n) — pass measured constants
-    for calibrated replay. Pass an `AuditLog` as `audit` to record the
-    scheduling decision (DESIGN.md §11.3)."""
+    for calibrated replay. A `session` (or the deprecated bare
+    ``audit=``) records the scheduling decision against `now_pkts` — the
+    replay packet clock (canonical definition in
+    `repro.serve.control.plane`) at which the decision was made."""
     from repro.serve.control.plane import PipelineSwap
     from repro.serve.runtime.replay import ServiceModel
+    from repro.serve.session import ServeSession
 
+    audit = ServeSession.coerce(session, audit=audit,
+                                warn=False).resolve_audit()
     pipe = point.pipeline or point.build(runtime=runtime, warm=False)
     pipe.warm(warm_buckets_for(runtime))
     if service is None:
         service = ServiceModel.modeled(point.rep, point.forest())
     if audit is not None:
         audit.record(
-            "swap_scheduled", 0.0,
+            "swap_scheduled", now_pkts,
             f"bundle point (|F|={len(point.rep.features)}, "
             f"n={point.rep.depth}) armed to swap after "
             f"{after_pkts} pkts",
@@ -323,26 +330,32 @@ def make_swap(
     return PipelineSwap(pipeline=pipe, service=service, after_pkts=after_pkts)
 
 
-def deploy(point: BundlePoint, runtime, now: float, *, audit=None):
+def deploy(point: BundlePoint, runtime, now_pkts: float, *, audit=None,
+           session=None):
     """Hot-swap `point` into a live runtime immediately.
 
     `runtime` is a `StreamingRuntime` or `ShardedRuntime`; the swap goes
     through the §9.3 drain-and-swap quiescence protocol, so in-flight
     flows resolve under the old pipeline and no flow is dropped or
-    predicted twice. Warm coverage for `runtime`'s bucket geometry is
-    ensured first (see `make_swap`), so the swap pays no compile on the
-    serving path. Returns the quiesce flush records (list for a single
-    worker, {shard: records} for a fleet) so a replay clock can charge
-    them to the right lanes. Pass an `AuditLog` as `audit` to record
-    the deployment (DESIGN.md §11.3)."""
+    predicted twice. `now_pkts` is the replay packet clock (canonical
+    definition in `repro.serve.control.plane`) at the swap edge. Warm
+    coverage for `runtime`'s bucket geometry is ensured first (see
+    `make_swap`), so the swap pays no compile on the serving path.
+    Returns the quiesce flush records (list for a single worker,
+    {shard: records} for a fleet) so a replay clock can charge them to
+    the right lanes. Pass a `session` (or the deprecated bare
+    ``audit=``) to record the deployment (DESIGN.md §11.3)."""
+    from repro.serve.session import ServeSession
+
+    audit = ServeSession.coerce(session, audit=audit).resolve_audit()
     pipe = point.pipeline or point.build(runtime=runtime, warm=False)
     pipe.warm(warm_buckets_for(runtime))
-    recs = runtime.hot_swap(pipe, now)
+    recs = runtime.hot_swap(pipe, now_pkts)
     if audit is not None:
         flushes = (sum(len(r) for r in recs.values())
                    if isinstance(recs, dict) else len(recs))
         audit.record(
-            "deploy", now,
+            "deploy", now_pkts,
             f"immediate hot-swap of bundle point "
             f"(|F|={len(point.rep.features)}, n={point.rep.depth})",
             {

@@ -26,7 +26,7 @@ import dataclasses
 from typing import Optional
 
 from .audit import AuditEvent, AuditLog
-from .drift import DriftMonitor, StreamingMoments
+from .drift import DriftMonitor, DriftVerdict, StreamingMoments
 from .registry import MetricsRegistry
 from .trace import Tracer, TID_CONTROL, TID_INFER, TID_INGEST
 
@@ -34,6 +34,7 @@ __all__ = [
     "AuditEvent",
     "AuditLog",
     "DriftMonitor",
+    "DriftVerdict",
     "MetricsRegistry",
     "Observability",
     "StreamingMoments",

@@ -11,6 +11,11 @@ timeline and the metrics deltas and reconstruct every decision.
 Events are plain data (JSONL round-trip via ``save``/``load``), appended
 in decision order with a monotone sequence number — the control plane is
 single-threaded per fleet, so the sequence *is* the causal order.
+
+Event timestamps are `now_pkts` — the replay packet clock (see
+`repro.serve.control.plane` for the unit's one canonical definition) —
+never wall time. Documents written before the rename carried the key
+``"t"``; `AuditEvent.from_doc` still reads it.
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ import numpy as np
 __all__ = ["AuditEvent", "AuditLog"]
 
 KINDS = ("rebalance", "scale_out", "retire", "hot_swap", "swap_scheduled",
-         "deploy")
+         "deploy", "reopt")
 
 
 def _jsonable(x):
@@ -46,20 +51,26 @@ class AuditEvent:
     """One control-plane decision, with its evidence."""
 
     seq: int                    # monotone per-log decision order
-    t: float                    # virtual time of the decision
+    now_pkts: float             # replay packet clock at the decision
     kind: str                   # one of KINDS
     rationale: str              # the planner's reason, in its own numbers
     detail: dict                # action-specific payload (moves, shard ids …)
     before: Optional[dict] = None  # shard-load EWMA snapshot pre-actuation
     after: Optional[dict] = None   # same, post-actuation
 
+    @property
+    def t(self) -> float:
+        """Pre-rename alias for `now_pkts` (deprecated)."""
+        return self.now_pkts
+
     def to_doc(self) -> dict:
         return _jsonable(dataclasses.asdict(self))
 
     @classmethod
     def from_doc(cls, d: dict) -> "AuditEvent":
+        now_pkts = d["now_pkts"] if "now_pkts" in d else d["t"]
         return cls(
-            seq=int(d["seq"]), t=float(d["t"]), kind=d["kind"],
+            seq=int(d["seq"]), now_pkts=float(now_pkts), kind=d["kind"],
             rationale=d["rationale"], detail=dict(d["detail"]),
             before=d.get("before"), after=d.get("after"),
         )
@@ -75,7 +86,7 @@ class AuditLog:
     def record(
         self,
         kind: str,
-        t: float,
+        now_pkts: float,
         rationale: str,
         detail: Optional[dict] = None,
         *,
@@ -85,9 +96,9 @@ class AuditLog:
         if kind not in KINDS:
             raise ValueError(f"unknown audit kind {kind!r} (one of {KINDS})")
         ev = AuditEvent(
-            seq=len(self.events), t=float(t), kind=kind, rationale=rationale,
-            detail=_jsonable(detail or {}), before=_jsonable(before),
-            after=_jsonable(after),
+            seq=len(self.events), now_pkts=float(now_pkts), kind=kind,
+            rationale=rationale, detail=_jsonable(detail or {}),
+            before=_jsonable(before), after=_jsonable(after),
         )
         self.events.append(ev)
         return ev

@@ -21,18 +21,55 @@ per batch — `BucketTelemetry.note` cost discipline):
   duration): fast/slow mean gap in slow-σ units flags covariate shift
   even when the label mix holds still.
 
-`DriftMonitor` is pure observation — it never actuates. The fleet item
-that thresholds these signals into a re-tune trigger builds on top.
+`DriftMonitor` is pure observation — it never actuates. `check()` is the
+signal → trigger API the self-optimizing fleet consumes: it folds the
+sketches into one `DriftVerdict` against caller-supplied thresholds, and
+`rebaseline()` re-anchors the slow sketches after a corrective action
+(e.g. a re-optimized pipeline hot-swap) so the monitor measures drift
+*since the fix*, not since the start of time. The thresholding policy
+itself — hysteresis, dwell, cooldown — lives in
+`repro.serve.control.reoptimizer`, which builds on top.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
 
-__all__ = ["DriftMonitor", "StreamingMoments"]
+__all__ = ["DriftMonitor", "DriftVerdict", "StreamingMoments"]
 
 FEATURE_SUMMARY_NAMES = ("flow_len", "mean_pkt_size", "duration_s")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftVerdict:
+    """One thresholded read of the drift sketches (the trigger API).
+
+    `triggered` is the arm edge: some signal crossed its threshold.
+    `armed` is the hysteresis hold: signals are still above
+    ``threshold * release_frac``, so a dwell window opened on a trigger
+    should stay open. `warmed_up` gates both — below `min_batches` the
+    EWMAs are still seeding and every score is startup noise."""
+
+    triggered: bool
+    armed: bool
+    warmed_up: bool
+    class_mix_shift: float
+    feature_shift: float
+    class_threshold: float
+    feature_threshold: float
+
+    def to_doc(self) -> dict:
+        return {
+            "triggered": self.triggered,
+            "armed": self.armed,
+            "warmed_up": self.warmed_up,
+            "class_mix_shift": round(self.class_mix_shift, 6),
+            "feature_shift": round(self.feature_shift, 6),
+            "class_threshold": self.class_threshold,
+            "feature_threshold": self.feature_threshold,
+        }
 
 
 class StreamingMoments:
@@ -201,6 +238,58 @@ class DriftMonitor:
             return {}
         return {int(c): float(self._conf_ewma[c])
                 for c in np.flatnonzero(self._conf_seen)}
+
+    def check(
+        self,
+        class_threshold: float = 0.25,
+        feature_threshold: float = float("inf"),
+        *,
+        release_frac: float = 0.5,
+    ) -> DriftVerdict:
+        """Threshold the current sketches into one `DriftVerdict`.
+
+        `triggered` when the instantaneous class-mix TV distance crosses
+        `class_threshold` or the feature shift crosses
+        `feature_threshold` (default off); `armed` while either signal
+        holds above ``threshold * release_frac`` — the hysteresis band a
+        dwell window uses so a trigger is not disarmed by one quiet
+        batch. Both are False until `min_batches` batches have seeded
+        the EWMAs."""
+        if not 0.0 <= release_frac <= 1.0:
+            raise ValueError("release_frac must be in [0, 1]")
+        warmed = self.n_batches >= self.min_batches
+        cls = self.class_mix_shift()
+        feat = self.feature_shift()
+        trig = warmed and (cls >= class_threshold
+                           or feat >= feature_threshold)
+        armed = warmed and (cls >= class_threshold * release_frac
+                            or feat >= feature_threshold * release_frac)
+        return DriftVerdict(
+            triggered=trig, armed=armed, warmed_up=warmed,
+            class_mix_shift=cls, feature_shift=feat,
+            class_threshold=class_threshold,
+            feature_threshold=feature_threshold,
+        )
+
+    def rebaseline(self) -> None:
+        """Re-anchor the slow sketches at the fast ones' current state.
+
+        Called after a corrective actuation (a re-optimized pipeline was
+        swapped in): the new pipeline's prediction mix *will* differ from
+        the old baseline — that is the point — so without re-anchoring
+        the monitor would immediately re-trigger on its own fix. The fast
+        sketches and flow/batch counts survive; running maxima reset so
+        post-fix excursions are measured against the new baseline."""
+        if self._fast_mix is not None:
+            self._slow_mix = self._fast_mix.copy()
+        if self._feat_slow is not None and self._feat_fast is not None:
+            # restart the slow moments centered on the recent mean: the
+            # variance re-seeds from post-fix batches
+            fresh = StreamingMoments(len(self._feat_fast))
+            fresh.update(self._feat_fast[None, :])
+            self._feat_slow = fresh
+        self.max_class_shift = 0.0
+        self.max_feature_shift = 0.0
 
     def signal(self) -> dict:
         return {

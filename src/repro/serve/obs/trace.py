@@ -148,14 +148,16 @@ class Tracer:
         self._tid[idx] = tid
         self._id[idx] = -1
 
-    def instant(self, name: str, ts: float, *, pid: int = 0,
+    def instant(self, name: str, now_pkts: float, *, pid: int = 0,
                 tid: int = 0) -> None:
+        """One point event at `now_pkts` on the replay packet clock (the
+        canonical unit definition lives in `repro.serve.control.plane`)."""
         if not self.enabled:
             return
         idx = self._slots(1)
         self._ph[idx] = _PH_I
         self._name[idx] = self._name_id(name)
-        self._ts[idx] = ts
+        self._ts[idx] = now_pkts
         self._dur[idx] = 0.0
         self._pid[idx] = pid
         self._tid[idx] = tid

@@ -806,6 +806,7 @@ def replay(
     evict_every: int = 512,
     control=None,
     obs=None,
+    session=None,
 ) -> ReplayStats:
     """Replay `stream` at `offered_pps` through a fresh runtime.
 
@@ -822,25 +823,36 @@ def replay(
     admission-proven blocks with an order-exact per-packet fallback —
     DESIGN.md §6.3/§7).
 
-    With `control` (a `repro.serve.control.ControlConfig`) and a sharded
-    runtime, the replay runs under the adaptive control plane instead:
+    `session` (a `repro.serve.ServeSession`) carries every attachment in
+    one object: the observability bundle, the control-loop config, and
+    the reoptimizer policy. With a control config (and a sharded
+    runtime) the replay runs under the adaptive control plane instead:
     shards are driven interleaved in global time, and telemetry-driven
-    RETA rebalancing / hot-swap / elastic actions fire between blocks
-    (DESIGN.md §9). Steering is then dynamic, so this path delegates to
-    `repro.serve.control.replay.controlled_replay`.
+    RETA rebalancing / hot-swap / elastic / re-optimization actions fire
+    between blocks (DESIGN.md §9, §13). Steering is then dynamic, so
+    that path delegates to `repro.serve.control.replay.controlled_replay`.
 
-    `obs` (a `repro.serve.obs.Observability`) attaches this run's
-    observability hooks — flow/stage span tracing, drift sketches, and
-    (under `control`) the decision audit log (DESIGN.md §11).
+    `control` (a `repro.serve.control.ControlConfig`) and `obs` (a
+    `repro.serve.obs.Observability`) are the pre-session spellings of
+    the same attachments — still accepted, deprecated (they fold into a
+    session via `ServeSession.coerce`).
     """
-    if control is not None:
+    from repro.serve.session import ServeSession
+
+    session = ServeSession.coerce(session, control=control, obs=obs)
+    if session.control is not None:
         from repro.serve.control.replay import controlled_replay
 
         return controlled_replay(
             stream, make_runtime, offered_pps, service,
-            control=control, ring_capacity=ring_capacity,
-            evict_every=evict_every, obs=obs,
+            ring_capacity=ring_capacity, evict_every=evict_every,
+            session=session,
         )
+    if session.reopt is not None:
+        raise TypeError(
+            "a ReoptimizerPolicy needs the control plane (episodes run on "
+            "control-step cadence): add a ControlConfig to the session")
+    obs = session.obs
     rt = make_runtime()
     tracer = None
     if obs is not None:
@@ -930,6 +942,7 @@ def find_zero_loss_rate(
     verbose: bool = False,
     control=None,
     obs=None,
+    session=None,
 ) -> tuple[float, ReplayStats]:
     """Bisect the highest offered rate with zero drops (Fig. 5c protocol).
 
@@ -941,15 +954,23 @@ def find_zero_loss_rate(
     the returned stats come from a final *executing* verification replay
     at the found rate. `ring_capacity` is per worker queue.
 
-    `control` (a `ControlConfig`) measures the *adaptive* fleet: every
-    probe replays under the control plane (fresh runtime, fresh
-    telemetry), so the reported rate is the zero-loss throughput of the
-    closed-loop system — rebalancing transients included.
+    `session` (or the deprecated `control=`) measures the *adaptive*
+    fleet: every probe replays under the control plane (fresh runtime,
+    fresh telemetry), so the reported rate is the zero-loss throughput
+    of the closed-loop system — rebalancing transients included.
 
-    `obs` attaches only to the final *executing* verification replay —
-    the bisection probes stay untraced (tracing a probe would record
-    thousands of spans for runs whose only output is a drop count).
+    The session's observability bundle attaches only to the final
+    *executing* verification replay — the bisection probes stay untraced
+    (tracing a probe would record thousands of spans for runs whose only
+    output is a drop count). The reoptimizer policy likewise rides only
+    the final replay: probes run `execute=False`, which produces no
+    predictions to drift on.
     """
+    from repro.serve.session import ServeSession
+
+    session = ServeSession.coerce(session, control=control, obs=obs)
+    # probes: control plane yes, observability/reoptimizer no
+    probe_session = ServeSession(control=session.control)
     def ring_guard(events_bound: int, scope: str) -> None:
         """The ring is per worker queue: the (sub-)trace offered to a
         queue must exceed it, or that queue can absorb its whole offered
@@ -971,7 +992,7 @@ def find_zero_loss_rate(
     def probe(r):
         return replay(
             stream, lambda: make_runtime(False), r, service,
-            ring_capacity=ring_capacity, control=control,
+            ring_capacity=ring_capacity, session=probe_session,
         )
 
     # bracket from the stream's own base rate unless told otherwise: every
@@ -1011,6 +1032,6 @@ def find_zero_loss_rate(
             hi = mid
     final = replay(
         stream, lambda: make_runtime(True), lo, service,
-        ring_capacity=ring_capacity, control=control, obs=obs,
+        ring_capacity=ring_capacity, session=session,
     )
     return lo, final

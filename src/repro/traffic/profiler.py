@@ -378,11 +378,15 @@ class TrafficProfiler:
                 service = ServiceModel.modeled(
                     x, forest, reuse_discount=self.reuse_discount(ru))
             self._service_cache[skey] = service
+        session = None
+        if control is not None or obs is not None:
+            from repro.serve import ServeSession
+
+            session = ServeSession(control=control, obs=obs)
         rate_pps, stats = find_zero_loss_rate(
             stream, make_runtime, service,
             iters=self.bisect_iters if bisect_iters is None else bisect_iters,
-            ring_capacity=ring_capacity, verbose=verbose, control=control,
-            obs=obs,
+            ring_capacity=ring_capacity, verbose=verbose, session=session,
         )
         self.wallclock["measure_cost"] += time.perf_counter() - t0
         return stats.offered_gbps, stats

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core.search_space import FeatureRep
+from repro.serve import ServeSession
 from repro.serve.control import (
     ControlConfig,
     HeadroomPolicy,
@@ -312,7 +313,8 @@ def test_zipf_acceptance_rebalancing_beats_static(pipeline, stream, ds,
     r_st, s_st = find_zero_loss_rate(stream, mk, service, iters=8,
                                      ring_capacity=ring)
     r_dy, s_dy = find_zero_loss_rate(stream, mk, service, iters=8,
-                                     ring_capacity=ring, control=cfg)
+                                     ring_capacity=ring,
+                                     session=ServeSession(control=cfg))
     assert s_st.drops == 0 and s_dy.drops == 0
     assert s_dy.load_imbalance < s_st.load_imbalance
     assert r_dy >= 1.2 * r_st
@@ -339,8 +341,10 @@ def test_controlled_replay_rate_invariant_predictions(pipeline, stream,
     def mk():
         return fleet(pipeline, execute=True)
 
-    lo = replay(stream, mk, stream.base_pps, service, control=cfg)
-    hi = replay(stream, mk, stream.base_pps * 3, service, control=cfg)
+    lo = replay(stream, mk, stream.base_pps, service,
+                session=ServeSession(control=cfg))
+    hi = replay(stream, mk, stream.base_pps * 3, service,
+                session=ServeSession(control=cfg))
     assert lo.predictions == hi.predictions
     assert lo.control["buckets_moved"] == hi.control["buckets_moved"]
 
@@ -392,7 +396,8 @@ def test_hot_swap_fleet_parity_with_oracles(pipeline, pipeline_b, stream, ds,
     cfg = ControlConfig(interval_pkts=512,
                         swap=PipelineSwap(pipeline_b, svc_b, after_pkts=cut))
     swapped = replay(stream, lambda: fleet(pipeline, execute=True),
-                     stream.base_pps, service, control=cfg)
+                     stream.base_pps, service,
+                     session=ServeSession(control=cfg))
     assert swapped.drops == 0
     assert swapped.control["swaps"] == 1
     assert swapped.metrics.duplicate_predictions == 0
@@ -442,7 +447,8 @@ def test_elastic_scale_out_under_load(pipeline, stream, service):
                               max_batch=64, execute=False)
 
     # per-worker ingest capacity ~1.25M pps at 800ns: 4M pps needs ~5
-    hot = replay(stream, mk, 4e6, service, control=cfg)
+    hot = replay(stream, mk, 4e6, service,
+                 session=ServeSession(control=cfg))
     assert hot.control["workers_added"] > 0
     assert hot.control["active_workers"] > 2
     assert hot.n_shards == 2 + hot.control["workers_added"]
@@ -459,7 +465,8 @@ def test_elastic_scale_in_when_idle(pipeline, stream, service):
         return ShardedRuntime(pipeline, n_shards=2, capacity=4096,
                               max_batch=64, execute=True)
 
-    cold = replay(stream, mk, 1e5, service, control=cfg)
+    cold = replay(stream, mk, 1e5, service,
+                  session=ServeSession(control=cfg))
     assert cold.control["workers_retired"] >= 1
     assert cold.control["active_workers"] == 1
     # retirement evacuated state: nothing lost, predictions complete

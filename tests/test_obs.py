@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.search_space import FeatureRep
+from repro.serve import ServeSession
 from repro.serve.control import ControlConfig, PipelineSwap
 from repro.serve.control.replay import controlled_replay
 from repro.serve.obs import (
@@ -322,7 +323,7 @@ def test_trace_spans_nest_under_controlled_replay(ds, pipeline, pipeline_b,
                         drift=DriftMonitor())
     stats = controlled_replay(
         stream, lambda: fleet(pipeline, execute=True), stream.base_pps,
-        service, control=cfg, obs=obs)
+        service, session=ServeSession(control=cfg, obs=obs))
     assert stats.drops == 0
     assert stats.control["swaps"] == 1
     assert stats.control["rebalances"] > 0
@@ -395,12 +396,13 @@ def test_deploy_and_make_swap_audit(ds, pipeline, stream, service):
                         aux={}, compile_meta={"fused": False},
                         forest_doc=None, pipeline=pipeline)
     log = AuditLog()
+    session = ServeSession(audit=log)
     swap = make_swap(point, after_pkts=100, runtime=None, service=service,
-                     audit=log)
+                     session=session)
     assert swap.after_pkts == 100
     assert log.of_kind("swap_scheduled")[0].detail["after_pkts"] == 100
     rt = StreamingRuntime(pipeline, capacity=512, max_batch=32, execute=False)
-    deploy(point, rt, now=0.0, audit=log)
+    deploy(point, rt, 0.0, session=session)
     assert log.summary() == {"events": 2, "swap_scheduled": 1, "deploy": 1}
 
 
@@ -447,7 +449,7 @@ def test_drift_scenario_fires_uniform_stays_flat(service):
         obs = Observability(drift=DriftMonitor())
         replay(st, lambda: StreamingRuntime(pipe, capacity=2048,
                                             max_batch=32, execute=True),
-               2e5, service, obs=obs)
+               2e5, service, session=ServeSession(obs=obs))
         sig = obs.drift.signal()
         assert sig["n_flows"] == 400
         return sig
@@ -512,7 +514,8 @@ def test_snapshot_document(pipeline, stream, service):
         return rt
 
     stats = replay(stream, mk, 2e5, service,
-                   control=ControlConfig(interval_pkts=512), obs=obs)
+                   session=ServeSession(
+                       control=ControlConfig(interval_pkts=512), obs=obs))
     doc = obs.snapshot(created[-1])
     assert doc["registry"]["counters"]["ingest.pkts_total"] == \
         stats.metrics.pkts_total

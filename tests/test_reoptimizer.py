@@ -1,0 +1,346 @@
+"""Drift-triggered re-optimization (DESIGN.md §13): the episode state
+machine (one fire per excursion, hysteresis release, cooldown refractory),
+the shadow-evaluation guard, and the closed loop end to end — a drifting
+replay triggers exactly one audited episode whose swap preserves
+prediction parity with a fleet deployed directly on the new knee, while
+a uniform replay triggers none."""
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve import (
+    ControlConfig,
+    ControlPlane,
+    DriftMonitor,
+    DriftVerdict,
+    Observability,
+    PacketStream,
+    ReoptOutcome,
+    ReoptimizerConfig,
+    ReoptimizerPolicy,
+    ServeSession,
+    ServiceModel,
+    ShardedRuntime,
+    replay,
+)
+from repro.serve.deploy import BundlePoint
+from repro.traffic import extract_features
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+from repro.traffic.synth import make_scenario_dataset
+
+REP_A = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                    "ack_cnt"), depth=8)
+REP_B = FeatureRep(("dur", "s_load", "s_pkt_cnt", "d_bytes_med",
+                    "psh_cnt"), depth=12)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    # class mix slides along the replay: the excursion the policy hunts
+    return make_scenario_dataset("app-class", "drift", n_flows=600,
+                                 max_pkts=32, seed=3)
+
+
+def _pipe(ds, rep):
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    return _pipe(ds, REP_A)
+
+
+@pytest.fixture(scope="module")
+def pipeline_b(ds):
+    return _pipe(ds, REP_B)
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=0)
+
+
+@pytest.fixture(scope="module")
+def service():
+    return ServiceModel(
+        pkt_accum_ns=800.0, pkt_track_ns=200.0,
+        bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+        gather_ns_per_flow=200.0, source="synthetic",
+    )
+
+
+def _point(rep, pipe):
+    return BundlePoint(rep=rep, cost=1.0, perf=0.95, fidelity="measured",
+                       aux={}, compile_meta={"fused": False},
+                       forest_doc=None, pipeline=pipe)
+
+
+def _verdict(trig, armed):
+    return DriftVerdict(
+        triggered=trig, armed=armed, warmed_up=True,
+        class_mix_shift=0.4 if trig else (0.2 if armed else 0.0),
+        feature_shift=0.0, class_threshold=0.25,
+        feature_threshold=float("inf"))
+
+
+class ScriptedDrift:
+    """DriftMonitor stand-in emitting a scripted verdict sequence
+    (the last entry repeats once the script runs out)."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.rebaselines = 0
+
+    def check(self, class_threshold=0.25, feature_threshold=float("inf"),
+              *, release_frac=0.5):
+        trig, armed = (self.script.pop(0) if len(self.script) > 1
+                       else self.script[0])
+        return _verdict(trig, armed)
+
+    def signal(self):
+        return {"scripted": True}
+
+    def rebaseline(self):
+        self.rebaselines += 1
+
+
+def _plane(pipeline, service, policy, drift, interval=64):
+    rt = ShardedRuntime(pipeline, n_shards=2, capacity=2048,
+                        max_batch=64, execute=False)
+    session = ServeSession(obs=Observability(drift=drift), reopt=policy)
+    return ControlPlane(
+        rt, ControlConfig(interval_pkts=interval, rebalance=False),
+        service, session=session)
+
+
+def _drive(plane, n_steps, interval=64):
+    """Feed `interval` packets per step and run the control step."""
+    buckets = np.arange(interval, dtype=np.int64) % 8
+    keys = np.arange(interval, dtype=np.uint64)
+    for k in range(n_steps):
+        plane.note(keys, buckets)
+        plane.maybe_step(float(k + 1))
+
+
+# ---------------------------------------------------------------------------
+# episode state machine
+# ---------------------------------------------------------------------------
+
+
+def test_episode_fires_once_then_cooldown_blocks(pipeline, pipeline_b,
+                                                 service):
+    calls = []
+
+    def retune(trigger):
+        calls.append(trigger)
+        return ReoptOutcome(point=_point(REP_B, pipeline_b),
+                            service=service,
+                            budget={"measure_evals": 0},
+                            old_objectives=(1.0, 0.9),
+                            new_objectives=(1.1, 0.95))
+
+    drift = ScriptedDrift([(True, True)])
+    policy = ReoptimizerPolicy(retune, ReoptimizerConfig(
+        min_dwell_pkts=64, cooldown_pkts=1 << 20, max_episodes=4))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 10)
+
+    # many triggered steps, ONE episode: cooldown swallows the rest
+    assert len(policy.episodes) == 1
+    assert len(calls) == 1
+    assert policy.state == "cooldown"
+    assert policy.n_suppressed_cooldown > 0
+    # the armed swap fired through the plane's normal path on a later step
+    assert plane.n_swaps == 1
+    assert plane.swap_at_pkts is not None
+    # trigger document carries the clock and the drift evidence
+    assert calls[0]["episode"] == 0
+    assert calls[0]["pkts_ingested"] >= 64
+    assert calls[0]["verdict"]["triggered"] is True
+    # audited: reopt episode + the swap it scheduled + the hot_swap fire
+    kinds = [e.kind for e in plane.audit.events]
+    assert kinds.count("reopt") == 1
+    assert kinds.count("swap_scheduled") == 1
+    assert kinds.count("hot_swap") == 1
+    ep = plane.audit.of_kind("reopt")[0]
+    assert ep.detail["old_knee"] == [1.0, 0.9]
+    assert ep.detail["new_knee"] == [1.1, 0.95]
+    assert ep.detail["budget"] == {"measure_evals": 0}
+    assert ep.detail["drift"]["class_mix_shift"] == pytest.approx(0.4)
+    # the fix re-anchors the baseline exactly once
+    assert drift.rebaselines == 1
+    # summary + registry projection
+    assert plane.summary()["reopt"]["episodes"] == 1
+    snap = policy.to_registry().snapshot()
+    assert snap["counters"]["reopt.episodes"] == 1
+    assert snap["counters"]["reopt.triggers"] == 1
+
+
+def test_hysteresis_release_cancels_dwell(pipeline, service):
+    def retune(trigger):  # must never run
+        raise AssertionError("released excursion must not re-tune")
+
+    # trigger opens a dwell, then the signal drops out of the hysteresis
+    # band before the dwell floor fills -> back to idle, no episode
+    drift = ScriptedDrift([(True, True), (False, False), (False, False)])
+    policy = ReoptimizerPolicy(retune, ReoptimizerConfig(
+        min_dwell_pkts=1 << 16))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 6)
+    assert policy.episodes == []
+    assert policy.n_triggers == 1
+    assert policy.n_disarmed == 1
+    assert policy.state == "idle"
+
+
+def test_hysteresis_hold_keeps_dwell_open(pipeline, pipeline_b, service):
+    # after the trigger the signal dips below the threshold but stays in
+    # the armed band: the dwell must survive the dip and fire
+    drift = ScriptedDrift([(True, True), (False, True)])
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        ReoptimizerConfig(min_dwell_pkts=128, cooldown_pkts=1 << 20))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 8)
+    assert len(policy.episodes) == 1
+    assert policy.n_disarmed == 0
+
+
+def test_cooldown_expiry_allows_next_excursion(pipeline, pipeline_b,
+                                               service):
+    drift = ScriptedDrift([(True, True)])
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        ReoptimizerConfig(min_dwell_pkts=64, cooldown_pkts=192,
+                          max_episodes=2))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 16)
+    # two distinct excursions (cooldown elapsed between them), two swaps
+    assert len(policy.episodes) == 2
+    assert plane.n_swaps == 2
+    # and the cap stops a third
+    assert policy.state == "cooldown" or len(policy.episodes) == 2
+
+
+def test_max_episodes_caps_the_run(pipeline, pipeline_b, service):
+    drift = ScriptedDrift([(True, True)])
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        ReoptimizerConfig(min_dwell_pkts=64, cooldown_pkts=64,
+                          max_episodes=1))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 16)
+    assert len(policy.episodes) == 1
+
+
+def test_reset_clears_episode_history(pipeline, pipeline_b, service):
+    drift = ScriptedDrift([(True, True)])
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        ReoptimizerConfig(min_dwell_pkts=64))
+    plane = _plane(pipeline, service, policy, drift)
+    _drive(plane, 6)
+    assert len(policy.episodes) == 1
+    # a fresh plane (new replay / bisection probe) resets the policy:
+    # no episode history leaks across runs
+    drift2 = ScriptedDrift([(False, False)])
+    plane2 = _plane(pipeline, service, policy, drift2)
+    assert policy.episodes == []
+    assert policy.state == "idle"
+    assert policy.drift is drift2
+    _drive(plane2, 2)
+    assert policy.episodes == []
+
+
+def test_shadow_guard_rejects_live_fleet_evaluation(pipeline, service):
+    def dirty_retune(trigger):
+        # a re-tune body that "measures" on the live fleet moves its
+        # counters — the guard must catch exactly this
+        plane.rt.shards[0].metrics.pkts_total += 1
+        return ReoptOutcome(point=_point(REP_A, pipeline))
+
+    drift = ScriptedDrift([(True, True)])
+    policy = ReoptimizerPolicy(dirty_retune, ReoptimizerConfig(
+        min_dwell_pkts=64))
+    plane = _plane(pipeline, service, policy, drift)
+    with pytest.raises(RuntimeError, match="live fleet"):
+        _drive(plane, 6)
+
+
+# ---------------------------------------------------------------------------
+# closed loop, end to end
+# ---------------------------------------------------------------------------
+
+
+def _selftune_session(policy):
+    return ServeSession(
+        obs=Observability(drift=DriftMonitor()),
+        control=ControlConfig(interval_pkts=256, rebalance=False),
+        reopt=policy,
+    )
+
+
+def _run(stream, pipe, service, session=None, pps=2e5):
+    # max_batch must be small enough that micro-batches flush (and their
+    # deferred resolutions feed the drift monitor) *mid-run* — at 64 the
+    # whole trace fits in a couple of batches per shard and every
+    # prediction resolves at drain, after the last control step
+    return replay(
+        stream,
+        lambda: ShardedRuntime(pipe, n_shards=2, capacity=2048,
+                               max_batch=16, execute=True),
+        pps, service, session=session)
+
+
+def test_drifting_replay_fires_one_episode_with_prediction_parity(
+        ds, pipeline, pipeline_b, stream, service):
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        # 0.35 sits between the uniform arm's small-batch noise ceiling
+        # (~0.25 TV at max_batch=16) and the drift excursion (>0.6)
+        ReoptimizerConfig(class_threshold=0.35, min_dwell_pkts=256,
+                          cooldown_pkts=1 << 20, max_episodes=1))
+    stats = _run(stream, pipeline, service, _selftune_session(policy))
+
+    assert stats.control["reopt"]["episodes"] == 1
+    assert stats.control["swaps"] == 1
+    assert stats.drops == 0
+    swap_at = stats.control["swap_at_pkts"]
+    assert swap_at is not None
+
+    # every flow the fleet saw got exactly one prediction through the swap
+    assert len(stats.predictions) == ds.n_flows
+
+    # flows that began after the swap classify bit-identically to a fleet
+    # deployed directly on the new knee (§9.3 exactly-once + §13 parity)
+    direct = _run(stream, pipeline_b, service)
+    first_pkt = np.full(ds.n_flows, stream.n_events)
+    np.minimum.at(first_pkt, stream.fid, np.arange(stream.n_events))
+    post = np.nonzero(first_pkt >= swap_at)[0]
+    assert len(post) > 0
+    for fid in post:
+        assert stats.predictions[fid] == direct.predictions[fid]
+
+
+def test_uniform_replay_fires_zero_episodes(service, pipeline_b):
+    d = make_scenario_dataset("app-class", "uniform", n_flows=600,
+                              max_pkts=32, seed=3)
+    pipe = _pipe(d, REP_A)
+    st = PacketStream.from_dataset(d, seed=0)
+    policy = ReoptimizerPolicy(
+        lambda trigger: ReoptOutcome(point=_point(REP_B, pipeline_b),
+                                     service=service),
+        ReoptimizerConfig(class_threshold=0.35, min_dwell_pkts=256))
+    session = _selftune_session(policy)
+    stats = _run(st, pipe, service, session)
+    assert stats.control["reopt"]["episodes"] == 0
+    assert stats.control["swaps"] == 0
+    assert session.resolve_audit().of_kind("reopt") == []
