@@ -2,9 +2,9 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-smoke-reuse bench-smoke-selftune bench-runtime bench-compare \
-	tune-smoke trace-smoke example-stream example-control example-tune \
-	example-selftune
+	bench-smoke-reuse bench-smoke-selftune bench-smoke-slo bench-runtime \
+	bench-compare tune-smoke trace-smoke example-stream example-control \
+	example-tune example-selftune
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -55,6 +55,14 @@ bench-smoke-reuse:
 bench-smoke-selftune:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario drift \
 		--selftune
+
+# SLO latency gate (DESIGN.md §14): probe the fleet's replayed latency
+# distribution, then controlled replays against self-calibrated met and
+# violated targets — per-stage p99 decomposition must be consistent with
+# the end-to-end total, breaches must be audited (and only when real),
+# and the exporter's Prometheus/JSONL output must validate
+bench-smoke-slo:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario zipf --slo
 
 # observability smoke (DESIGN.md §11): one instrumented 4-shard zipf
 # replay under the control plane — Chrome trace + stage breakdown +

@@ -612,6 +612,211 @@ def run_selftune_gate(smoke: bool = False,
     return doc
 
 
+SLO_BENCH = "BENCH_slo.json"
+
+
+def run_slo_gate(smoke: bool = False, scenario: str = "zipf",
+                 shards: int = 4,
+                 out_path: pathlib.Path | None = None,
+                 verbose: bool = True) -> dict:
+    """Fixed-offered-load SLO smoke (DESIGN.md §14): per-stage latency
+    decomposition + burn-rate verdicts, and write `results/BENCH_slo.json`.
+
+    One probe replay measures the fleet's actual latency distribution
+    (the sketches' p50/p99), then two controlled arms replay the same
+    stream against *self-calibrated* targets:
+
+    - **met**: target = 10x the probed p99 — attainment must be 1.0 and
+      the run must produce zero audited ``"slo"`` events;
+    - **violated**: target = half the probed *minimum* — unattainable by
+      construction (service time floors every flow's total), so the
+      tracker must breach and the control plane must audit >= 1
+      ``"slo"`` event (edge-triggered: one per episode, not per step).
+
+    Cross-cutting gates on the violated arm's recording: every stage
+    sketch saw every charged flow, the integer-ns stage means sum to the
+    end-to-end mean, the stage p99s bound the total's tail (Bonferroni,
+    within the sketches' alpha), the exporter's JSONL series has one
+    line per executed control step, and its Prometheus rendering
+    validates. The SLO window is derived from the trace's virtual span
+    (smoke traces cover well under a second of virtual time)."""
+    import numpy as np
+
+    from repro.core.search_space import FeatureRep
+    from repro.serve import (
+        ControlConfig, LatencyConfig, MetricsExporter, Observability,
+        PacketStream, ServeSession, ServiceModel, ShardedRuntime, SLOConfig,
+        SLOTracker, check_prometheus, controlled_replay, replay,
+    )
+    from repro.serve.obs import COMPONENTS
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    from .common import RESULTS, write_datapoint
+
+    t0 = time.perf_counter()
+    n_flows, max_pkts = (400, 64) if smoke else (1200, 128)
+    pps = 2e5
+    alpha = 0.01
+    rep = FeatureRep(("dur", "s_load", "s_bytes_mean", "s_iat_mean",
+                      "ack_cnt"), depth=8)
+    ds = make_scenario_dataset("app-class", scenario, n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    pipe = build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    service = ServiceModel(pkt_accum_ns=800.0, pkt_track_ns=200.0,
+                           bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+                           gather_ns_per_flow=200.0, source="synthetic")
+    # the packet clock spans n_events/pps virtual seconds; ~12 windows
+    # gives the slow burn several windows to integrate over
+    window_s = (stream.n_events / pps) / 12.0
+
+    def mk(created):
+        def make():
+            rt = ShardedRuntime(pipe, n_shards=shards, capacity=2048,
+                                max_batch=64, execute=False)
+            created.append(rt)
+            return rt
+        return make
+
+    def merged_recorder(rt):
+        recs = [s.metrics.latency_components for s in rt.shards]
+        out = recs[0].fresh()
+        for r in recs:
+            out.merge_from(r)
+        return out
+
+    # -- probe: measure the distribution the targets calibrate against --
+    probe_created: list = []
+    probe_obs = Observability(latency=LatencyConfig(alpha=alpha))
+    replay(stream, mk(probe_created), pps, service,
+           session=ServeSession(obs=probe_obs))
+    probe = merged_recorder(probe_created[-1]).sketches["total"]
+    p50, p99 = probe.percentile(50), probe.percentile(99)
+    # the controlled arms batch differently than the probe, but no flow
+    # anywhere completes faster than its bucket's service time — half
+    # the probed minimum is unattainable by construction
+    vio_target = 0.5 * probe.percentile(0)
+
+    def arm(target_s, jsonl_path):
+        created: list = []
+        slo = SLOTracker(SLOConfig(target_s=target_s, objective=0.99,
+                                   window_s=window_s, slow_windows=4))
+        obs = Observability(latency=LatencyConfig(alpha=alpha), slo=slo,
+                            exporter=MetricsExporter(jsonl_path=jsonl_path))
+        session = ServeSession(obs=obs,
+                               control=ControlConfig(interval_pkts=512))
+        stats = controlled_replay(stream, mk(created), pps, service,
+                                  session=session)
+        return stats, obs, created[-1]
+
+    jsonl = RESULTS / "slo_timeseries.jsonl"
+    jsonl.unlink(missing_ok=True)             # append-only within a run
+    met_stats, met_obs, _ = arm(10.0 * p99, None)
+    vio_stats, vio_obs, vio_rt = arm(vio_target, str(jsonl))
+
+    rec = merged_recorder(vio_rt)
+    stages = {c: {k: (round(v, 9) if isinstance(v, float) else v)
+                  for k, v in rec.sketches[c].summary().items()}
+              for c in COMPONENTS}
+    total = rec.sketches["total"]
+    parts_mean = sum(rec.sketches[c].mean_s
+                     for c in ("queue_wait", "batch", "service"))
+    stage_p99_sum = sum(rec.sketches[c].percentile(99)
+                        for c in ("queue_wait", "batch", "service"))
+    # per-charge ns rounding on each of 3 components
+    mean_tol = 2e-9 + abs(total.mean_s) * 1e-6
+    decomposition_ok = (
+        len({rec.sketches[c].n for c in COMPONENTS}) == 1
+        and abs(parts_mean - total.mean_s) <= mean_tol
+        and total.percentile(97) <= stage_p99_sum * (1.0 + 4 * alpha))
+
+    met_events = len(met_obs.audit.of_kind("slo"))
+    vio_events = len(vio_obs.audit.of_kind("slo"))
+    prom_problems = check_prometheus(vio_obs.exporter.prometheus())
+    series_lines = len(jsonl.read_text().splitlines())
+
+    def arm_doc(stats, obs, target_s):
+        v = obs.slo.check(stream.n_events / pps)
+        return {
+            "target_s": round(target_s, 9),
+            "attainment": round(obs.slo.attainment, 6),
+            "breaches": obs.slo.breaches,
+            "audited_slo_events": len(obs.audit.of_kind("slo")),
+            "burn_slow": round(v.burn_slow, 3),
+            "samples": obs.slo.samples,
+            "drops": stats.drops,
+            "latency_p99_s": round(stats.latency_p99_s, 9),
+        }
+
+    doc = {
+        "bench": "slo_latency",
+        "smoke": smoke,
+        "config": {"scenario": scenario, "shards": shards,
+                   "n_flows": n_flows, "max_pkts": max_pkts,
+                   "events": int(stream.n_events), "pps": pps,
+                   "alpha": alpha, "window_s": round(window_s, 9),
+                   "interval_pkts": 512},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "probe": {"p50_s": round(p50, 9), "p99_s": round(p99, 9)},
+        "stages": stages,
+        "decomposition": {
+            "stage_mean_sum_s": round(parts_mean, 9),
+            "total_mean_s": round(total.mean_s, 9),
+            "stage_p99_sum_s": round(stage_p99_sum, 9),
+            "total_p99_s": round(total.percentile(99), 9),
+            "consistent": decomposition_ok,
+        },
+        "arms": {"met": arm_doc(met_stats, met_obs, 10.0 * p99),
+                 "violated": arm_doc(vio_stats, vio_obs, vio_target)},
+        "exporter": {"steps": vio_obs.exporter.steps,
+                     "jsonl": str(jsonl), "jsonl_lines": series_lines,
+                     "prometheus_problems": prom_problems},
+    }
+    path = write_datapoint(doc, out_path, name=SLO_BENCH)
+    if verbose:
+        s = stages
+        print(f"# {scenario} {shards}-shard @ {pps:,.0f} pps: total p99 "
+              f"{s['total']['p99_s'] * 1e6:.1f}us = queue "
+              f"{s['queue_wait']['p99_s'] * 1e6:.1f} + batch "
+              f"{s['batch']['p99_s'] * 1e6:.1f} + service "
+              f"{s['service']['p99_s'] * 1e6:.1f} (stage p99s, us)")
+        print(f"# met arm: attainment {doc['arms']['met']['attainment']}, "
+              f"{met_events} audited; violated arm: attainment "
+              f"{doc['arms']['violated']['attainment']}, {vio_events} "
+              f"audited, burn {doc['arms']['violated']['burn_slow']}x")
+        print(f"# wrote {path} (+{series_lines}-line {jsonl.name}, "
+              f"wall {doc['wall_s']:.1f}s)")
+
+    if vio_events < 1:
+        print("FAIL: violated arm produced no audited slo event",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if met_events != 0 or doc["arms"]["met"]["attainment"] != 1.0:
+        print("FAIL: met arm breached a 10x-p99 target", file=sys.stderr)
+        raise SystemExit(1)
+    if not decomposition_ok:
+        print("FAIL: stage decomposition inconsistent with the "
+              "end-to-end total", file=sys.stderr)
+        raise SystemExit(1)
+    if prom_problems:
+        for prob in prom_problems:
+            print(f"FAIL: prometheus exposition: {prob}", file=sys.stderr)
+        raise SystemExit(1)
+    if series_lines != vio_obs.exporter.steps or series_lines < 1:
+        print(f"FAIL: JSONL series has {series_lines} lines for "
+              f"{vio_obs.exporter.steps} control steps", file=sys.stderr)
+        raise SystemExit(1)
+    if verbose:
+        print("OK: stage decomposition consistent, breaches audited, "
+              "exporter output validates")
+    return doc
+
+
 def _shares(stage_seconds: dict) -> tuple:
     total = sum(stage_seconds.values()) if stage_seconds else 0.0
     if total <= 0:
@@ -712,6 +917,16 @@ if __name__ == "__main__":
                    "threshold-0 bit-parity + zero drops, fail if on/off "
                    "speedup < R (0 measures without gating); writes "
                    "results/BENCH_runtime_zipf.json")
+    p.add_argument("--slo", action="store_true",
+                   help="run the SLO latency gate instead of the figure "
+                   "(DESIGN.md §14): probe the fleet's replayed latency "
+                   "distribution, then controlled replays against a met "
+                   "and a violated self-calibrated target — assert the "
+                   "per-stage p99 decomposition is consistent with the "
+                   "end-to-end total, >= 1 audited slo event when "
+                   "violated and none when met, and the exporter's "
+                   "Prometheus/JSONL output validates; writes "
+                   "results/BENCH_slo.json + slo_timeseries.jsonl")
     p.add_argument("--selftune", action="store_true",
                    help="run the self-optimizing-fleet gate instead of the "
                    "figure (DESIGN.md §13): drift-scenario controlled replay "
@@ -721,6 +936,13 @@ if __name__ == "__main__":
                    "zero episodes on a uniform control arm; writes "
                    "results/BENCH_selftune.json")
     args = p.parse_args()
+    if args.slo:
+        run_slo_gate(smoke=args.smoke,
+                     scenario=args.scenario if args.scenario != "uniform"
+                     else "zipf",
+                     shards=args.shards if args.shards > 1 else 4,
+                     out_path=args.out)
+        raise SystemExit(0)
     if args.selftune:
         run_selftune_gate(smoke=args.smoke, out_path=args.out)
         raise SystemExit(0)

@@ -7,10 +7,18 @@ replay hot path and fails the build when it stops holding:
 
 - **detached**: plain replay, no `Observability` bundle (the baseline
   every serving measurement in this repo runs as);
-- **disabled**: bundle attached with `Tracer(enabled=False)` — the
-  configuration a fleet runs in production when tracing is off;
+- **disabled**: bundle attached with `Tracer(enabled=False)` and *no*
+  latency recording — the configuration a fleet runs in production
+  when tracing is off; this path crosses every hook site the §14
+  latency/SLO instrumentation added, so the gate covers those too;
 - **enabled**: full flow-lifecycle + stage tracing at sample=1.0
-  (reported for context; never gated — tracing costs what it costs).
+  (reported for context; never gated — tracing costs what it costs);
+- **latency**: per-component sketch recording + SLO tracking attached
+  (DESIGN.md §14), tracer disabled (reported for context).
+
+The latency round also binds a `MetricsExporter` and pushes the fleet's
+Prometheus rendering through `check_prometheus`; format problems fail
+the gate like an overhead regression would.
 
 Each round times all three modes back-to-back (order rotating) and the
 reported overhead is the **median over rounds of the same-round
@@ -61,8 +69,9 @@ def _fixture(n_flows: int, max_pkts: int):
 def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
         shards: int = 4, offered_pps: float = 2e5,
         verbose: bool = True) -> dict:
-    from repro.serve import (Observability, ServeSession, ShardedRuntime,
-                             Tracer, replay)
+    from repro.serve import (LatencyConfig, MetricsExporter, Observability,
+                             ServeSession, ShardedRuntime, SLOConfig,
+                             SLOTracker, Tracer, check_prometheus, replay)
 
     pipe, stream, service = _fixture(n_flows, max_pkts)
 
@@ -75,11 +84,15 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
     def bundle(mode: str):
         if mode == "detached":
             return None
-        return Observability(
+        obs = Observability(
             tracer=Tracer(capacity=1 << 15, sample=1.0,
                           enabled=(mode == "enabled")))
+        if mode == "latency":
+            obs.latency = LatencyConfig()
+            obs.slo = SLOTracker(SLOConfig(target_s=1e-3, window_s=0.01))
+        return obs
 
-    modes = ("detached", "disabled", "enabled")
+    modes = ("detached", "disabled", "enabled", "latency")
 
     def one(mode: str) -> float:
         obs = bundle(mode)  # tracer allocation outside the timed region
@@ -101,7 +114,8 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
     for m in modes:
         one(m)
     walls = {m: float("inf") for m in modes}
-    ratios: dict[str, list[float]] = {"disabled": [], "enabled": []}
+    ratios: dict[str, list[float]] = {"disabled": [], "enabled": [],
+                                      "latency": []}
     for r in range(repeats):
         t: dict[str, float] = {}
         for m in modes[r % len(modes):] + modes[:r % len(modes)]:
@@ -110,6 +124,15 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
         for m in ratios:
             ratios[m].append(t[m] / t["detached"])
     overhead = {m: statistics.median(rs) - 1.0 for m, rs in ratios.items()}
+
+    # format-validity pass (untimed): a latency-instrumented replay with
+    # a bound exporter must render Prometheus text that validates
+    obs = bundle("latency")
+    obs.exporter = MetricsExporter()
+    replay(stream, make_runtime, offered_pps, service,
+           session=ServeSession(obs=obs))
+    problems = check_prometheus(obs.exporter.prometheus())
+
     out = {
         "bench": "trace_overhead",
         "config": {"repeats": repeats, "n_flows": n_flows,
@@ -118,9 +141,10 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
                    "events": int(stream.n_events)},
         "wall_s": {m: round(w, 4) for m, w in walls.items()},
         "overhead_pct": {m: round(100 * o, 2) for m, o in overhead.items()},
+        "prometheus_problems": problems,
     }
     if verbose:
-        for m in ("detached", "disabled", "enabled"):
+        for m in modes:
             extra = (f"  ({out['overhead_pct'][m]:+.2f}% median same-round"
                      " vs detached)" if m != "detached" else "")
             print(f"{m:9s} best-of-{repeats}: {walls[m]*1e3:8.2f} ms{extra}")
@@ -129,8 +153,14 @@ def run(repeats: int = 5, n_flows: int = 1200, max_pkts: int = 128,
 
 def check_gate(doc: dict, gate_pct: float) -> int:
     """Fail when the tracing-*disabled* path regresses replay wall-clock
-    beyond `gate_pct` percent of the untraced baseline. The enabled path
-    is informational only."""
+    beyond `gate_pct` percent of the untraced baseline, or when the
+    exporter's Prometheus rendering stops validating. The enabled and
+    latency-recording paths are informational only."""
+    problems = doc.get("prometheus_problems", [])
+    if problems:
+        for p in problems:
+            print(f"FAIL: prometheus exposition: {p}", file=sys.stderr)
+        return 1
     over = doc["overhead_pct"]["disabled"]
     n = len(doc.get("attempts", [over]))
     if over > gate_pct:

@@ -76,17 +76,27 @@ _DEPLOY_EXPORTS = (
     "warm_buckets_for",
 )
 
-# unified serving observability (DESIGN.md §11): fleet-wide metrics
+# unified serving observability (DESIGN.md §11, §14): fleet-wide metrics
 # registry, flow/stage span tracing on the replay clock, control-plane
-# audit log, online drift signals
+# audit log, online drift signals, per-component latency sketches,
+# windowed SLO burn-rate tracking, Prometheus/JSONL export
 _OBS_EXPORTS = (
     "AuditLog",
     "DriftMonitor",
     "DriftVerdict",
+    "LatencyConfig",
+    "LatencyRecorder",
+    "LatencySketch",
+    "MetricsExporter",
     "MetricsRegistry",
     "Observability",
+    "SLOConfig",
+    "SLOTracker",
+    "SLOVerdict",
     "Tracer",
+    "check_prometheus",
     "fleet_registry",
+    "render_prometheus",
 )
 
 __all__ = ["make_serve_step", "make_prefill", *_SESSION_EXPORTS,

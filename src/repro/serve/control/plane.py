@@ -181,6 +181,16 @@ class ControlPlane:
         self.reopt = session.reopt
         if self.reopt is not None:
             self.reopt.reset(drift=session.drift)
+        # SLO verdicts + export (DESIGN.md §14): the shared tracker the
+        # worker clocks feed is *checked* here at control-step cadence —
+        # breach edges are audited (kind "slo") and the verdict gauges
+        # published through the telemetry registry; a bound exporter
+        # appends one JSONL record per executed step
+        self.slo = session.slo
+        self.n_slo_breaches = 0
+        self.exporter = session.exporter
+        if self.exporter is not None:
+            self.exporter.bind(self._export_registry, slo=self.slo)
         self._pending_swap: Optional[PipelineSwap] = config.swap
         self._pkts_since = 0
         self._last_step_t: Optional[float] = None
@@ -379,6 +389,32 @@ class ControlPlane:
         if self.reopt is not None:
             self.reopt.maybe_step(self, now_pkts)
 
+        # 5. SLO verdict (DESIGN.md §14.2): fold the shared tracker's
+        # windows at this step's clock edge, publish the verdict into the
+        # telemetry registry projection, and audit breach *edges* — one
+        # "slo" event per breach episode, zero when the objective is met.
+        if self.slo is not None:
+            v = self.slo.check(now_pkts)
+            self.telemetry.publish("slo_attainment_fast", v.attainment_fast)
+            self.telemetry.publish("slo_attainment_slow", v.attainment_slow)
+            self.telemetry.publish("slo_burn_fast", v.burn_fast)
+            self.telemetry.publish("slo_burn_slow", v.burn_slow)
+            self.telemetry.publish("slo_breached", 1.0 if v.breached else 0.0)
+            if v.new_breach:
+                self.n_slo_breaches += 1
+                self._audit(
+                    "slo", now_pkts,
+                    f"attainment {v.attainment_fast:.4f} under objective "
+                    f"{v.objective:.4f} for target {v.target_s * 1e6:.0f}µs; "
+                    f"burn fast {v.burn_fast:.1f}x / slow {v.burn_slow:.1f}x "
+                    f"of error budget",
+                    v.to_doc(),
+                )
+
+        # 6. export tick: one JSONL record per executed control step
+        if self.exporter is not None:
+            self.exporter.step(now_pkts)
+
         if (report.buckets_moved or report.swapped or report.workers_added
                 or report.workers_retired):
             self.log.append({
@@ -392,6 +428,17 @@ class ControlPlane:
         return report
 
     # -- internals -----------------------------------------------------------
+
+    def _export_registry(self):
+        """The exporter's pull view: the merged fleet registry plus the
+        telemetry and SLO projections, one namespace per pull."""
+        from repro.serve.obs import fleet_registry
+
+        reg = fleet_registry(self.rt)
+        self.telemetry.to_registry(registry=reg)
+        if self.slo is not None:
+            self.slo.to_registry(registry=reg)
+        return reg
 
     def _loads_doc(self) -> dict:
         """Snapshot of the planner's view: per-shard EWMA load projected
@@ -460,4 +507,7 @@ class ControlPlane:
         }
         if self.reopt is not None:
             out["reopt"] = self.reopt.summary()
+        if self.slo is not None:
+            out["slo_breaches"] = self.n_slo_breaches
+            out["slo_attainment"] = round(self.slo.attainment, 6)
         return out

@@ -77,10 +77,11 @@ def controlled_replay(
             "actuates RETA entries and per-shard state, which a single "
             "worker does not have"
         )
-    tracer = None
+    tracer = slo = None
     if obs is not None:
         obs.attach(rt)
         tracer = obs.tracer
+        slo = obs.slo
     plane = ControlPlane(rt, session.control, service, session=session)
     t_e = stream.base_t * (stream.base_pps / offered_pps)
     t_end = float(t_e[-1]) + rt.flush_timeout_s if len(t_e) else 0.0
@@ -93,7 +94,7 @@ def controlled_replay(
 
     clocks = [
         _WorkerClock(srt, service, ring_capacity, evict_every,
-                     pid=i, tracer=tracer)
+                     pid=i, tracer=tracer, slo=slo)
         for i, srt in enumerate(rt.shards)
     ]
     E = stream.n_events
@@ -113,7 +114,7 @@ def controlled_replay(
                 clocks.append(_WorkerClock(
                     rt.shards[len(clocks)], plane.service,
                     ring_capacity, evict_every,
-                    pid=len(clocks), tracer=tracer))
+                    pid=len(clocks), tracer=tracer, slo=slo))
             # quiesce/swap flushes ran on the configuration that produced
             # them: charge before retargeting service constants
             for i, recs in step.records.items():

@@ -36,6 +36,15 @@ class BucketTelemetry:
         self.ewma = np.zeros(n_buckets, np.float64)
         self.rolls = 0
         self.total_pkts = 0
+        # published control signals (DESIGN.md §14.2): point-in-time
+        # verdict values the plane pushes each step (SLO attainment/burn),
+        # exported as gauges alongside the load statistics
+        self.signals: dict[str, float] = {}
+
+    def publish(self, name: str, value: float) -> None:
+        """Publish one named control signal (latest value wins; the
+        per-step history belongs to the exporter's JSONL series)."""
+        self.signals[name] = float(value)
 
     def note(self, buckets: np.ndarray) -> None:
         """Account one ingest block's packets by bucket id."""
@@ -82,4 +91,6 @@ class BucketTelemetry:
             float(self.ewma.max() / mean) if mean > 0 else 1.0,
             reduce="max",
         )
+        for name, value in self.signals.items():
+            reg.set_gauge(prefix + name, value, reduce="mean")
         return reg

@@ -14,11 +14,18 @@ One subsystem spanning the serving stack, four pieces:
 - `drift` — the online `DriftMonitor`: class-mix and confidence EWMAs
   plus streaming feature moments from dispatch outputs — the signal the
   ROADMAP's self-optimizing fleet will threshold.
+- `latency` — per-component `LatencySketch` recording (queue-wait /
+  batch-residency / service / total) with bounded relative error and
+  order-independent merges (DESIGN.md §14.1).
+- `slo` — windowed attainment + multi-window burn-rate tracking on the
+  packet clock, audited as kind ``"slo"`` (DESIGN.md §14.2).
+- `export` — Prometheus text exposition + JSONL time series over any
+  registry view, at control-step cadence (DESIGN.md §14.3).
 
-`Observability` bundles the three live hooks and knows how to attach
-them to a runtime (single or sharded): attachment is attribute
-injection on the dispatchers, so a runtime with no bundle attached pays
-exactly one ``is not None`` test per hook site.
+`Observability` bundles the live hooks and knows how to attach them to
+a runtime (single or sharded): attachment is attribute injection on the
+dispatchers and metrics blocks, so a runtime with no bundle attached
+pays exactly one ``is not None`` test per hook site.
 """
 from __future__ import annotations
 
@@ -27,22 +34,35 @@ from typing import Optional
 
 from .audit import AuditEvent, AuditLog
 from .drift import DriftMonitor, DriftVerdict, StreamingMoments
+from .export import MetricsExporter, check_prometheus, render_prometheus
+from .latency import COMPONENTS, LatencyConfig, LatencyRecorder, LatencySketch
 from .registry import MetricsRegistry
+from .slo import SLOConfig, SLOTracker, SLOVerdict
 from .trace import Tracer, TID_CONTROL, TID_INFER, TID_INGEST
 
 __all__ = [
     "AuditEvent",
     "AuditLog",
+    "COMPONENTS",
     "DriftMonitor",
     "DriftVerdict",
+    "LatencyConfig",
+    "LatencyRecorder",
+    "LatencySketch",
+    "MetricsExporter",
     "MetricsRegistry",
     "Observability",
+    "SLOConfig",
+    "SLOTracker",
+    "SLOVerdict",
     "StreamingMoments",
     "Tracer",
     "TID_CONTROL",
     "TID_INFER",
     "TID_INGEST",
+    "check_prometheus",
     "fleet_registry",
+    "render_prometheus",
 ]
 
 
@@ -83,6 +103,13 @@ class Observability:
     tracer: Optional[Tracer] = None
     drift: Optional[DriftMonitor] = None
     audit: AuditLog = dataclasses.field(default_factory=AuditLog)
+    # latency-component sketches: a config, not a recorder — one fresh
+    # `LatencyRecorder` is minted per worker so sketches merge per shard
+    latency: Optional[LatencyConfig] = None
+    # a single shared tracker: window counts are integer adds, so every
+    # shard's `_WorkerClock` can feed the same one
+    slo: Optional[SLOTracker] = None
+    exporter: Optional[MetricsExporter] = None
 
     def attach(self, runtime) -> "Observability":
         """Inject the hooks into every worker's dispatcher. Idempotent;
@@ -99,6 +126,8 @@ class Observability:
         disp.tracer = self.tracer
         disp.drift = self.drift
         disp.trace_pid = shard_id
+        if self.latency is not None and worker.metrics.latency_components is None:
+            worker.metrics.enable_latency_components(self.latency.make())
 
     def snapshot(self, runtime, control=None) -> dict:
         """One frozen document for the whole run: the merged fleet
@@ -110,6 +139,8 @@ class Observability:
             out["control_registry"] = control.telemetry.to_registry().snapshot()
         if self.drift is not None:
             out["drift"] = self.drift.signal()
+        if self.slo is not None:
+            out["slo"] = self.slo.signal()
         if self.audit is not None and len(self.audit):
             out["audit"] = self.audit.summary()
         if self.tracer is not None:

@@ -29,7 +29,7 @@ import numpy as np
 __all__ = ["AuditEvent", "AuditLog"]
 
 KINDS = ("rebalance", "scale_out", "retire", "hot_swap", "swap_scheduled",
-         "deploy", "reopt")
+         "deploy", "reopt", "slo")
 
 
 def _jsonable(x):

@@ -17,6 +17,11 @@ Metric kinds:
   min/max/sum merge exactly (commutative integer/scalar ops); only the
   capped raw-sample reservoir is order-sensitive, and snapshots therefore
   expose counts + exact scalars, never the reservoir.
+- **sketches** — `LatencySketch` quantile sketches (DESIGN.md §14.1).
+  Like histograms but with a bounded-relative-error percentile read and
+  *no* order-sensitive state at all: counts, n and the integer-ns sum
+  merge by integer addition, so merged snapshots are bit-identical under
+  shard permutation.
 - **sets** — e.g. dispatch shapes seen; merge is set union.
 - **samples** — bounded append-only observations (batch occupancy);
   merge concatenates, and every derived statistic is permutation-
@@ -34,6 +39,7 @@ from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
+from repro.serve.obs.latency import LatencySketch
 from repro.serve.runtime.metrics import LatencyHistogram
 
 __all__ = ["MetricsRegistry"]
@@ -49,6 +55,7 @@ class MetricsRegistry:
         self._counters: dict[str, int] = {}
         self._gauges: dict[str, tuple[float, str, float]] = {}  # (v, reduce, w)
         self._hists: dict[str, LatencyHistogram] = {}
+        self._sketches: dict[str, LatencySketch] = {}
         self._sets: dict[str, set] = {}
         self._samples: dict[str, list] = {}
 
@@ -70,6 +77,10 @@ class MetricsRegistry:
         """Register a live histogram block (not copied: snapshots copy)."""
         self._hists[name] = hist
 
+    def attach_sketch(self, name: str, sketch: LatencySketch) -> None:
+        """Register a live quantile sketch (not copied: snapshots copy)."""
+        self._sketches[name] = sketch
+
     def union(self, name: str, items: Iterable) -> None:
         self._sets.setdefault(name, set()).update(items)
 
@@ -87,10 +98,16 @@ class MetricsRegistry:
     def hist(self, name: str) -> LatencyHistogram:
         return self._hists[name]
 
+    def sketch(self, name: str) -> LatencySketch:
+        return self._sketches[name]
+
+    def sketch_names(self) -> list[str]:
+        return sorted(self._sketches)
+
     def names(self) -> list[str]:
         return sorted(
             set(self._counters) | set(self._gauges) | set(self._hists)
-            | set(self._sets) | set(self._samples)
+            | set(self._sketches) | set(self._sets) | set(self._samples)
         )
 
     # -- snapshot / delta ----------------------------------------------------
@@ -114,6 +131,7 @@ class MetricsRegistry:
             "gauges": {k: {"value": v, "reduce": r, "weight": w}
                        for k, (v, r, w) in self._gauges.items()},
             "hists": hists,
+            "sketches": {k: sk.to_doc() for k, sk in self._sketches.items()},
             "sets": {k: sorted(map(_set_key, v)) for k, v in self._sets.items()},
             "samples": {k: list(v) for k, v in self._samples.items()},
         }
@@ -136,6 +154,7 @@ class MetricsRegistry:
                 for k, g in cur.get("gauges", {}).items()
             },
             "hists": {},
+            "sketches": {},
             "sets": {},
             "samples": {},
         }
@@ -152,6 +171,23 @@ class MetricsRegistry:
                     # min/max are lifetime extrema, not interval ones
                     "min_s": h["min_s"],
                     "max_s": h["max_s"],
+                }
+        for k, s in cur.get("sketches", {}).items():
+            p = prev.get("sketches", {}).get(k)
+            if p is None:
+                out["sketches"][k] = dict(s)
+            else:
+                diff = dict(s.get("counts", []))
+                for i, c in p.get("counts", []):
+                    diff[i] = diff.get(i, 0) - c
+                out["sketches"][k] = {
+                    **{f: s[f] for f in ("alpha", "lo_s", "hi_s")},
+                    "n": s["n"] - p["n"],
+                    "sum_ns": s["sum_ns"] - p["sum_ns"],
+                    # min/max are lifetime extrema, not interval ones
+                    "min_s": s["min_s"],
+                    "max_s": s["max_s"],
+                    "counts": [[i, c] for i, c in sorted(diff.items()) if c],
                 }
         for k, s in cur.get("sets", {}).items():
             before = set(map(tuple_or_id, prev.get("sets", {}).get(k, [])))
@@ -189,6 +225,11 @@ class MetricsRegistry:
                     agg._hists[k] = LatencyHistogram(
                         lo_s=h.lo_s, hi_s=h.hi_s, max_samples=h.max_samples)
                 agg._hists[k].merge_from(h)
+            for k, sk in part._sketches.items():
+                if k not in agg._sketches:
+                    agg._sketches[k] = LatencySketch(
+                        alpha=sk.alpha, lo_s=sk.lo_s, hi_s=sk.hi_s)
+                agg._sketches[k].merge_from(sk)
             for k, s in part._sets.items():
                 agg._sets.setdefault(k, set()).update(s)
             for k, v in part._samples.items():

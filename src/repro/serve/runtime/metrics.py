@@ -40,6 +40,16 @@ class LatencyHistogram:
       exact bucket counts afterwards — the absolute error is bounded by the
       width of the bucket containing the requested rank;
     - min/max/sum stay exact running scalars regardless of the cap.
+
+    Past the cap the bucket-width bound is coarse (at the default 8
+    buckets per decade a bucket spans ~33% relative width), so a
+    `LatencySketch` (serve/obs/latency.py, DESIGN.md §14.1) can be
+    attached: `attach_sketch` creates one fed by every `record_many`,
+    `link_sketch` points at an externally fed one recording the same
+    sample population (the per-worker `LatencyRecorder`'s total sketch).
+    When the attached sketch has seen every sample this histogram has,
+    `percentile` reads it instead of interpolating — relative error
+    <= the sketch's ``alpha`` (1% by default) at any stream length.
     """
 
     def __init__(
@@ -65,11 +75,34 @@ class LatencyHistogram:
         self._max = 0.0
         self._sum = 0.0
         self._rng = np.random.default_rng(seed)
+        self._sketch = None        # bounded-relative-error percentile source
+        self._sketch_fed = False   # True: record_many feeds it (owned)
+
+    def attach_sketch(self, alpha: float = 0.01):
+        """Create and own a `LatencySketch` fed by every subsequent
+        `record_many`, upgrading post-cap percentiles from the
+        bucket-width bound to relative error <= `alpha`. Attach before
+        recording: the sketch only covers samples recorded after it."""
+        from repro.serve.obs.latency import LatencySketch  # avoid cycle
+
+        self._sketch = LatencySketch(alpha=alpha)
+        self._sketch_fed = True
+        return self._sketch
+
+    def link_sketch(self, sketch) -> None:
+        """Read percentiles from an *externally fed* sketch covering the
+        same sample population (e.g. a `LatencyRecorder`'s total sketch,
+        written at the same charge site). Never fed by `record_many` —
+        that would double-count."""
+        self._sketch = sketch
+        self._sketch_fed = False
 
     def record_many(self, seconds: np.ndarray) -> None:
         x = np.asarray(seconds, dtype=np.float64).ravel()
         if x.size == 0:
             return
+        if self._sketch_fed:
+            self._sketch.record_many(x)
         idx = np.searchsorted(self.edges, x, side="right")
         self._counts += np.bincount(idx, minlength=len(self._counts))
         self._min = min(self._min, float(x.min()))
@@ -108,11 +141,29 @@ class LatencyHistogram:
         return self._n
 
     def percentile(self, q: float) -> float:
+        """The q-th percentile (q in [0, 100]).
+
+        Accuracy contract, in order of preference:
+
+        1. **exact** while the reservoir still holds every sample
+           (`np.percentile` over the raw floats);
+        2. **sketch-backed** past the cap when an attached/linked sketch
+           has seen the same population: relative error <= its `alpha`;
+        3. **bucket interpolation** over the exact counts otherwise: the
+           true rank statistic lies in the same bucket as the returned
+           value, so the absolute error is bounded by that bucket's
+           width — at `per_decade` log buckets, a relative width of
+           ``10**(1/per_decade) - 1`` (~33% at the default 8/decade).
+           Deterministic, but coarse: attach a sketch for tail reads.
+        """
         if self._n == 0:
             return 0.0
         if self._n == self._n_res:
             # reservoir still holds every sample: exact
             return float(np.percentile(self._reservoir[: self._n_res], q))
+        if self._sketch is not None and self._sketch.n == self._n:
+            # sketch covers the same population: relative error <= alpha
+            return self._sketch.percentile(q)
         # bucket interpolation over the exact counts: rank the q-th sample,
         # find its bucket, interpolate linearly inside it. The true value is
         # somewhere in the same bucket, so the error <= bucket width — a
@@ -140,6 +191,10 @@ class LatencyHistogram:
         """
         if other._n == 0:
             return
+        if self._sketch_fed and other._sketch is not None:
+            # owned sketches fold too (linked ones merge via the registry's
+            # sketch kind — merging here would double-count them)
+            self._sketch.merge_from(other._sketch)
         self._counts += other._counts
         self._min = min(self._min, other._min)
         self._max = max(self._max, other._max)
@@ -201,6 +256,19 @@ METRIC_NAMESPACE = {
     "reuse_hits": "cache.reuse_hits",
     "refreshes": "cache.refreshes",
     "forced_reinfer": "cache.forced_reinfer",
+    # latency-component sketches (serve/obs/latency.py, DESIGN.md §14.1) —
+    # not counter fields, but registered here so the namespace test covers
+    # them and `LatencyRecorder` can't invent registry names ad hoc
+    "latency_queue_wait": "latency.queue_wait",
+    "latency_batch": "latency.batch",
+    "latency_service": "latency.service",
+    "latency_total": "latency.total",
+    # SLO tracker projections (serve/obs/slo.py, DESIGN.md §14.2)
+    "slo_samples": "slo.samples",
+    "slo_violations": "slo.violations",
+    "slo_breaches": "slo.breaches",
+    "slo_attainment": "slo.attainment",
+    "slo_breached": "slo.breached",
 }
 
 
@@ -237,6 +305,10 @@ class RuntimeMetrics:
     batch_occupancy: list = dataclasses.field(default_factory=list)
     shapes_seen: set = dataclasses.field(default_factory=set)
     latency: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
+    # per-component latency sketches (DESIGN.md §14.1), minted by
+    # `Observability.attach_worker` when latency recording is on; None
+    # keeps the disabled path at one attr load per charged batch
+    latency_components: object = None
 
     @property
     def drops(self) -> int:
@@ -249,6 +321,13 @@ class RuntimeMetrics:
         added later are picked up by the registry bridge automatically."""
         return [f.name for f in dataclasses.fields(cls)
                 if f.type in (int, "int")]
+
+    def enable_latency_components(self, recorder) -> None:
+        """Install a per-component `LatencyRecorder` and point the total
+        histogram at its total sketch, so `latency.percentile` keeps its
+        bounded relative error past the reservoir cap."""
+        self.latency_components = recorder
+        self.latency.link_sketch(recorder.sketches["total"])
 
     def to_registry(self, prefix: str = "", registry=None):
         """Project this block into a `MetricsRegistry` namespace
@@ -267,6 +346,8 @@ class RuntimeMetrics:
                            self.batch_occupancy)
         reg.union(prefix + "dispatch.shapes_seen", self.shapes_seen)
         reg.attach_hist(prefix + "dispatch.latency", self.latency)
+        if self.latency_components is not None:
+            self.latency_components.to_registry(registry=reg, prefix=prefix)
         return reg
 
     @classmethod
@@ -285,6 +366,10 @@ class RuntimeMetrics:
         m.shapes_seen = set(reg._sets.get("dispatch.shapes_seen", set()))
         if "dispatch.latency" in reg._hists:
             m.latency = reg.hist("dispatch.latency")
+        if METRIC_NAMESPACE["latency_total"] in reg._sketches:
+            from repro.serve.obs.latency import LatencyRecorder  # avoid cycle
+
+            m.enable_latency_components(LatencyRecorder.from_registry(reg))
         return m
 
     def compile_count(self) -> int:
@@ -328,4 +413,6 @@ class RuntimeMetrics:
             "compile_count": self.compile_count(),
             "batch_occupancy": self.occupancy_stats(),
             "latency": self.latency.summary(),
+            **({"latency_components": self.latency_components.summary()}
+               if self.latency_components is not None else {}),
         }

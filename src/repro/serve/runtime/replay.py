@@ -566,6 +566,7 @@ class _WorkerClock:
         *,
         pid: int = 0,
         tracer=None,
+        slo=None,
     ):
         self.rt = rt
         self.service = service
@@ -577,10 +578,13 @@ class _WorkerClock:
         self._since_poll = 0
         self.t = 0.0
         # observability (repro.serve.obs): shard pid for trace grouping,
-        # optional span tracer, and the always-on per-stage service-time
-        # rollup (three float adds per block/batch — DESIGN.md §11)
+        # optional span tracer, the always-on per-stage service-time
+        # rollup (three float adds per block/batch — DESIGN.md §11), and
+        # the optional shared SLO tracker (DESIGN.md §14.2) — window
+        # counts are integer adds, so all shards feed one tracker
         self.pid = pid
         self.tracer = tracer
+        self.slo = slo
         self.stage_s = {"ingest": 0.0, "infer": 0.0, "flush": 0.0}
 
     def charge(self, recs: list[BatchRecord], charge_submit: bool = True) -> None:
@@ -621,7 +625,17 @@ class _WorkerClock:
             done = start + svc
             self.busy_infer = done
             self.stage_s["infer"] += svc
-            m.latency.record_many(done - rec.ready_ts)
+            total = done - rec.ready_ts
+            m.latency.record_many(total)
+            # latency decomposition + SLO accounting (DESIGN.md §14): the
+            # enqueue→prediction total splits exactly into queue-wait
+            # (ready→flush, per flow), batch-residency (flush→start, the
+            # inference lane's backlog) and service (start→done)
+            lat = m.latency_components
+            if lat is not None:
+                lat.record_batch(rec.ready_ts, rec.flush_ts, start, done)
+            if self.slo is not None:
+                self.slo.note(done, total)
             if tr is not None and tr.enabled:
                 # one X span per batch on the inference lane; sampled flow
                 # lifecycles close at the same service-completion edge
@@ -777,6 +791,7 @@ def _drive(
     *,
     pid: int = 0,
     tracer=None,
+    slo=None,
 ) -> _WorkerClock:
     """Drive one worker's whole event stream: feed + drain (the static
     single-owner path; the control plane drives `_WorkerClock` directly).
@@ -790,7 +805,7 @@ def _drive(
     clock edge. Returns the clock (its stage rollup outlives the drive).
     """
     clock = _WorkerClock(rt, service, ring_capacity, evict_every,
-                         pid=pid, tracer=tracer)
+                         pid=pid, tracer=tracer, slo=slo)
     clock.feed(ev)
     clock.finish(t_end)
     return clock
@@ -854,10 +869,15 @@ def replay(
             "control-step cadence): add a ControlConfig to the session")
     obs = session.obs
     rt = make_runtime()
-    tracer = None
+    tracer = slo = None
     if obs is not None:
         obs.attach(rt)
         tracer = obs.tracer
+        slo = obs.slo
+        if obs.exporter is not None:
+            from repro.serve.obs import fleet_registry
+
+            obs.exporter.bind(lambda: fleet_registry(rt), slo=slo)
     # tcpreplay-style clock compression: one factor scales delivery times
     t_e = stream.base_t * (stream.base_pps / offered_pps)
     # stop the clock one flush-timeout after the last packet: flows still
@@ -884,7 +904,7 @@ def replay(
                 shard_stages[i] = fold_stages(_drive(
                     srt, _gather_events(stream, t_e, sel), service,
                     ring_capacity, evict_every, t_end,
-                    pid=i, tracer=tracer))
+                    pid=i, tracer=tracer, slo=slo))
             else:
                 srt.drain(t_end)
         agg = rt.metrics
@@ -908,9 +928,14 @@ def replay(
         n_shards, imbalance = rt.n_shards, agg.load_imbalance()
     else:
         fold_stages(_drive(rt, _gather_events(stream, t_e), service,
-                           ring_capacity, evict_every, t_end, tracer=tracer))
+                           ring_capacity, evict_every, t_end, tracer=tracer,
+                           slo=slo))
         m = rt.metrics
         per_shard, n_shards, imbalance = [], 1, 1.0
+
+    if obs is not None and obs.exporter is not None:
+        # no control plane to pace it: one end-of-run export record
+        obs.exporter.step(t_end)
 
     return ReplayStats(
         offered_pps=offered_pps,

@@ -339,6 +339,12 @@ class ShardedRuntime:
         dn.tracer = d0.tracer
         dn.drift = d0.drift
         dn.trace_pid = self.n_shards - 1
+        # ... including latency-component recording (DESIGN.md §14.1):
+        # an empty recorder with shard 0's sketch layout, so the fleet
+        # merge keeps folding identically-configured sketches
+        rec0 = self.shards[0].metrics.latency_components
+        if rec0 is not None:
+            self.shards[-1].metrics.enable_latency_components(rec0.fresh())
         return self.n_shards - 1
 
     def migrate_buckets(self, moves: dict, now: float) -> dict:

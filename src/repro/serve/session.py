@@ -16,7 +16,8 @@ Resolution rules (all trivially derivable, no hidden state):
 - ``audit``: the explicit `audit` field when set, else the observability
   bundle's log, else a fresh `AuditLog` on demand — one run, one audit
   stream.
-- ``tracer`` / ``drift``: always through the observability bundle.
+- ``tracer`` / ``drift`` / ``slo`` / ``exporter``: always through the
+  observability bundle.
 - ``control`` / ``reopt``: carried as-is; a session with a `reopt`
   policy but no control config is an error at the point of use (the
   reoptimizer runs on control-step cadence).
@@ -57,6 +58,16 @@ class ServeSession:
     @property
     def drift(self):
         return self.obs.drift if self.obs is not None else None
+
+    @property
+    def slo(self):
+        """The shared `SLOTracker` (DESIGN.md §14.2), via the bundle."""
+        return self.obs.slo if self.obs is not None else None
+
+    @property
+    def exporter(self):
+        """The bound `MetricsExporter` (DESIGN.md §14.3), via the bundle."""
+        return self.obs.exporter if self.obs is not None else None
 
     def resolve_audit(self):
         """The run's one audit log: explicit field > obs bundle > None."""

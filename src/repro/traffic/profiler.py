@@ -391,6 +391,90 @@ class TrafficProfiler:
         self.wallclock["measure_cost"] += time.perf_counter() - t0
         return stats.offered_gbps, stats
 
+    def replayed_latency_p99(
+        self,
+        x: FeatureRep,
+        forest: DenseForest,
+        *,
+        offered_pps: Optional[float] = None,
+        capacity: int = 2048,
+        max_batch: int = 128,
+        ring_capacity: Optional[int] = None,
+        n_shards: int = 1,
+        obs=None,
+    ):
+        """p99 enqueue→prediction latency under a *fixed* offered load
+        (DESIGN.md §14, ROADMAP "SLO-aware provisioning").
+
+        One replay of the held-out split at `offered_pps` (default: the
+        scenario trace's native rate — the load the SLO is stated
+        against), through the same runtime geometry as
+        `replayed_throughput_gbps` but with no bisection: tail latency
+        is a property of one operating point, not of the saturation
+        envelope. Clock constants come from the same per-representation
+        `ServiceModel` cache, so a throughput and a latency measurement
+        of one (F, n) share constants. Returns (p99_s, ReplayStats);
+        an `obs` bundle (e.g. with a `LatencyConfig`) instruments the
+        run for per-stage decomposition.
+        """
+        from repro.serve.runtime import (
+            PacketStream, ServiceModel, ShardedRuntime, StreamingRuntime,
+            replay,
+        )
+        from .pipeline import build_pipeline
+
+        t0 = time.perf_counter()
+        pipe = build_pipeline(x, forest, max_pkts=x.depth, fused=True,
+                              use_kernel=False)
+        if self._stream_cache is None:
+            self._stream_cache = PacketStream.from_dataset(
+                self.test_ds, seed=self.seed, scenario=self.scenario)
+        stream = self._stream_cache
+        if ring_capacity is None:
+            ring_capacity = max(64, min(4096, stream.n_events // 8))
+        self.wallclock["pipeline_gen"] += time.perf_counter() - t0
+
+        ru = self.reuse
+        calibrate_warm = ru is not None and getattr(ru, "enabled", False)
+
+        def make_runtime(execute: bool = False):
+            if n_shards > 1:
+                return ShardedRuntime(
+                    pipe, n_shards=n_shards, capacity=capacity,
+                    max_batch=max_batch, flush_timeout_s=0.05,
+                    idle_timeout_s=60.0, execute=execute, reuse=ru,
+                )
+            return StreamingRuntime(
+                pipe, capacity=capacity, max_batch=max_batch,
+                flush_timeout_s=0.05, idle_timeout_s=60.0, execute=execute,
+                reuse=ru,
+            )
+
+        t0 = time.perf_counter()
+        skey = (x.key(), self.cost_mode, calibrate_warm,
+                None if ru is None else (getattr(ru, "enabled", False),
+                                         getattr(ru, "drift_threshold", 0.0),
+                                         getattr(ru, "refresh_every", 0)))
+        service = self._service_cache.get(skey)
+        if service is None:
+            if self.cost_mode == "measured":
+                service = ServiceModel.measure(
+                    make_runtime(True), stream, calibrate_warm=calibrate_warm)
+            else:
+                service = ServiceModel.modeled(
+                    x, forest, reuse_discount=self.reuse_discount(ru))
+            self._service_cache[skey] = service
+        pps = float(offered_pps) if offered_pps is not None else stream.base_pps
+        session = None
+        if obs is not None:
+            from repro.serve import ServeSession
+
+            session = ServeSession(obs=obs)
+        stats = replay(stream, make_runtime, pps, service,
+                       ring_capacity=ring_capacity, session=session)
+        self.wallclock["measure_cost"] += time.perf_counter() - t0
+        return stats.latency_p99_s, stats
+
     # -- ablation metrics (Fig. 8) -------------------------------------------
     def naive_cost_us(self, x: FeatureRep, forest: DenseForest) -> float:
         return self.modeled_exec_us(x, forest, dedup=False)
@@ -432,6 +516,11 @@ class TrafficProfiler:
             elif metric == "throughput_replayed_sharded":
                 cost = -self.replayed_throughput_gbps(
                     x, forest, n_shards=self.n_shards)[0]
+            elif metric == "latency_p99_replayed":
+                # tail latency at fixed offered load (DESIGN.md §14): the
+                # third objective axis the ROADMAP's SLO-aware provisioning
+                # planner optimizes; lower is better, so no negation
+                cost = self.replayed_latency_p99(x, forest)[0]
             elif metric == "naive_cost":
                 cost = self.naive_cost_us(x, forest)
             elif metric == "model_inf_cost":
@@ -461,6 +550,8 @@ class TrafficProfiler:
         elif self.cost_metric == "throughput_replayed_sharded":
             cost = -self.replayed_throughput_gbps(
                 x, forest, n_shards=self.n_shards)[0]
+        elif self.cost_metric == "latency_p99_replayed":
+            cost = self.replayed_latency_p99(x, forest)[0]
         else:
             cost = self.exec_time_us(x, forest)
         return ProfileResult(cost=float(cost), perf=float(f1))

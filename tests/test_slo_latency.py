@@ -1,0 +1,515 @@
+"""SLO-native latency observability (DESIGN.md §14): bounded-relative-
+error quantile sketches with bit-identical permutation merges, per-stage
+latency decomposition whose components sum to the end-to-end total,
+windowed burn-rate SLO verdicts audited by the control plane, and a
+fleet exporter whose Prometheus/JSONL output validates."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.search_space import FeatureRep
+from repro.serve import ServeSession
+from repro.serve.control import ControlConfig
+from repro.serve.control.replay import controlled_replay
+from repro.serve.obs import (
+    COMPONENTS,
+    LatencyConfig,
+    LatencyRecorder,
+    LatencySketch,
+    MetricsExporter,
+    MetricsRegistry,
+    Observability,
+    SLOConfig,
+    SLOTracker,
+    check_prometheus,
+    render_prometheus,
+)
+from repro.serve.runtime import (
+    LatencyHistogram,
+    PacketStream,
+    ServiceModel,
+    ShardedRuntime,
+    replay,
+)
+from repro.traffic import extract_features
+from repro.traffic.models import train_traffic_model
+from repro.traffic.pipeline import build_pipeline
+from repro.traffic.synth import make_scenario_dataset
+
+ALPHA = 0.01
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_scenario_dataset("app-class", "zipf", n_flows=120,
+                                 max_pkts=256, seed=3)
+
+
+@pytest.fixture(scope="module")
+def pipeline(ds):
+    rep = FeatureRep(
+        ("dur", "s_load", "s_bytes_mean", "s_iat_mean", "ack_cnt"), depth=8)
+    X = extract_features(ds, rep.features, rep.depth)
+    forest, _ = train_traffic_model(X, ds.label, model="tree-fast", seed=0)
+    return build_pipeline(rep, forest, max_pkts=rep.depth, use_kernel=False)
+
+
+@pytest.fixture(scope="module")
+def stream(ds):
+    return PacketStream.from_dataset(ds, seed=0)
+
+
+@pytest.fixture(scope="module")
+def service():
+    return ServiceModel(
+        pkt_accum_ns=800.0, pkt_track_ns=200.0,
+        bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+        gather_ns_per_flow=200.0, source="synthetic",
+    )
+
+
+def fleet(pipeline, n_shards=4, execute=False, **kw):
+    return ShardedRuntime(pipeline, n_shards=n_shards, capacity=2048,
+                          max_batch=64, execute=execute, **kw)
+
+
+def _exact_percentile(x, q):
+    """The rank statistic the sketch bound is stated against."""
+    s = np.sort(np.asarray(x, np.float64))
+    return float(s[min(max(int(math.ceil(q / 100.0 * len(s))), 1),
+                       len(s)) - 1])
+
+
+def _dists():
+    rng = np.random.default_rng(7)
+    uniform = rng.uniform(1e-5, 1e-2, 50_000)
+    zipf = np.clip(rng.zipf(1.7, 50_000) * 1e-6, None, 1.0)
+    lognormal = np.exp(rng.normal(math.log(2e-4), 1.2, 50_000))
+    return {"uniform": uniform, "zipf": zipf, "lognormal": lognormal}
+
+
+# ---------------------------------------------------------------------------
+# sketch: accuracy bound, merge laws, edges
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_relative_error_bound():
+    """Every reported percentile is within alpha of the exact rank
+    statistic, under skews from flat to heavy-tailed."""
+    for name, x in _dists().items():
+        sk = LatencySketch(alpha=ALPHA)
+        sk.record_many(x)
+        for q in (1.0, 25.0, 50.0, 90.0, 99.0, 99.9):
+            exact = _exact_percentile(x, q)
+            got = sk.percentile(q)
+            rel = abs(got - exact) / exact
+            assert rel <= ALPHA * 1.0001, (name, q, rel)
+        # the extremes obey the same bound (clamped to the exact
+        # running min/max) and the integer-ns mean is exact
+        assert sk.n == len(x)
+        assert sk.percentile(0) == pytest.approx(float(x.min()), rel=ALPHA)
+        assert sk.percentile(100) == pytest.approx(float(x.max()), rel=ALPHA)
+        assert sk.mean_s == pytest.approx(float(x.mean()), rel=1e-6)
+
+
+def test_sketch_merge_bit_identical_under_permutation():
+    """Shard merges commute bit-for-bit: any merge order of any split
+    produces the same frozen doc as one sketch that saw everything."""
+    x = _dists()["lognormal"]
+    parts = np.array_split(x, 7)
+    whole = LatencySketch(alpha=ALPHA)
+    whole.record_many(x)
+
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        order = rng.permutation(len(parts))
+        merged = LatencySketch(alpha=ALPHA)
+        for i in order:
+            shard = LatencySketch(alpha=ALPHA)
+            shard.record_many(parts[i])
+            merged.merge_from(shard)
+        assert merged.to_doc() == whole.to_doc()
+
+
+def test_sketch_edges_and_clamps():
+    sk = LatencySketch(alpha=ALPHA, lo_s=1e-9, hi_s=1e2)
+    assert sk.percentile(50) == 0.0 and sk.n == 0
+    assert sk.summary()["p99_s"] == 0.0
+
+    one = LatencySketch(alpha=ALPHA)
+    one.record(3.5e-4)
+    for q in (0.0, 50.0, 100.0):
+        assert one.percentile(q) == pytest.approx(3.5e-4, rel=ALPHA)
+
+    # under/overflow report the exact running min/max, not bucket values
+    ends = LatencySketch(alpha=ALPHA, lo_s=1e-6, hi_s=1e-3)
+    ends.record_many(np.array([1e-8, 5e-1]))
+    assert ends.percentile(1) == pytest.approx(1e-8)
+    assert ends.percentile(99.9) == pytest.approx(5e-1)
+
+
+def test_sketch_scalar_record_matches_vector_path():
+    """`record(v, count=k)` (the per-batch shared-value path) lands in
+    exactly the same bucket state as k vectorized records."""
+    vals = [2.3e-5, 8e-4, 1.7e-2, 0.5]
+    a = LatencySketch(alpha=ALPHA)
+    b = LatencySketch(alpha=ALPHA)
+    for v in vals:
+        a.record(v, count=9)
+        b.record_many(np.full(9, v))
+    assert a.to_doc() == b.to_doc()
+
+
+def test_sketch_layout_mismatch_raises():
+    a = LatencySketch(alpha=0.01)
+    b = LatencySketch(alpha=0.02)
+    with pytest.raises(ValueError, match="layout mismatch"):
+        a.merge_from(b)
+    with pytest.raises(ValueError):
+        LatencySketch(alpha=1.5)
+    with pytest.raises(ValueError):
+        LatencySketch(lo_s=1.0, hi_s=0.1)
+
+
+def test_sketch_doc_roundtrip():
+    x = _dists()["uniform"]
+    sk = LatencySketch(alpha=ALPHA)
+    sk.record_many(x)
+    doc = sk.to_doc()
+    json.dumps(doc)                       # artifact contract
+    back = LatencySketch.from_doc(doc)
+    assert back.to_doc() == doc
+    assert back.percentile(99) == sk.percentile(99)
+
+
+# ---------------------------------------------------------------------------
+# histogram past the reservoir cap (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentile_past_cap():
+    """Beyond `max_samples` the reservoir is a biased subsample; with a
+    sketch attached the histogram reports the alpha-bounded value, and
+    the plain bucket fallback stays within its documented (coarse)
+    bucket-width bound."""
+    x = _dists()["lognormal"]
+    exact99 = _exact_percentile(x, 99)
+
+    sketched = LatencyHistogram(max_samples=64)
+    sketched.attach_sketch(alpha=ALPHA)
+    sketched.record_many(x)
+    assert abs(sketched.percentile(99) - exact99) / exact99 <= ALPHA * 1.0001
+
+    plain = LatencyHistogram(max_samples=64)
+    plain.record_many(x)
+    # documented bucket-interpolation bound: one log-bucket of relative
+    # width (~33% at the default 8 buckets per decade)
+    bucket_bound = float(plain.edges[1] / plain.edges[0]) - 1.0
+    assert abs(plain.percentile(99) - exact99) / exact99 <= bucket_bound
+
+    # below the cap the reservoir short-circuits the sketch: percentiles
+    # stay the exact interpolated statistic of the raw samples
+    small = LatencyHistogram(max_samples=8192)
+    small.attach_sketch(alpha=ALPHA)
+    y = x[:1000]
+    small.record_many(y)
+    assert small.percentile(99) == pytest.approx(float(np.percentile(y, 99)))
+
+
+# ---------------------------------------------------------------------------
+# recorder: replayed per-stage decomposition
+# ---------------------------------------------------------------------------
+
+
+def _replayed_fleet(pipeline, stream, service, obs):
+    created = []
+
+    def mk():
+        rt = fleet(pipeline)
+        created.append(rt)
+        return rt
+
+    stats = replay(stream, mk, 2e5, service,
+                   session=ServeSession(obs=obs))
+    return stats, created[-1]
+
+
+def test_replay_decomposition_identity(pipeline, stream, service):
+    """queue_wait + batch + service == total, per replayed run, on the
+    integer-ns sums; the p99 decomposition is consistent with the
+    end-to-end percentile the replay already reports."""
+    obs = Observability(latency=LatencyConfig(alpha=ALPHA))
+    stats, rt = _replayed_fleet(pipeline, stream, service, obs)
+
+    recs = [s.metrics.latency_components for s in rt.shards]
+    assert all(r is not None for r in recs)
+    merged = recs[0].fresh()
+    for r in recs:
+        merged.merge_from(r)
+
+    # every component saw every charged flow exactly once
+    ns = {c: merged.sketches[c].n for c in COMPONENTS}
+    assert len(set(ns.values())) == 1 and ns["total"] > 0
+    # per-shard: the linked sketch tracks the histogram sample count
+    # exactly (the past-cap upgrade path requires this)
+    for s in rt.shards:
+        assert s.metrics.latency_components.sketches["total"].n \
+            == s.metrics.latency.n
+
+    # integer-ns sum identity (each charge rounds each component once:
+    # tolerate 2ns per charged batch)
+    parts_sum = sum(merged.sketches[c].sum_s
+                    for c in ("queue_wait", "batch", "service"))
+    tol = 2e-9 * ns["total"] + 1e-9
+    assert abs(parts_sum - merged.sketches["total"].sum_s) <= tol
+
+    # the sketch total agrees with the replay's own p99 within alpha
+    # (sample count is under the reservoir cap here, so that one's exact)
+    p99 = merged.sketches["total"].percentile(99)
+    assert abs(p99 - stats.latency_p99_s) / stats.latency_p99_s <= ALPHA * 1.01
+    # and the stage p99s bound the tail (Bonferroni: at most 3% of
+    # samples exceed *any* component p99, so the total's p97 is bounded
+    # by the stage-p99 sum; allow the sketch's alpha per component)
+    stage_p99 = sum(merged.sketches[c].percentile(99)
+                    for c in ("queue_wait", "batch", "service"))
+    assert merged.sketches["total"].percentile(97) <= \
+        stage_p99 * (1.0 + 4 * ALPHA)
+
+
+def test_fleet_registry_sketch_merge_permutation(pipeline, stream, service):
+    """The registry carries the sketches through the same order-free
+    merge law as counters: forward and reversed shard orders snapshot
+    bit-identically, including the new "sketches" section."""
+    obs = Observability(latency=LatencyConfig(alpha=ALPHA))
+    _, rt = _replayed_fleet(pipeline, stream, service, obs)
+    parts = [s.metrics.to_registry() for s in rt.shards]
+    fwd = MetricsRegistry.merge(parts).snapshot()
+    rev = MetricsRegistry.merge(parts[::-1]).snapshot()
+    fs, rs = fwd.pop("samples"), rev.pop("samples")
+    assert fwd == rev
+    assert set(fwd["sketches"]) == {f"latency.{c}" for c in COMPONENTS}
+    assert {k: sorted(v) for k, v in fs.items()} == \
+        {k: sorted(v) for k, v in rs.items()}
+
+    # a merged registry reconstitutes a recorder without aliasing
+    merged = MetricsRegistry.merge(parts)
+    rec = LatencyRecorder.from_registry(merged)
+    assert rec.n == sum(s.metrics.latency_components.n for s in rt.shards)
+
+
+def test_scale_out_mints_fresh_recorder(pipeline, stream, service):
+    """Late workers added after attach still decompose latency: the
+    fleet carries the recorder config onto minted shards."""
+    obs = Observability(latency=LatencyConfig(alpha=ALPHA))
+    rt = fleet(pipeline, n_shards=2)
+    obs.attach(rt)
+    rt.add_worker()
+    assert rt.shards[-1].metrics.latency_components is not None
+    assert rt.shards[-1].metrics.latency_components.n == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO tracker: windows, burn rates, merge
+# ---------------------------------------------------------------------------
+
+
+def test_slo_attainment_and_burn_verdicts():
+    cfg = SLOConfig(target_s=1e-3, objective=0.9, window_s=1.0,
+                    slow_windows=4)
+    tr = SLOTracker(cfg)
+    # window 0: all good -> no breach, burn 0
+    tr.note(0.5, np.full(50, 1e-4))
+    v = tr.check(0.5)
+    assert not v.breached and v.burn_fast == 0.0 and v.attainment_fast == 1.0
+    # window 1: 50% violations -> burn 5x the 10% budget, rising edge
+    tr.note(1.5, np.r_[np.full(25, 1e-4), np.full(25, 5e-3)])
+    v = tr.check(1.5)
+    assert v.breached and v.new_breach
+    assert v.attainment_fast == pytest.approx(0.5)
+    assert v.burn_fast == pytest.approx(5.0)
+    assert v.samples_fast == 50 and v.samples_slow == 100
+    # still breached: no second rising edge
+    v2 = tr.check(1.9)
+    assert v2.breached and not v2.new_breach
+    assert tr.breaches == 1
+    # windows later, the slow burn has faded -> recovered
+    v3 = tr.check(9.0)
+    assert not v3.breached
+    assert tr.attainment == pytest.approx(1.0 - 25 / 100)
+    json.dumps(tr.signal())
+
+
+def test_slo_empty_window_never_breaches():
+    tr = SLOTracker(SLOConfig(target_s=1e-3, objective=0.99, window_s=1.0))
+    v = tr.check(100.0)
+    assert not v.breached and v.samples_fast == 0
+    assert v.attainment_fast == 1.0 and tr.attainment == 1.0
+
+
+def test_slo_merge_permutation_and_mismatch():
+    cfg = SLOConfig(target_s=1e-3, objective=0.95, window_s=0.5)
+    rng = np.random.default_rng(11)
+    shards = []
+    for s in range(5):
+        tr = SLOTracker(cfg)
+        for _ in range(20):
+            tr.note(float(rng.uniform(0, 4)),
+                    rng.choice([1e-4, 5e-3], size=8))
+        shards.append(tr)
+    fwd, rev = SLOTracker(cfg), SLOTracker(cfg)
+    for tr in shards:
+        fwd.merge_from(tr)
+    for tr in shards[::-1]:
+        rev.merge_from(tr)
+    assert fwd.signal() == rev.signal()
+    assert fwd.samples == sum(t.samples for t in shards)
+    with pytest.raises(ValueError, match="config mismatch"):
+        fwd.merge_from(SLOTracker(SLOConfig(target_s=2e-3)))
+    with pytest.raises(ValueError):
+        SLOConfig(target_s=1e-3, objective=1.5)
+
+
+# ---------------------------------------------------------------------------
+# control plane: audited breaches + exporter cadence
+# ---------------------------------------------------------------------------
+
+
+def _controlled(pipeline, stream, service, target_s, jsonl_path):
+    slo = SLOTracker(SLOConfig(target_s=target_s, objective=0.99,
+                               window_s=0.02, slow_windows=4))
+    obs = Observability(latency=LatencyConfig(alpha=ALPHA), slo=slo,
+                        exporter=MetricsExporter(jsonl_path=jsonl_path))
+    session = ServeSession(
+        obs=obs,
+        control=ControlConfig(interval_pkts=512, imbalance_trigger=1.04),
+    )
+    stats = controlled_replay(stream, lambda: fleet(pipeline), 2e5, service,
+                              session=session)
+    return stats, obs
+
+
+def test_slo_breach_audited_once_per_episode(pipeline, stream, service,
+                                             tmp_path):
+    """An unattainable target breaches and lands in the audit log as
+    kind "slo" — on the rising edge, not once per control step."""
+    path = tmp_path / "ts.jsonl"
+    stats, obs = _controlled(pipeline, stream, service, 1e-9, str(path))
+    events = obs.audit.of_kind("slo")
+    assert len(events) >= 1
+    assert obs.slo.breaches == len(events)
+    assert obs.slo.checks > len(events)       # edge-triggered, not per-step
+    ev = events[0]
+    assert ev.detail["breached"] and ev.detail["burn_fast"] >= 1.0
+    assert "error budget" in ev.rationale
+    assert obs.slo.attainment < 0.5
+
+    # exporter: one JSONL line per executed control step, each a full
+    # frozen record carrying the registry and the SLO signal
+    lines = [json.loads(s) for s in path.read_text().splitlines()]
+    assert len(lines) == obs.exporter.steps >= 1
+    assert [d["step"] for d in lines] == list(range(len(lines)))
+    last = lines[-1]
+    assert last["slo"]["breached"] and last["slo"]["samples"] > 0
+    assert "latency.total" in last["registry"]["sketches"]
+    assert last["registry"]["counters"]["slo.samples"] == \
+        last["slo"]["samples"]
+
+    # Prometheus render of the bound fleet view validates
+    text = obs.exporter.prometheus()
+    assert check_prometheus(text) == []
+    assert 'cato_latency_total{quantile="0.99"}' in text
+    assert "cato_slo_breaches" in text
+
+
+def test_slo_met_is_silent(pipeline, stream, service, tmp_path):
+    """A comfortably met objective produces zero "slo" audit events and
+    an attainment of exactly 1."""
+    stats, obs = _controlled(pipeline, stream, service, 10.0,
+                             str(tmp_path / "ts.jsonl"))
+    assert obs.audit.of_kind("slo") == []
+    assert obs.slo.breaches == 0 and obs.slo.violations == 0
+    assert obs.slo.attainment == 1.0
+    assert obs.slo.samples == obs.slo.samples  # lifetime counters exist
+    # the verdict gauges are still published every step (value 0/1.0)
+    snap = obs.exporter.last["registry"]
+    assert snap["gauges"]["slo.breached"]["value"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# exporter: render + checker
+# ---------------------------------------------------------------------------
+
+
+def test_render_prometheus_families_and_checker():
+    reg = MetricsRegistry()
+    reg.inc("ingest.pkts_total", 100)
+    reg.inc("shard0.ingest.pkts_total", 60)
+    reg.inc("shard1.ingest.pkts_total", 40)
+    reg.set_gauge("flow_table.load_factor", 0.5, reduce="max")
+    reg.union("dispatch.shapes_seen", [(8, 5)])
+    reg.extend_samples("dispatch.batch_occupancy", [3, 9])
+    h = LatencyHistogram()
+    h.record_many(np.array([1e-3, 2e-3, 4e-3]))
+    reg.attach_hist("dispatch.latency", h)
+    sk = LatencySketch()
+    sk.record_many(np.array([1e-4, 2e-4]))
+    reg.attach_sketch("latency.total", sk)
+
+    text = render_prometheus(reg)
+    assert check_prometheus(text) == []
+    lines = text.splitlines()
+    # shard columns land as labels of one family, not mangled names
+    assert 'cato_ingest_pkts_total{shard="0"} 60' in lines
+    assert "cato_ingest_pkts_total 100" in lines
+    # summaries carry quantiles + _sum/_count subseries
+    assert any(line.startswith('cato_latency_total{quantile="0.5"}')
+               for line in lines)
+    assert any(line.startswith("cato_latency_total_count 2") for line in lines)
+    assert any(line.startswith("cato_dispatch_latency_sum") for line in lines)
+    # HELP/TYPE exactly once per family
+    helps = [line.split()[2] for line in lines if line.startswith("# HELP")]
+    assert len(helps) == len(set(helps))
+
+    # the checker actually catches malformed exposition
+    assert check_prometheus("# HELP a x\n# HELP a x\n# TYPE a counter\na 1\n")
+    assert check_prometheus("what is this\n")
+    assert check_prometheus("orphan_sample 1\n")
+    bad_late = "# TYPE a counter\na 1\n# HELP a late\n"
+    assert any("after samples" in p for p in check_prometheus(bad_late))
+
+
+def test_exporter_requires_bind():
+    ex = MetricsExporter()
+    with pytest.raises(RuntimeError, match="bind"):
+        ex.collect(0.0)
+    ex.bind(MetricsRegistry)
+    doc = ex.step(1.25)
+    assert doc["now_pkts"] == 1.25 and ex.steps == 1 and ex.last is doc
+
+
+# ---------------------------------------------------------------------------
+# profiler: latency_p99_replayed metric
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_latency_p99_replayed(ds):
+    """The replayed tail-latency metric is pinned to the replay's own
+    histogram — the profiler adds no estimation of its own."""
+    from repro.traffic import TrafficProfiler
+
+    prof = TrafficProfiler(
+        ds, ("dur", "s_load", "s_bytes_mean", "s_iat_mean"),
+        model="tree-fast", cost_metric="latency_p99_replayed",
+        cost_mode="modeled", seed=0,
+    )
+    x = FeatureRep(("dur", "s_load", "s_bytes_mean"), 8)
+    p99, stats = prof.replayed_latency_p99(x, prof.perf_f1(x)[1])
+    assert p99 > 0
+    assert p99 == stats.latency_p99_s
+    assert p99 == stats.metrics.latency.percentile(99)
+
+    r = prof(x)
+    assert r.cost == p99          # lower is better: no negation
+    assert 0 <= r.perf <= 1
