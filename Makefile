@@ -2,9 +2,10 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test lint format bench-smoke bench-smoke-sharded bench-smoke-zipf \
-	bench-smoke-reuse bench-smoke-selftune bench-smoke-slo bench-runtime \
-	bench-compare tune-smoke trace-smoke example-stream example-control \
-	example-tune example-selftune
+	bench-smoke-reuse bench-smoke-selftune bench-smoke-slo \
+	bench-smoke-multitenant bench-runtime bench-compare tune-smoke \
+	trace-smoke example-stream example-control example-tune \
+	example-selftune example-multitenant
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -64,6 +65,15 @@ bench-smoke-selftune:
 bench-smoke-slo:
 	$(PYTHON) -m benchmarks.bench_runtime --smoke --scenario zipf --slo
 
+# multi-tenant gate (DESIGN.md §15): one 3-tenant shared fleet (merged
+# extraction plan, fused multi-model dispatch) vs 3 independent 1-shard
+# fleets at equal total shards, zero-loss bisection each arm — fails
+# unless shared wins by >= 1.5x with zero drops on both arms and every
+# tenant's predictions stay bit-identical to its solo-served baseline
+bench-smoke-multitenant:
+	$(PYTHON) -m benchmarks.bench_runtime --smoke --tenants 3 \
+		--min-tenant-speedup 1.5
+
 # observability smoke (DESIGN.md §11): one instrumented 4-shard zipf
 # replay under the control plane — Chrome trace + stage breakdown +
 # bit-matched metrics snapshot + audit log from a single run — then the
@@ -105,3 +115,9 @@ example-tune:
 # autonomous hot-swap mid-replay (DESIGN.md §13)
 example-selftune:
 	$(PYTHON) examples/selftune_fleet.py
+
+# the optimizer seeing the sharing: joint multi-tenant tuning where the
+# union-plan extraction discount moves the Pareto front relative to
+# independently tuned tenants, then a fused deploy (DESIGN.md §15.5)
+example-multitenant:
+	$(PYTHON) examples/tune_multitenant.py

@@ -420,6 +420,174 @@ def run_reuse_gate(min_reuse_speedup: float = 0.0, smoke: bool = False,
     return doc
 
 
+MULTITENANT_BENCH = "BENCH_multitenant.json"
+
+# overlapping per-tenant feature plans (DESIGN.md §15.1): heavy shared
+# prefix so the merged plan amortizes — the whole point of the A/B
+_TENANT_REPS = (
+    (("s_bytes_mean", "s_iat_mean", "s_load", "proto"), 8),
+    (("s_bytes_mean", "s_iat_mean", "s_load", "dur", "s_bytes_max"), 12),
+    (("s_bytes_mean", "s_iat_mean", "dur", "d_pkt_cnt"), 8),
+    (("s_bytes_mean", "s_load", "ack_cnt", "psh_cnt"), 8),
+)
+
+
+def run_multitenant_gate(min_tenant_speedup: float = 0.0, smoke: bool = False,
+                         tenants: int = 3,
+                         out_path: pathlib.Path | None = None,
+                         verbose: bool = True) -> dict:
+    """A/B multi-tenant white-box serving under zipf traffic (DESIGN.md
+    §15) and write `results/BENCH_multitenant.json`.
+
+    Two arms at equal total worker count, one zipf trace:
+
+    - **shared**: one N-shard fleet serving all N tenants through a
+      single `MultiTenantPipeline` — the merged extraction plan runs
+      once per flow, every tenant's forest reads its column subset;
+    - **independent**: N separate 1-shard fleets, one per tenant, each
+      replaying the *full* stream (every tenant must classify every
+      flow). The arm's zero-loss rate is the min over tenants — the
+      slowest fleet caps the rate the stream can be delivered at.
+
+    Both arms are calibrated with `ServiceModel.measure` on their own
+    runtime and bisected to the highest zero-drop rate. A parity leg
+    (executing replays under a synthetic service model) asserts every
+    tenant's shared-fleet predictions are bit-identical to its
+    solo-served baseline — sharing is an optimization, not a model
+    change. `min_tenant_speedup` gates shared/independent zero-loss
+    throughput (0 disables); both arms must report zero drops.
+    """
+    import numpy as np
+
+    from repro.core.search_space import FeatureRep
+    from repro.serve import (
+        PacketStream, ServiceModel, ShardedRuntime, build_multi_tenant_pipeline,
+        find_zero_loss_rate, replay,
+    )
+    from repro.traffic import extract_features
+    from repro.traffic.models import train_traffic_model
+    from repro.traffic.pipeline import build_pipeline
+    from repro.traffic.synth import make_scenario_dataset
+
+    if not 2 <= tenants <= len(_TENANT_REPS):
+        raise SystemExit(
+            f"--tenants must be in [2, {len(_TENANT_REPS)}], got {tenants}")
+    t0 = time.perf_counter()
+    n_flows, max_pkts = (150, 96) if smoke else (500, 160)
+    bisect_iters = 6 if smoke else 8
+    ds = make_scenario_dataset("app-class", "zipf", n_flows=n_flows,
+                               max_pkts=max_pkts, seed=3)
+    reps = [FeatureRep(f, depth=d) for f, d in _TENANT_REPS[:tenants]]
+    forests = []
+    for t, rep in enumerate(reps):
+        X = extract_features(ds, rep.features, rep.depth)
+        forests.append(
+            train_traffic_model(X, ds.label, model="tree-fast", seed=t)[0])
+    solo_pipes = [build_pipeline(r, f, max_pkts=r.depth, use_kernel=False)
+                  for r, f in zip(reps, forests)]
+    mt_pipe = build_multi_tenant_pipeline(reps, forests, use_kernel=False)
+    stream = PacketStream.from_dataset(ds, seed=0)
+    ring_capacity = max(64, min(6144, stream.n_events // 6))
+
+    # prompt flushes both arms (small batches, tight timeout) so neither
+    # arm's zero-loss rate is gated on classification latency
+    def make_runtime(pipe, shards):
+        def mk(execute):
+            return ShardedRuntime(pipe, n_shards=shards, capacity=2048,
+                                  max_batch=32, flush_timeout_s=2e-4,
+                                  execute=execute)
+        return mk
+
+    def bisect(pipe, shards, tag):
+        mk = make_runtime(pipe, shards)
+        service = ServiceModel.measure(mk(True), stream, n_pkt_sample=16000,
+                                       reps=5)
+        pps, stats = find_zero_loss_rate(
+            stream, mk, service, iters=bisect_iters,
+            ring_capacity=ring_capacity)
+        if verbose:
+            print(f"# zipf {tag}: {pps:,.0f} pps "
+                  f"({stats.offered_gbps:.3f} Gbps), drops={stats.drops}")
+        return {"zero_loss_pps": round(pps, 1),
+                "zero_loss_gbps": round(stats.offered_gbps, 4),
+                "drops": stats.drops, "n_shards": shards}
+
+    shared = bisect(mt_pipe, tenants, f"shared {tenants}-shard fleet")
+    indep = [bisect(p, 1, f"independent tenant{t} 1-shard fleet")
+             for t, p in enumerate(solo_pipes)]
+    # the stream is offered to all N independent fleets at one rate, so
+    # the slowest tenant's zero-loss rate is the arm's rate
+    indep_pps = min(a["zero_loss_pps"] for a in indep)
+
+    # parity: executing replays at the stream's native rate — tenant t's
+    # lane of every fused prediction vector must equal its solo baseline
+    svc = ServiceModel(pkt_accum_ns=800.0, pkt_track_ns=200.0,
+                       bucket_ns={8: 3e4, 16: 4e4, 32: 6e4, 64: 1e5},
+                       gather_ns_per_flow=200.0, source="synthetic")
+    sh = replay(stream, lambda: make_runtime(mt_pipe, tenants)(True),
+                stream.base_pps, svc, ring_capacity=ring_capacity)
+    parity_ok, n_flows_checked = True, 0
+    for t, pipe in enumerate(solo_pipes):
+        solo = replay(stream, lambda: make_runtime(pipe, 1)(True),
+                      stream.base_pps, svc, ring_capacity=ring_capacity)
+        keys = sorted(sh.predictions)
+        ok = (keys == sorted(solo.predictions)
+              and np.array_equal(
+                  np.asarray([sh.predictions[k][t] for k in keys]),
+                  np.asarray([solo.predictions[k] for k in keys])))
+        parity_ok &= ok
+        n_flows_checked = len(keys)
+        if verbose:
+            print(f"# tenant{t} shared-vs-solo bit-parity: {ok}")
+
+    speedup = shared["zero_loss_pps"] / max(indep_pps, 1e-9)
+    doc = {
+        "bench": "runtime_multitenant",
+        "smoke": smoke,
+        "config": {"scenario": "zipf", "tenants": tenants,
+                   "n_flows": n_flows, "max_pkts": max_pkts,
+                   "events": stream.n_events, "bisect_iters": bisect_iters,
+                   "ring_capacity": ring_capacity,
+                   "tenant_features": [list(r.features) for r in reps],
+                   "tenant_depths": [r.depth for r in reps],
+                   "union_features": len(mt_pipe.rep.features),
+                   "merged_columns": len(mt_pipe.merged),
+                   "solo_columns": sum(len(r.features) for r in reps)},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "arms": {
+            "shared": shared,
+            "independent": {"per_tenant": indep,
+                            "zero_loss_pps": indep_pps,
+                            "drops": sum(a["drops"] for a in indep)},
+        },
+        "tenant_speedup": round(speedup, 3),
+        "per_tenant_bit_identical": bool(parity_ok),
+        "flows_checked": n_flows_checked,
+        "zero_drops_at_reported_rate": (
+            shared["drops"] == 0 and all(a["drops"] == 0 for a in indep)),
+    }
+    from .common import write_datapoint
+
+    path = write_datapoint(doc, out_path, name=MULTITENANT_BENCH)
+    if verbose:
+        print(f"# wrote {path} (wall {doc['wall_s']:.1f}s, "
+              f"shared/independent speedup {speedup:.2f}x)")
+    if not parity_ok:
+        print("FAIL: shared-fleet predictions diverge from solo baselines",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not doc["zero_drops_at_reported_rate"]:
+        print("FAIL: drops at reported zero-loss rate", file=sys.stderr)
+        raise SystemExit(1)
+    if min_tenant_speedup > 0 and speedup < min_tenant_speedup:
+        print(f"FAIL: multi-tenant speedup {speedup:.2f}x < "
+              f"{min_tenant_speedup:.2f}x floor", file=sys.stderr)
+        raise SystemExit(1)
+    if verbose and min_tenant_speedup > 0:
+        print(f"OK: multi-tenant speedup above {min_tenant_speedup:.2f}x floor")
+    return doc
+
+
 SELFTUNE_BENCH = "BENCH_selftune.json"
 
 
@@ -927,6 +1095,17 @@ if __name__ == "__main__":
                    "violated and none when met, and the exporter's "
                    "Prometheus/JSONL output validates; writes "
                    "results/BENCH_slo.json + slo_timeseries.jsonl")
+    p.add_argument("--tenants", type=int, default=None, metavar="N",
+                   help="run the multi-tenant A/B gate instead of the "
+                   "figure (DESIGN.md §15): one N-tenant shared fleet "
+                   "(merged extraction plan, one fused multi-model launch) "
+                   "vs N independent 1-shard fleets at equal total shards, "
+                   "zero-loss bisection each arm plus a per-tenant "
+                   "bit-parity leg; writes results/BENCH_multitenant.json")
+    p.add_argument("--min-tenant-speedup", type=float, default=0.0,
+                   metavar="R", help="fail the --tenants gate if the shared "
+                   "fleet's zero-loss pps is below R x the independent "
+                   "fleets' rate (0 measures without gating)")
     p.add_argument("--selftune", action="store_true",
                    help="run the self-optimizing-fleet gate instead of the "
                    "figure (DESIGN.md §13): drift-scenario controlled replay "
@@ -945,6 +1124,11 @@ if __name__ == "__main__":
         raise SystemExit(0)
     if args.selftune:
         run_selftune_gate(smoke=args.smoke, out_path=args.out)
+        raise SystemExit(0)
+    if args.tenants is not None:
+        run_multitenant_gate(min_tenant_speedup=args.min_tenant_speedup,
+                             smoke=args.smoke, tenants=args.tenants,
+                             out_path=args.out)
         raise SystemExit(0)
     if args.min_reuse_speedup is not None:
         run_reuse_gate(min_reuse_speedup=args.min_reuse_speedup,

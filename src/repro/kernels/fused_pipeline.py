@@ -41,7 +41,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_agg_infer", "fused_forest_infer", "fused_pipeline_call"]
+__all__ = ["fused_agg_infer", "fused_forest_infer", "fused_pipeline_call",
+           "fused_multi_forest_infer", "fused_multi_forest_call",
+           "stack_multi_forests"]
 
 
 def _traverse(x, feat, thr, leaf, *, forest_depth: int, n_trees: int,
@@ -230,6 +232,175 @@ def fused_forest_infer(
         flags.astype(jnp.float32), meta, feature, threshold, leaf,
         plan=plan, depth=depth, forest_depth=forest_depth,
         block_n=block_n, block_t=block_t, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant fused kernel (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+# One Pallas launch serves every tenant of a fleet: the merged plan's
+# feature columns are computed once over the in-VMEM packet tile, then each
+# tenant's forest — stacked along the tree axis with a static offset, its
+# node feature ids pre-remapped into merged-column space — traverses the
+# same feature tile via the exact solo `_traverse`, emitting its own
+# prediction lanes into a per-tenant slice of the output. Bit-parity with N
+# solo launches holds tenant by tenant: the merged emitter slices the
+# window to each tenant's depth before reducing, the remapped gather reads
+# the same feature values, and the per-tenant block order / vote
+# normalization / rescale are the solo recipe verbatim.
+
+
+def stack_multi_forests(forests, tenant_cols, *, block_t: int = 8):
+    """Stack N tenants' forests into tenant-stacked node arrays.
+
+    Each forest is padded with pass-through trees to its own solo block
+    multiple (`pad_forest_blocks` — same recipe, same rescale, so the
+    per-tenant accumulation order matches a solo launch bit for bit),
+    its node feature ids are remapped through `tenant_cols[t]` into
+    merged-column space, and node/leaf/class axes are zero-padded to the
+    fleet maxima (statically sliced off inside the kernel). Returns
+    ``(feature, threshold, leaf, tenants)`` where ``tenants`` is the
+    static per-tenant spec tuple
+    ``(offset, n_padded, forest_depth, block_t, n_internal, n_leaf,
+    n_out, rescale)`` that the kernel specializes on.
+    """
+    from .tree_infer import pad_forest_blocks
+
+    ni_max = max(int(f.feature.shape[1]) for f in forests)
+    nl_max = max(int(f.leaf.shape[1]) for f in forests)
+    k_max = max(int(f.leaf.shape[2]) for f in forests)
+    feats, thrs, leafs, tenants = [], [], [], []
+    off = 0
+    for f, cols in zip(forests, tenant_cols):
+        T, ni = f.feature.shape
+        nl, k = f.leaf.shape[1], f.leaf.shape[2]
+        bt = min(block_t, int(T))
+        remap = jnp.asarray(cols, jnp.int32)[jnp.asarray(f.feature, jnp.int32)]
+        feat, thr, leaf, rem_t = pad_forest_blocks(
+            remap, jnp.asarray(f.threshold), jnp.asarray(f.leaf), bt)
+        tp = int(T) + rem_t
+        feats.append(jnp.pad(feat, ((0, 0), (0, ni_max - ni))))
+        thrs.append(jnp.pad(thr, ((0, 0), (0, ni_max - ni))))
+        leafs.append(jnp.pad(
+            leaf, ((0, 0), (0, nl_max - nl), (0, k_max - k))))
+        tenants.append((off, tp, int(f.depth), bt, int(ni), int(nl), int(k),
+                        (tp / T) if rem_t else 1.0))
+        off += tp
+    return (jnp.concatenate(feats, axis=0), jnp.concatenate(thrs, axis=0),
+            jnp.concatenate(leafs, axis=0), tuple(tenants))
+
+
+def _multi_kernel(
+    ts_ref, size_ref, dir_ref, ttl_ref, win_ref, flags_ref, meta_ref,
+    f_ref, t_ref, l_ref, o_ref,
+    *, merged, tenants,
+):
+    from repro.traffic.extraction import emit_merged_columns
+
+    ts = ts_ref[...]            # (bn, P) float32
+    meta = meta_ref[...]        # (bn, 4) float32: flow_len, proto, s/d_port
+    cols = emit_merged_columns(
+        merged,
+        ts=ts, size=size_ref[...], direction=dir_ref[...], ttl=ttl_ref[...],
+        winsize=win_ref[...], flags=flags_ref[...], flow_len=meta[:, 0],
+        proto=meta[:, 1], s_port=meta[:, 2], d_port=meta[:, 3],
+    )
+    x = jnp.stack(cols, axis=1)                 # (bn, F_union) — VMEM only
+    k0 = 0
+    for off, tp, fd, bt, ni, nl, k, rescale in tenants:
+        o_ref[:, k0:k0 + k] = _traverse(
+            x, f_ref[off:off + tp, :ni], t_ref[off:off + tp, :ni],
+            l_ref[off:off + tp, :nl, :k],
+            forest_depth=fd, n_trees=tp, block_t=bt, rescale=rescale,
+        )
+        k0 += k
+
+
+def fused_multi_forest_call(
+    ts, size, direction, ttl, winsize, flags, meta,
+    feature, threshold, leaf,
+    *, merged, tenants,
+    block_n: int = 256, interpret: bool = False,
+):
+    """Raw pallas_call: one launch, N tenants' prediction lanes.
+
+    `feature`/`threshold`/`leaf` are the tenant-stacked arrays from
+    `stack_multi_forests` (already tree-padded and remapped — no further
+    padding here); the output is ``(N, sum of per-tenant n_out)`` with
+    tenant t's probabilities in its contiguous lane slice. Flow-axis
+    padding matches `fused_pipeline_call` (zero rows: every mask empty).
+    """
+    N, P = ts.shape
+    TP, NI = feature.shape
+    NL, K = leaf.shape[1], leaf.shape[2]
+    k_sum = sum(t[6] for t in tenants)
+    bn = min(block_n, N)
+
+    rem_n = (-N) % bn
+    if rem_n:
+        def pad2(a):
+            return jnp.pad(a, ((0, rem_n), (0, 0)))
+
+        ts, size, direction, ttl, winsize, meta = map(
+            pad2, (ts, size, direction, ttl, winsize, meta))
+        flags = jnp.pad(flags, ((0, rem_n), (0, 0), (0, 0)))
+
+    kern = functools.partial(_multi_kernel, merged=merged, tenants=tenants)
+
+    def tile(i):
+        return (i, 0)
+
+    def whole(i):
+        return (0, 0)
+
+    out = pl.pallas_call(
+        kern,
+        grid=((N + rem_n) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, P), tile),            # ts
+            pl.BlockSpec((bn, P), tile),            # size
+            pl.BlockSpec((bn, P), tile),            # direction
+            pl.BlockSpec((bn, P), tile),            # ttl
+            pl.BlockSpec((bn, P), tile),            # winsize
+            pl.BlockSpec((bn, P, 8), lambda i: (i, 0, 0)),  # flags
+            pl.BlockSpec((bn, 4), tile),            # meta
+            pl.BlockSpec((TP, NI), whole),          # stacked forest: resident
+            pl.BlockSpec((TP, NI), whole),
+            pl.BlockSpec((TP, NL, K), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k_sum), tile),
+        out_shape=jax.ShapeDtypeStruct((N + rem_n, k_sum), jnp.float32),
+        interpret=interpret,
+    )(ts, size, direction, ttl, winsize, flags, meta, feature, threshold, leaf)
+    return out[:N]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("merged", "tenants", "block_n", "interpret"),
+    donate_argnums=(0, 1, 2, 3, 4, 5),
+)
+def fused_multi_forest_infer(
+    ts, size, direction, ttl, winsize, flags,
+    flow_len, proto, s_port, d_port,
+    feature, threshold, leaf,
+    *, merged, tenants,
+    block_n: int = 256, interpret: bool | None = None,
+):
+    """Jit'd multi-tenant fused entry: packets -> stacked per-tenant
+    probability lanes, one launch. Donation and dtype conventions match
+    `fused_forest_infer`; the jit cache keys on the static
+    ``(merged, tenants, batch shape)`` tuple, so a multi-tenant bundle
+    hot-swap coexists with whatever it replaces (DESIGN.md §9.3)."""
+    if interpret is None:
+        from .ops import default_interpret
+        interpret = default_interpret()
+    meta = jnp.stack(
+        [flow_len.astype(jnp.float32), proto, s_port, d_port], axis=1)
+    return fused_multi_forest_call(
+        ts, size, direction.astype(jnp.float32), ttl, winsize,
+        flags.astype(jnp.float32), meta, feature, threshold, leaf,
+        merged=merged, tenants=tenants, block_n=block_n, interpret=interpret,
     )
 
 

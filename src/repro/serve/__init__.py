@@ -40,6 +40,7 @@ _RUNTIME_EXPORTS = (
     "FlowTable",
     "LatencyHistogram",
     "MicroBatchDispatcher",
+    "MultiTenantPipeline",
     "PacketStream",
     "ReplayStats",
     "ReuseConfig",
@@ -47,6 +48,7 @@ _RUNTIME_EXPORTS = (
     "ServiceModel",
     "ShardedRuntime",
     "StreamingRuntime",
+    "build_multi_tenant_pipeline",
     "find_zero_loss_rate",
     "replay",
     "tuple_hash64",
@@ -69,8 +71,10 @@ _CONTROL_EXPORTS = (
 # warmed pipelines -> serializable ParetoBundle -> live hot-swap
 _DEPLOY_EXPORTS = (
     "BundlePoint",
+    "MultiTenantBundlePoint",
     "ParetoBundle",
     "compile_front",
+    "compile_multi_tenant",
     "deploy",
     "make_swap",
     "warm_buckets_for",
@@ -99,9 +103,9 @@ _OBS_EXPORTS = (
     "render_prometheus",
 )
 
-__all__ = ["make_serve_step", "make_prefill", *_SESSION_EXPORTS,
-           *_RUNTIME_EXPORTS, *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS,
-           *_OBS_EXPORTS]
+__all__ = sorted(["make_serve_step", "make_prefill", *_SESSION_EXPORTS,
+                  *_RUNTIME_EXPORTS, *_CONTROL_EXPORTS, *_DEPLOY_EXPORTS,
+                  *_OBS_EXPORTS])
 
 
 _EXPORT_HOMES = {
@@ -124,6 +128,10 @@ def __getattr__(name):
     import importlib
 
     return getattr(importlib.import_module(f"{__name__}.{home}"), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
 
 
 # The ``deploy`` *function* shares its submodule's name. Whenever any

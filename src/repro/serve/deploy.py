@@ -41,8 +41,9 @@ from repro.core.optimizer import CatoResult, Observation
 from repro.core.pareto import knee_index
 from repro.core.search_space import FeatureRep
 
-__all__ = ["BundlePoint", "ParetoBundle", "compile_front", "deploy",
-           "make_swap", "warm_buckets_for"]
+__all__ = ["BundlePoint", "MultiTenantBundlePoint", "ParetoBundle",
+           "compile_front", "compile_multi_tenant", "deploy", "make_swap",
+           "warm_buckets_for"]
 
 
 def warm_buckets_for(runtime=None, lo: int = 8, hi: int = 256) -> list[int]:
@@ -140,6 +141,114 @@ class BundlePoint:
             compile_meta=dict(d["compile_meta"]),
             forest_doc=d["forest"],
         )
+
+
+@dataclasses.dataclass
+class MultiTenantBundlePoint(BundlePoint):
+    """N tenants' compiled points fused into one deployable unit
+    (DESIGN.md §15).
+
+    `rep` is the *union* FeatureRep (what the shared `FlowTable` is sized
+    by), `cost` the sum of the per-tenant measured costs (the independent
+    upper bound — the shared fleet's discount is what deployment buys),
+    `perf` the mean per-tenant perf. `build()` compiles the shared
+    `MultiTenantPipeline`, so `make_swap`/`deploy` hot-swap it into a
+    live fleet through the same §9.3 quiescence path as a solo point."""
+
+    # per-tenant {features, depth, forest} docs, deploy order == lane order
+    tenant_docs: list = dataclasses.field(default_factory=list)
+
+    @property
+    def tenant_reps(self) -> tuple:
+        return tuple(FeatureRep(tuple(d["features"]), int(d["depth"]))
+                     for d in self.tenant_docs)
+
+    def tenant_forests(self) -> tuple:
+        return tuple(_forest_from_doc(d["forest"]) for d in self.tenant_docs)
+
+    def build(self, *, runtime=None, warm: bool = True):
+        from repro.traffic.multi_tenant import build_multi_tenant_pipeline
+
+        pipe = build_multi_tenant_pipeline(
+            self.tenant_reps, self.tenant_forests(),
+            fused=bool(self.compile_meta.get("fused", True)),
+            use_kernel=bool(self.compile_meta.get("use_kernel", False)),
+        )
+        if warm:
+            pipe.warm(warm_buckets_for(runtime))
+        self.pipeline = pipe
+        return pipe
+
+    def to_doc(self) -> dict:
+        d = super().to_doc()
+        d["kind"] = "cato_multi_tenant_point"
+        d["tenants"] = self.tenant_docs
+        return d
+
+    @classmethod
+    def from_doc(cls, d: dict) -> "MultiTenantBundlePoint":
+        return cls(
+            rep=FeatureRep(tuple(d["features"]), int(d["depth"])),
+            cost=float(d["cost"]),
+            perf=float(d["perf"]),
+            fidelity=d["fidelity"],
+            aux=dict(d["aux"]),
+            compile_meta=dict(d["compile_meta"]),
+            forest_doc=d["forest"],
+            tenant_docs=list(d["tenants"]),
+        )
+
+
+def compile_multi_tenant(
+    points,
+    *,
+    runtime=None,
+    fused: bool = True,
+    use_kernel: bool = False,
+    warm: bool = True,
+    meta: Optional[dict] = None,
+) -> MultiTenantBundlePoint:
+    """Fuse per-tenant bundle points (each tenant front's chosen operating
+    point — e.g. its `knee()`) into one multi-tenant deployable.
+
+    The per-tenant points carry the exact measured forests, so the fused
+    pipeline's lanes are bit-identical to each tenant's solo deployment;
+    the union plan and the stacked-forest kernel are what change the
+    cost. `deploy`/`make_swap` accept the result like any bundle point."""
+    points = list(points)
+    if not points:
+        raise ValueError("need >= 1 tenant bundle point")
+    from repro.traffic.multi_tenant import union_rep
+
+    reps = tuple(p.rep for p in points)
+    fids = {p.fidelity for p in points}
+    mt = MultiTenantBundlePoint(
+        rep=union_rep(reps),
+        cost=float(sum(p.cost for p in points)),
+        perf=float(np.mean([p.perf for p in points])),
+        fidelity=fids.pop() if len(fids) == 1 else "mixed",
+        aux={
+            "tenant_costs": [float(p.cost) for p in points],
+            "tenant_perfs": [float(p.perf) for p in points],
+        },
+        compile_meta={"fused": fused, "use_kernel": use_kernel,
+                      "n_tenants": len(points)},
+        forest_doc=points[0].forest_doc,
+        tenant_docs=[{
+            "features": list(p.rep.features),
+            "depth": int(p.rep.depth),
+            "forest": p.forest_doc,
+        } for p in points],
+    )
+    t0 = time.perf_counter()
+    mt.build(runtime=runtime, warm=warm)
+    mt.compile_meta.update({
+        "buckets": list(warm_buckets_for(runtime)) if warm else [],
+        "compile_s": round(time.perf_counter() - t0, 4),
+    })
+    if meta:
+        mt.aux.update(meta)
+    return mt
 
 
 @dataclasses.dataclass
@@ -310,7 +419,12 @@ def make_swap(
     pipe = point.pipeline or point.build(runtime=runtime, warm=False)
     pipe.warm(warm_buckets_for(runtime))
     if service is None:
-        service = ServiceModel.modeled(point.rep, point.forest())
+        t_reps = getattr(point, "tenant_reps", None)
+        if t_reps:
+            service = ServiceModel.modeled_multi_tenant(
+                t_reps, point.tenant_forests())
+        else:
+            service = ServiceModel.modeled(point.rep, point.forest())
     if audit is not None:
         audit.record(
             "swap_scheduled", now_pkts,

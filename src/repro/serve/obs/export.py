@@ -31,7 +31,13 @@ import re
 __all__ = ["MetricsExporter", "check_prometheus", "render_prometheus"]
 
 _QUANTILES = (50.0, 90.0, 99.0)
-_SHARD_RE = re.compile(r"^shard(\d+)\.(.+)$")
+# scope prefixes rendered as labels, outermost first: a fleet registry can
+# carry `shard3.tenant1.dispatch.flows_predicted` (multi-tenant pipeline on
+# shard 3) and both prefixes must land as labels of ONE base family
+_LABEL_RES = (
+    ("shard", re.compile(r"^shard(\d+)\.(.+)$")),
+    ("tenant", re.compile(r"^tenant(\d+)\.(.+)$")),
+)
 _NAME_OK = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 # value: int/float/scientific/±Inf/NaN
 _SAMPLE_RE = re.compile(
@@ -52,12 +58,25 @@ def _sanitize(name: str) -> str:
     return out
 
 
-def _split_shard(name: str) -> tuple[str, str]:
-    """('shard3.ingest.drops', …) -> ('ingest.drops', '{shard="3"}')."""
-    m = _SHARD_RE.match(name)
-    if m:
-        return m.group(2), '{shard="%s"}' % m.group(1)
-    return name, ""
+def _split_labels(name: str) -> tuple[str, str]:
+    """Strip leading scope prefixes into Prometheus labels:
+    ``shard3.ingest.drops`` -> ``('ingest.drops', '{shard="3"}')``,
+    ``shard3.tenant1.x`` -> ``('x', '{shard="3",tenant="1"}')``.
+    Each label key is consumed at most once, so a metric that legitimately
+    *names* a tenant deeper in its path is left alone."""
+    labels: list[tuple[str, str]] = []
+    changed = True
+    while changed:
+        changed = False
+        for key, rx in _LABEL_RES:
+            m = rx.match(name)
+            if m and all(k != key for k, _ in labels):
+                labels.append((key, m.group(1)))
+                name = m.group(2)
+                changed = True
+    if not labels:
+        return name, ""
+    return name, "{" + ",".join('%s="%s"' % kv for kv in labels) + "}"
 
 
 def _fmt(v: float) -> str:
@@ -77,11 +96,11 @@ def render_prometheus(reg, *, namespace: str = "cato") -> str:
 
     def add(raw: str, kind: str, value, help_suffix: str = "",
             suffix: str = ""):
-        base, shard = _split_shard(raw)
+        base, labels = _split_labels(raw)
         fam = f"{namespace}_{_sanitize(base)}{suffix}"
         if fam not in fams:
             fams[fam] = (kind, f"registry {kind} {base}{help_suffix}", [])
-        fams[fam][2].append((shard, _fmt(value)))
+        fams[fam][2].append((labels, _fmt(value)))
 
     for k, v in reg._counters.items():
         add(k, "counter", v)
@@ -89,7 +108,7 @@ def render_prometheus(reg, *, namespace: str = "cato") -> str:
         add(k, "gauge", v, help_suffix=f" (merge: {r})")
     for dists, sum_attr in ((reg._hists, "_sum"), (reg._sketches, None)):
         for k, h in dists.items():
-            base, shard = _split_shard(k)
+            base, shard = _split_labels(k)
             fam = f"{namespace}_{_sanitize(base)}"
             if fam not in fams:
                 fams[fam] = ("summary", f"registry summary {base}", [])
@@ -127,7 +146,9 @@ def render_prometheus(reg, *, namespace: str = "cato") -> str:
 def check_prometheus(text: str) -> list[str]:
     """Validate text-exposition output; returns a list of problems
     (empty == valid). Checks: every line parses, HELP/TYPE appear at
-    most once per family and never after that family's samples."""
+    most once per family and never after that family's samples, and no
+    sample repeats a label name (a ``shard``/``tenant`` prefix folded
+    twice would silently shadow one of the two in Prometheus)."""
     problems: list[str] = []
     helped: set[str] = set()
     typed: dict[str, str] = {}
@@ -159,6 +180,12 @@ def check_prometheus(text: str) -> list[str]:
             problems.append(f"line {i}: unparseable sample: {line!r}")
             continue
         name = m.group(1)
+        labels = m.group(2)
+        if labels:
+            keys = re.findall(r'([a-zA-Z_][a-zA-Z0-9_]*)="', labels)
+            if len(keys) != len(set(keys)):
+                problems.append(
+                    f"line {i}: duplicate label name on {name}: {labels}")
         # summary sub-series attach to their base family
         base = name
         for suffix in ("_sum", "_count"):

@@ -36,11 +36,14 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["Tracer", "TID_INGEST", "TID_INFER", "TID_CONTROL"]
+__all__ = ["Tracer", "TID_INGEST", "TID_INFER", "TID_CONTROL", "TID_TENANT0"]
 
 TID_INGEST = 0
 TID_INFER = 1
 TID_CONTROL = 2
+# multi-tenant serving (DESIGN.md §15): per-tenant infer sub-lanes start
+# here — tenant t's share of each fused batch lands on tid TID_TENANT0 + t
+TID_TENANT0 = 3
 
 _TID_NAMES = {TID_INGEST: "ingest lane", TID_INFER: "inference lane",
               TID_CONTROL: "control plane"}
@@ -227,12 +230,21 @@ class Tracer:
         meta = []
         pids = sorted({int(p) for p in
                        self._pid[: len(self)].tolist()}) if len(self) else []
+        tids = sorted({int(t) for t in self._tid[: len(self)].tolist()}) \
+            if len(self) else []
         for pid in pids:
             meta.append({"ph": "M", "name": "process_name", "pid": pid,
                          "args": {"name": f"shard {pid}"}})
             for tid, label in _TID_NAMES.items():
                 meta.append({"ph": "M", "name": "thread_name", "pid": pid,
                              "tid": tid, "args": {"name": label}})
+            for tid in tids:
+                if tid >= TID_TENANT0:
+                    meta.append({
+                        "ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tid,
+                        "args": {"name": f"tenant {tid - TID_TENANT0} infer"},
+                    })
         return {
             "traceEvents": meta + self.events(),
             "displayTimeUnit": "ms",

@@ -42,6 +42,13 @@ from .replay import (
     find_zero_loss_rate,
     replay,
 )
+# multi-tenant white-box serving (DESIGN.md §15): the shared pipeline is
+# built by the traffic layer but served by this runtime, so the runtime
+# namespace re-exports it alongside the single-tenant machinery
+from repro.traffic.multi_tenant import (
+    MultiTenantPipeline,
+    build_multi_tenant_pipeline,
+)
 
 __all__ = [
     "AggregateMetrics",
@@ -50,6 +57,7 @@ __all__ = [
     "FlowTable",
     "LatencyHistogram",
     "MicroBatchDispatcher",
+    "MultiTenantPipeline",
     "PacketStream",
     "ReplayStats",
     "ReuseConfig",
@@ -57,6 +65,7 @@ __all__ = [
     "ServiceModel",
     "ShardedRuntime",
     "StreamingRuntime",
+    "build_multi_tenant_pipeline",
     "find_zero_loss_rate",
     "move_slot",
     "next_bucket",

@@ -338,6 +338,13 @@ class MicroBatchDispatcher:
         m.batch_occupancy.append(n / bucket)
         m.shapes_seen.add((bucket, self.table.pkt_depth))
         m.flows_predicted += n
+        tn = getattr(self.pipeline, "n_tenants", 0)
+        if tn:
+            # one fused batch answers every tenant: each tenant's series
+            # advances by the full batch (per-model attribution, §15.4)
+            for t_i in range(tn):
+                m.tenant_predictions[t_i] = (
+                    m.tenant_predictions.get(t_i, 0) + n)
         if reason == "full":
             m.flushes_full += 1
         elif reason == "timeout":
@@ -603,13 +610,20 @@ class MicroBatchDispatcher:
             # top-class vote share = prediction confidence; materialized
             # here (one host copy per batch) only when drift is attached
             pnp = np.asarray(rec.probs)[: rec.n_real]
+            sl = getattr(self.pipeline, "drift_prob_slice", None)
+            if sl is not None:
+                # multi-tenant lanes: confidence over tenant 0's lane only
+                # — mixing per-tenant class spaces in one histogram would
+                # make the drift signal meaningless (DESIGN.md §15.4)
+                pnp = pnp[:, sl]
             conf = pnp.max(axis=1) / np.maximum(
                 pnp.sum(axis=1), 1e-12)
         preds = self.pipeline.finalize(rec.probs)[: rec.n_real]
         rec.preds = preds
         rec.probs = None
         if dm is not None:
-            dm.note_predictions(preds, conf)
+            dm.note_predictions(
+                preds[:, 0] if preds.ndim == 2 else preds, conf)
         for fid, p in zip(rec.flow_ids, preds):
             # first prediction wins: a re-tenancy of the same 5-tuple (e.g.
             # a stray final ACK after close) must not overwrite the real

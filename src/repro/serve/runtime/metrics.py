@@ -17,10 +17,16 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 
 import numpy as np
 
 __all__ = ["LatencyHistogram", "RuntimeMetrics", "METRIC_NAMESPACE"]
+
+# un-shard-prefixed tenant-scoped counter names ("tenant2.dispatch....");
+# anchored so the fleet aggregate never double-counts the `shardN.tenantM.`
+# per-shard copies the prefixed merge also carries
+_TENANT_RE = re.compile(r"^tenant(\d+)\.(.+)$")
 
 
 class LatencyHistogram:
@@ -302,6 +308,9 @@ class RuntimeMetrics:
     reuse_hits: int = 0            # refresh checks that kept the cached pred
     refreshes: int = 0             # drift-triggered re-inferences
     forced_reinfer: int = 0        # threshold-0 re-inferences (parity mode)
+    # multi-tenant serving (DESIGN.md §15): per-tenant prediction counts,
+    # keyed by tenant index — empty for single-tenant pipelines
+    tenant_predictions: dict = dataclasses.field(default_factory=dict)
     batch_occupancy: list = dataclasses.field(default_factory=list)
     shapes_seen: set = dataclasses.field(default_factory=set)
     latency: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
@@ -342,6 +351,11 @@ class RuntimeMetrics:
         for name in self.counter_fields():
             canon = METRIC_NAMESPACE.get(name, f"runtime.{name}")
             reg.set_counter(prefix + canon, getattr(self, name))
+        for t_i, v in self.tenant_predictions.items():
+            # tenant-prefixed like the shard prefix: the exporter renders
+            # both as labels, so per-model series never collide (§15.4)
+            reg.set_counter(
+                f"{prefix}tenant{int(t_i)}.dispatch.flows_predicted", v)
         reg.extend_samples(prefix + "dispatch.batch_occupancy",
                            self.batch_occupancy)
         reg.union(prefix + "dispatch.shapes_seen", self.shapes_seen)
@@ -361,6 +375,12 @@ class RuntimeMetrics:
         for name in cls.counter_fields():
             canon = METRIC_NAMESPACE.get(name, f"runtime.{name}")
             setattr(m, name, reg.counter(canon))
+        for k, v in reg._counters.items():
+            t = _TENANT_RE.match(k)
+            if t and t.group(2) == "dispatch.flows_predicted":
+                idx = int(t.group(1))
+                m.tenant_predictions[idx] = (
+                    m.tenant_predictions.get(idx, 0) + v)
         m.batch_occupancy = list(
             reg._samples.get("dispatch.batch_occupancy", []))
         m.shapes_seen = set(reg._sets.get("dispatch.shapes_seen", set()))
@@ -410,6 +430,8 @@ class RuntimeMetrics:
             "reuse_hits": self.reuse_hits,
             "refreshes": self.refreshes,
             "forced_reinfer": self.forced_reinfer,
+            **({"tenant_predictions": dict(self.tenant_predictions)}
+               if self.tenant_predictions else {}),
             "compile_count": self.compile_count(),
             "batch_occupancy": self.occupancy_stats(),
             "latency": self.latency.summary(),

@@ -51,7 +51,7 @@ import numpy as np
 from repro.traffic.features import per_flow_ops_ns, per_packet_ops, FEATURES
 from repro.traffic.synth import FLAG_NAMES, TrafficDataset, scenario_flow_starts
 
-from repro.serve.obs.trace import TID_INFER, TID_INGEST
+from repro.serve.obs.trace import TID_INFER, TID_INGEST, TID_TENANT0
 
 from .dispatch import BatchRecord, StreamingRuntime
 from .flow_table import FlowTable, tuple_hash64
@@ -206,6 +206,10 @@ class ServiceModel:
     pkt_frozen_ns: Optional[float] = None
     reuse_check_ns: float = 0.0
     anchor_ns_per_flow: float = 0.0
+    # multi-tenant serving (DESIGN.md §15): tenant t's fraction of each
+    # inference-lane span — attribution only, the clock charges the fused
+    # batch once; None for single-tenant models
+    tenant_fracs: Optional[tuple] = None
     source: str = "modeled"
 
     def packet_ns(self, accumulated: bool, frozen: bool = False) -> float:
@@ -260,6 +264,37 @@ class ServiceModel:
             pkt_frozen_ns=frozen_ns,
             reuse_check_ns=check_ns,
             anchor_ns_per_flow=check_ns,
+            source="modeled",
+        )
+
+    @classmethod
+    def modeled_multi_tenant(
+        cls, reps, forests, *, overhead_ns: float = 500.0
+    ) -> "ServiceModel":
+        """Constants for a shared multi-tenant fleet (DESIGN.md §15).
+
+        The white-box sharing shows up as the cost asymmetry: ingest and
+        extraction are charged ONCE over the *union* feature plan (shared
+        ops deduped across tenants), while inference sums every tenant's
+        forest — exactly what the merged `FlowTable` + fused multi-forest
+        kernel execute. `tenant_fracs` carries each tenant's share of the
+        inference term so the tracer can attribute the fused span."""
+        feats = sorted({f for r in reps for f in r.features})
+        depth = max(int(r.depth) for r in reps)
+        per_pkt = per_packet_ops(feats)
+        per_flow = per_flow_ops_ns(feats)
+        n_sort = sum(1 for f in feats if FEATURES[f].sorting)
+        sort_ns = n_sort * 0.8 * depth * np.log2(max(depth, 2.0))
+        infer = [f.n_trees * f.depth * 1.2 + 2.0 * f.n_out for f in forests]
+        flow_ns = per_flow + sort_ns + sum(infer)
+        buckets = {b: overhead_ns + flow_ns * b
+                   for b in (8, 16, 32, 64, 128, 256, 512)}
+        total_inf = max(sum(infer), 1e-9)
+        return cls(
+            pkt_accum_ns=per_pkt,
+            pkt_track_ns=2.0,
+            bucket_ns=buckets,
+            tenant_fracs=tuple(v / total_inf for v in infer),
             source="modeled",
         )
 
@@ -641,6 +676,17 @@ class _WorkerClock:
                 # lifecycles close at the same service-completion edge
                 tr.span(f"infer.{rec.reason}", start, svc,
                         pid=self.pid, tid=TID_INFER)
+                if service.tenant_fracs:
+                    # multi-tenant attribution (DESIGN.md §15): partition
+                    # the fused span across per-tenant sub-lanes so one
+                    # traced replay shows which tenant dominates the
+                    # kernel budget; the clock still charges it once
+                    t0 = start
+                    for t_i, frac in enumerate(service.tenant_fracs):
+                        d = svc * frac
+                        tr.span(f"infer.tenant{t_i}", t0, d,
+                                pid=self.pid, tid=TID_TENANT0 + t_i)
+                        t0 += d
                 if rec.trace_ids is not None:
                     tr.flow_end(rec.trace_ids,
                                 np.full(len(rec.trace_ids), done),

@@ -38,7 +38,11 @@ __all__ = [
     "stats_plan",
     "emit_feature_columns",
     "emit_agg_features",
+    "merge_stats_plans",
+    "emit_merged_columns",
+    "emit_merged_agg_features",
     "plan_is_incremental",
+    "merged_plan_is_incremental",
     "agg_init",
     "AGG_WIDTH",
 ]
@@ -218,6 +222,100 @@ def emit_feature_columns(
             c = _STATS[stat](v, m)
         cols.append(c.astype(jnp.float32))
     return cols
+
+
+# ---------------------------------------------------------------------------
+# merged multi-tenant plans (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+# PRETZEL-style white-box sharing: N tenants' stats plans union into ONE
+# merged plan, extracted once per flow; each tenant reads its column subset
+# through a static index map. A merged column is identified by the
+# (op descriptor, connection depth) pair — two tenants at the same depth
+# share every common op, while meta columns (proto/ports), which no window
+# mask touches, share across all depths (stored with depth 0).
+
+
+def merge_stats_plans(
+    plans: Sequence[tuple[tuple, ...]], depths: Sequence[int]
+) -> tuple[tuple[tuple, ...], tuple[tuple[int, ...], ...]]:
+    """Union-dedup N tenants' static plans into one merged plan.
+
+    Returns ``(merged, tenant_cols)``: ``merged`` is a hashable tuple of
+    ``(entry, depth)`` pairs in first-seen order — the unit of
+    specialization for the merged extraction executables, exactly like a
+    solo plan — and ``tenant_cols[t][i]`` is the merged column that holds
+    position ``i`` of tenant t's own plan. Both are static, so the per-
+    tenant gather is a compile-time index map, not a runtime lookup.
+    """
+    if len(plans) != len(depths):
+        raise ValueError("plans and depths must align")
+    merged: list[tuple[tuple, int]] = []
+    where: dict[tuple[tuple, int], int] = {}
+    tenant_cols: list[tuple[int, ...]] = []
+    for plan, depth in zip(plans, depths):
+        cols = []
+        for entry in plan:
+            key = (entry, 0 if entry[0] == "meta" else int(depth))
+            if key not in where:
+                where[key] = len(merged)
+                merged.append(key)
+            cols.append(where[key])
+        tenant_cols.append(tuple(cols))
+    return tuple(merged), tuple(tenant_cols)
+
+
+def emit_merged_columns(
+    merged: tuple[tuple, ...],
+    *,
+    ts, size, direction, ttl, winsize, flags, flow_len, proto, s_port, d_port,
+):
+    """Trace a merged plan's columns over (rows, P) packet tensors.
+
+    One `emit_feature_columns` call per distinct connection depth, with
+    the packet window statically sliced to that depth first: a depth-n
+    group then reduces over exactly the (rows, n) tensors a solo tenant's
+    table would hold, so every merged column is bit-identical to its solo
+    twin even when the shared table is wider (union depth). Returns
+    float32 (rows,) columns in merged-plan order.
+    """
+    groups: dict[int, list[int]] = {}
+    for i, (_, d) in enumerate(merged):
+        groups.setdefault(int(d), []).append(i)
+    out: list = [None] * len(merged)
+    for d in sorted(groups):
+        idxs = groups[d]
+        plan = tuple(merged[i][0] for i in idxs)
+        # depth-0 groups hold only meta columns; the window never matters
+        dd = min(d, ts.shape[1]) if d else 1
+        cols = emit_feature_columns(
+            plan,
+            ts=ts[:, :dd], size=size[:, :dd], direction=direction[:, :dd],
+            ttl=ttl[:, :dd], winsize=winsize[:, :dd],
+            flags=flags[:, :dd, :], flow_len=flow_len,
+            proto=proto, s_port=s_port, d_port=d_port, depth=dd,
+        )
+        for i, c in zip(idxs, cols):
+            out[i] = c
+    return out
+
+
+def emit_merged_agg_features(merged: tuple[tuple, ...], agg, *,
+                             proto, s_port, d_port):
+    """Aggregate twin of `emit_merged_columns` (DESIGN.md §12 + §15).
+
+    Running statistics cover the flow's whole lifetime — connection depth
+    never clips them — so a merged column's aggregate form is exactly its
+    solo `emit_agg_features` column; one emitter call over the deduped
+    entry tuple suffices. Returns columns in merged-plan order.
+    """
+    return emit_agg_features(
+        tuple(e for e, _ in merged), agg,
+        proto=proto, s_port=s_port, d_port=d_port)
+
+
+def merged_plan_is_incremental(merged: tuple[tuple, ...]) -> bool:
+    """True iff every merged column has an incremental (aggregate) form."""
+    return plan_is_incremental(tuple(e for e, _ in merged))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""Every public name in `repro.serve` must actually resolve.
+
+`repro.serve` lazy-loads its exports through PEP 562 `__getattr__`
+routed by an `_EXPORT_HOMES` table — a name added to `__all__` without
+a matching home entry (or pointing at a symbol its home module no
+longer defines) imports fine and then explodes at first use. This
+regression walks the full surface so the break is caught here instead.
+"""
+import importlib
+
+
+def test_every_serve_export_resolves():
+    serve = importlib.import_module("repro.serve")
+    assert serve.__all__ == sorted(set(serve.__all__))
+    for name in serve.__all__:
+        obj = getattr(serve, name)
+        assert obj is not None, name
+
+
+def test_dir_covers_all():
+    serve = importlib.import_module("repro.serve")
+    missing = set(serve.__all__) - set(dir(serve))
+    assert not missing
+
+
+def test_multi_tenant_names_are_exported():
+    serve = importlib.import_module("repro.serve")
+    for name in ("build_multi_tenant_pipeline", "compile_multi_tenant",
+                 "MultiTenantBundlePoint"):
+        assert name in serve.__all__
